@@ -1,0 +1,62 @@
+"""Paper Table 1 analogue: BFS time + honest TEPS across graph families.
+
+Paper protocol: multiple random roots in the largest component, trimmed
+mean.  Graph families mirror Table 1's regimes: Kronecker (GAP_kron),
+uniform random (GAP_urand), 2-D torus and path (Webbase-2001's
+high-diameter, no-parallelism pathology).
+"""
+
+from benchmarks.common import Report, mesh8, timeit
+
+import numpy as np
+
+
+def run(scale: int = 13, roots: int = 4) -> Report:
+    import jax
+
+    from repro.core import bfs
+    from repro.graph import csr, generators, partition
+
+    graphs = {
+        f"kron{scale}_ef8": generators.kronecker(scale, 8, seed=0),
+        f"urand{scale}": generators.uniform_random(
+            1 << scale, (1 << scale) * 8, seed=0
+        ),
+        "torus64": generators.torus_2d(64),
+        "path8k": generators.path_graph(8192),
+    }
+    mesh = mesh8()
+    rep = Report(
+        "bfs_gteps (paper Table 1)",
+        ["graph", "V", "E", "diam(levels)", "TD ms", "TD MTEP/s", "DO ms",
+         "DO MTEP/s", "TD/DO scanned ratio"],
+    )
+    rng = np.random.default_rng(0)
+    for name, g in graphs.items():
+        pg = partition.partition_1d(g, 8)
+        rs = [csr.largest_component_root(g, rng) for _ in range(roots)]
+        row = {}
+        for mode in ("top_down", "direction_optimizing"):
+            cfg = bfs.BFSConfig(axes=("data",), fanout=4, mode=mode)
+            arrays = bfs.place_arrays(pg, mesh, cfg.axes)
+            fn = bfs.build_bfs_fn(pg, mesh, cfg)
+            times, scans, levels = [], [], 0
+            for r in rs:
+                t = timeit(lambda rr=r: fn(arrays, np.int32(rr)), iters=2)
+                d, lv, sc = fn(arrays, np.int32(rs[0]))
+                times.append(t)
+                scans.append(float(sc[0]))
+                levels = max(levels, int(np.max(lv)))
+            row[mode] = (np.mean(times), np.mean(scans), levels)
+        td, do = row["top_down"], row["direction_optimizing"]
+        rep.add(
+            name, g.n_real, g.n_edges, td[2],
+            td[0] * 1e3, td[1] / td[0] / 1e6,
+            do[0] * 1e3, do[1] / do[0] / 1e6,
+            td[1] / max(do[1], 1.0),
+        )
+    return rep
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -1,0 +1,66 @@
+"""Paper §3 communication analysis, verified on compiled HLO.
+
+For each sync pattern: collective-op counts and wire bytes parsed from the
+compiled program (launch.hlo_stats), against the analytic model — the
+paper's message-count table, machine-checked.
+"""
+
+from benchmarks.common import Report, mesh8
+
+import numpy as np
+
+
+def run(n_words: int = 1 << 16) -> Report:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import butterfly, collectives as coll
+    from repro.launch import hlo_stats
+
+    mesh = mesh8()
+    rep = Report(
+        "collective_bytes (paper Sec. 3 analysis vs compiled HLO)",
+        ["pattern", "permutes in HLO", "analytic msgs/node",
+         "HLO wire KiB/node", "analytic KiB/node"],
+    )
+    buf_bytes = n_words * 4
+
+    def lower(fn):
+        sm = jax.shard_map(fn, mesh=mesh, in_specs=P("data"),
+                           out_specs=P("data"), check_vma=False)
+        x = jax.ShapeDtypeStruct((8, n_words), jnp.uint32)
+        return jax.jit(sm).lower(x).compile().as_text()
+
+    cases = [
+        ("butterfly f=1", lambda v: coll.butterfly_or(v, "data", fanout=1),
+         butterfly.messages_per_node(8, 1)),
+        ("butterfly f=4", lambda v: coll.butterfly_or(v, "data", fanout=4),
+         butterfly.messages_per_node(8, 4)),
+        ("butterfly f=8 (==a2a)", lambda v: coll.butterfly_or(v, "data", fanout=8),
+         butterfly.messages_per_node(8, 8)),
+        ("all_to_all ring", lambda v: coll.all_to_all_merge(v, "data", op="or"),
+         7),
+    ]
+    for name, fn, msgs in cases:
+        st = hlo_stats.collective_stats(lower(fn))
+        rep.add(
+            name,
+            st["collective-permute"]["count"],
+            msgs,
+            st["collective-permute"]["wire_bytes"] / 1024,
+            msgs * buf_bytes / 1024,
+        )
+    # rabenseifner rides reduce-scatter-sized chunks (beyond-paper)
+    st = hlo_stats.collective_stats(
+        lower(lambda v: coll.butterfly_allreduce_rabenseifner(
+            v.astype(jnp.float32), "data").astype(jnp.uint32))
+    )
+    rab = butterfly.bytes_per_node_rabenseifner(8, 2, buf_bytes)
+    rep.add("rabenseifner f=2", st["collective-permute"]["count"], "2(P-1)/P",
+            st["collective-permute"]["wire_bytes"] / 1024, rab / 1024)
+    return rep
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -1,0 +1,73 @@
+"""Shared benchmark harness utilities.
+
+All benchmarks run on 8 simulated host devices.  IMPORTANT measurement
+caveat, printed with every result: this container simulates TPU devices on
+ONE CPU core, so wall-clock numbers measure the XLA CPU backend, not TPU
+hardware — they are valid for RELATIVE comparisons (butterfly vs
+all-to-all, fanout 1 vs 4, TD vs DO) and for counting messages/bytes; the
+absolute GTEP/s of the paper's Table 1 lives on the roofline side
+(EXPERIMENTS.md §Roofline).
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import json  # noqa: E402
+import time  # noqa: E402
+from typing import Callable, Dict, List  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+CAVEAT = ("host-simulated devices: wall-times are relative-comparison-only; "
+          "roofline numbers are in EXPERIMENTS.md")
+
+
+def mesh8():
+    return jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Report:
+    """Collects benchmark rows and renders/persists them."""
+
+    def __init__(self, name: str, columns: List[str]):
+        self.name = name
+        self.columns = columns
+        self.rows: List[List] = []
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def render(self) -> str:
+        widths = [
+            max(len(str(c)), *(len(_fmt(r[i])) for r in self.rows)) if self.rows
+            else len(str(c))
+            for i, c in enumerate(self.columns)
+        ]
+        out = [f"== {self.name} ==  ({CAVEAT})"]
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(self.columns, widths)))
+        for r in self.rows:
+            out.append("  ".join(_fmt(v).ljust(w) for v, w in zip(r, widths)))
+        return "\n".join(out)
+
+    def to_dict(self) -> Dict:
+        return {"name": self.name, "columns": self.columns, "rows": self.rows}
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

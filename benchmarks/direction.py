@@ -1,0 +1,40 @@
+"""Paper §2/§4 traversal-direction study: TD vs BU vs DO.
+
+Honest-TEPS accounting (the paper's §2 criticism of Graph500 TEPS):
+we report EDGES ACTUALLY SCANNED, not |E|/time.
+"""
+
+from benchmarks.common import Report, mesh8, timeit
+
+import numpy as np
+
+
+def run(scale: int = 13) -> Report:
+    from repro.core import bfs
+    from repro.graph import csr, generators, partition
+
+    mesh = mesh8()
+    rep = Report(
+        "direction (paper Sec. 2/4: top-down vs bottom-up vs DO)",
+        ["graph", "mode", "levels", "edges scanned", "% of E", "time ms"],
+    )
+    rng = np.random.default_rng(0)
+    for gname, g in [
+        (f"kron{scale}", generators.kronecker(scale, 16, seed=0)),
+        ("torus64", generators.torus_2d(64)),
+    ]:
+        pg = partition.partition_1d(g, 8)
+        root = csr.largest_component_root(g, rng)
+        for mode in ("top_down", "bottom_up", "direction_optimizing"):
+            cfg = bfs.BFSConfig(axes=("data",), fanout=4, mode=mode)
+            arrays = bfs.place_arrays(pg, mesh, cfg.axes)
+            fn = bfs.build_bfs_fn(pg, mesh, cfg)
+            d, lv, sc = fn(arrays, np.int32(root))
+            t = timeit(lambda: fn(arrays, np.int32(root)), iters=2)
+            rep.add(gname, mode, int(np.max(lv)), int(sc[0]),
+                    100.0 * float(sc[0]) / g.n_edges, t * 1e3)
+    return rep
+
+
+if __name__ == "__main__":
+    print(run().render())

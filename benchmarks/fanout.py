@@ -1,0 +1,46 @@
+"""Paper §3/§5 fanout study: messages, rounds, buffer bound, wall time.
+
+The analytic columns come straight from the paper's complexity analysis
+(via core.butterfly); wall time is the measured BFS on 8 devices.
+"""
+
+from benchmarks.common import Report, mesh8, timeit
+
+import numpy as np
+
+
+def run(scale: int = 13) -> Report:
+    from repro.core import bfs, butterfly
+    from repro.graph import csr, generators, partition
+
+    g = generators.kronecker(scale, 8, seed=0)
+    pg = partition.partition_1d(g, 8)
+    mesh = mesh8()
+    root = csr.largest_component_root(g, np.random.default_rng(0))
+    rep = Report(
+        "fanout (paper Fig. 2/3, Sec. 3 analysis)",
+        ["sync", "fanout", "rounds", "msgs/node", "buffer bound (xV)",
+         "bytes/node/level (KiB)", "time ms"],
+    )
+    v_words = pg.n_words
+    for sync, fanout in [("butterfly", 1), ("butterfly", 2), ("butterfly", 4),
+                         ("butterfly", 8), ("all_to_all", 1), ("xla", 1)]:
+        cfg = bfs.BFSConfig(axes=("data",), fanout=fanout, sync=sync)
+        arrays = bfs.place_arrays(pg, mesh, cfg.axes)
+        fn = bfs.build_bfs_fn(pg, mesh, cfg)
+        t = timeit(lambda: fn(arrays, np.int32(root)), iters=2)
+        if sync == "butterfly":
+            rounds = len(butterfly.digit_plan(8, fanout))
+            msgs = butterfly.messages_per_node(8, fanout)
+            buf = butterfly.peak_buffer_elems(8, fanout, 1)
+        elif sync == "all_to_all":
+            rounds, msgs, buf = 7, 7, 8
+        else:
+            rounds, msgs, buf = "-", "-", "-"
+        bpl = (msgs * v_words * 4 / 1024) if isinstance(msgs, int) else "-"
+        rep.add(sync, fanout, rounds, msgs, buf, bpl, t * 1e3)
+    return rep
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -1,0 +1,75 @@
+"""Technique integration (DESIGN.md §7): the paper's butterfly as an LM
+gradient-synchronization backend.
+
+Compares one train step of a small LM under: XLA psum (GSPMD), butterfly
+f=1/4, rabenseifner, all-to-all baseline, int8-compressed butterfly —
+wall time + collective-permute wire bytes from the compiled HLO + loss
+parity vs the GSPMD reference.
+"""
+
+import dataclasses
+
+from benchmarks.common import Report, mesh8, timeit
+
+import numpy as np
+
+
+def run() -> Report:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.dist.sharding import rules_for_mesh
+    from repro.launch import hlo_stats
+    from repro.models import api
+    from repro.train import optim, step as step_mod
+
+    cfg = dataclasses.replace(
+        configs.reduced(configs.get_config("olmo-1b")),
+        n_layers=4, d_model=256, d_ff=512, vocab=1024,
+    )
+    mesh = mesh8()
+    rules = rules_for_mesh(mesh, fsdp=False)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    opt = optim.get(cfg.optimizer)
+    opt_state = opt.init(params)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (16, 128)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (16, 128)), jnp.int32),
+    }
+    step = jnp.int32(1)
+
+    cases = [("xla_psum (GSPMD)", dict(method=None))]
+    for m, f in [("butterfly", 1), ("butterfly", 4), ("rabenseifner", 2),
+                 ("all_to_all", 1)]:
+        cases.append((f"{m} f={f}", dict(method=m, fanout=f)))
+    cases.append(("butterfly int8 f=1", dict(method="butterfly", fanout=1,
+                                             compress="int8")))
+
+    rep = Report(
+        "grad_sync (paper pattern as LM gradient sync)",
+        ["backend", "time ms", "permutes", "wire KiB/dev", "loss", "Δloss vs ref"],
+    )
+    ref_loss = None
+    for name, kw in cases:
+        if kw.get("method") is None:
+            fn = jax.jit(step_mod.build_train_step(cfg, mesh=mesh, rules=rules))
+        else:
+            fn = jax.jit(step_mod.build_train_step_butterfly(
+                cfg, mesh, rules, **kw))
+        lowered = fn.lower(params, opt_state, batch, step)
+        st = hlo_stats.collective_stats(lowered.compile().as_text())
+        _, _, metrics = fn(params, opt_state, batch, step)
+        loss = float(metrics["loss"])
+        if ref_loss is None:
+            ref_loss = loss
+        t = timeit(lambda: fn(params, opt_state, batch, step), iters=2)
+        rep.add(name, t * 1e3, st["collective-permute"]["count"],
+                st["collective-permute"]["wire_bytes"] / 1024, loss,
+                abs(loss - ref_loss))
+    return rep
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One benchmark per paper table/figure (+ the LM-integration study):
+
+  bfs_gteps        — Table 1 (graphs × time × honest TEPS)
+  scaling          — Fig. 3  (strong scaling × fanout)
+  fanout           — Fig. 2 / §3 (fanout trade-offs)
+  collective_bytes — §3 message/byte analysis vs compiled HLO
+  direction        — §2/§4 (top-down / bottom-up / direction-optimizing)
+  grad_sync        — DESIGN §7 (butterfly gradient sync for LM training)
+
+Writes ``benchmarks/results.json``.
+"""
+
+from benchmarks import common  # noqa: F401  (sets XLA_FLAGS before jax)
+
+import json
+import os
+import sys
+import time
+
+
+def main() -> int:
+    from benchmarks import (
+        bfs_gteps,
+        collective_bytes,
+        direction,
+        fanout,
+        grad_sync,
+        scaling,
+    )
+
+    mods = [bfs_gteps, scaling, fanout, collective_bytes, direction, grad_sync]
+    results = []
+    t_all = time.time()
+    for mod in mods:
+        t0 = time.time()
+        rep = mod.run()
+        print(rep.render())
+        print(f"   [{mod.__name__} took {time.time()-t0:.1f}s]\n")
+        results.append(rep.to_dict())
+    out = os.path.join(os.path.dirname(__file__), "results.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"all benchmarks done in {time.time()-t_all:.1f}s -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

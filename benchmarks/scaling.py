@@ -1,0 +1,45 @@
+"""Paper Fig. 3 analogue: strong scaling over device count × fanout.
+
+Reports the paper's §5 metrics: Speedup = t_min_devices / t_max_devices,
+Ideal = max/min device ratio, Utilization = Speedup/Ideal.
+"""
+
+from benchmarks.common import Report, timeit
+
+import numpy as np
+
+
+def run(scale: int = 13) -> Report:
+    import jax
+
+    from repro.core import bfs
+    from repro.graph import csr, generators, partition
+
+    g = generators.kronecker(scale, 8, seed=0)
+    rng = np.random.default_rng(0)
+    root = csr.largest_component_root(g, rng)
+    rep = Report(
+        "scaling (paper Fig. 3)",
+        ["devices", "fanout", "time ms", "speedup", "ideal", "utilization %"],
+    )
+    base = {}
+    for fanout in (1, 4):
+        for p in (1, 2, 4, 8):
+            pg = partition.partition_1d(g, p)
+            mesh = jax.make_mesh((p,), ("data",),
+                                 axis_types=(jax.sharding.AxisType.Auto,))
+            cfg = bfs.BFSConfig(axes=("data",), fanout=fanout)
+            arrays = bfs.place_arrays(pg, mesh, cfg.axes)
+            fn = bfs.build_bfs_fn(pg, mesh, cfg)
+            t = timeit(lambda: fn(arrays, np.int32(root)), iters=2)
+            if p == 1:
+                base[fanout] = t
+            speedup = base[fanout] / t
+            ideal = float(p)
+            rep.add(p, fanout, t * 1e3, speedup, ideal,
+                    100.0 * speedup / ideal)
+    return rep
+
+
+if __name__ == "__main__":
+    print(run().render())

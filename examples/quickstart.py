@@ -1,0 +1,42 @@
+"""Quickstart: distributed ButterFly BFS in ~30 lines of user code.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a Kronecker graph, partitions it over 8 (simulated) devices, runs
+the paper's Algorithm 2 with butterfly frontier synchronization, and
+checks the distances against the sequential oracle.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+from repro.core import bfs
+from repro.graph import csr, generators, partition
+
+# 1. a scale-14 Kronecker graph (Graph500 generator, paper Sec. 4)
+g = generators.kronecker(scale=14, edge_factor=8, seed=0)
+print(f"graph: {g.n_real:,} vertices, {g.n_edges:,} directed edges")
+
+# 2. 1D edge-balanced partition over 8 devices (paper's partitioning)
+pg = partition.partition_1d(g, p=8)
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+
+# 3. ButterFly BFS: top-down traversal + butterfly frontier sync, fanout 4
+cfg = bfs.BFSConfig(axes=("data",), sync="butterfly", fanout=4,
+                    mode="direction_optimizing")
+root = csr.largest_component_root(g, np.random.default_rng(0))
+dist, levels, edges_scanned = bfs.distributed_bfs(pg, mesh, root, cfg)
+
+# 4. verify against the sequential oracle
+ref = bfs.bfs_reference(g, root)
+assert np.array_equal(
+    np.where(dist >= 2**31 - 1, -1, dist), np.where(ref >= 2**31 - 1, -1, ref)
+)
+reached = int((dist < 2**31 - 1).sum())
+print(f"root {root}: {levels} levels, {reached:,} vertices reached, "
+      f"{edges_scanned:,.0f} edges scanned (direction-optimizing)")
+print("distances match the sequential reference — OK")

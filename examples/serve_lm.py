@@ -1,0 +1,65 @@
+"""Serve a small LM with batched requests: prefill + decode loop.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-1.7b] [--new 32]
+
+Exercises the serving engine used by the decode_* dry-run cells: static
+KV cache (the paper's tight-memory-bound philosophy), batched greedy or
+sampled decoding, for any assigned architecture family (dense / MoE /
+SSM / hybrid / VLM / enc-dec).
+"""
+
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import configs
+    from repro.models import api
+    from repro.serve import engine
+
+    cfg = configs.reduced(configs.get_config(args.arch))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
+    )
+    extra = {}
+    if cfg.family == "vlm":
+        extra["patches"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.n_patches, cfg.patch_dim)),
+            jnp.float32)
+    if cfg.family == "audio":
+        extra["frames"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.n_frames, cfg.d_model)),
+            jnp.float32)
+
+    t0 = time.perf_counter()
+    res = engine.generate(cfg, params, prompts, args.new,
+                          extra_inputs=extra or None,
+                          temperature=args.temperature, seed=1)
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.new
+    print(f"{cfg.name}: generated {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile; batch={args.batch})")
+    print("sample token ids:", res.tokens[0, :16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

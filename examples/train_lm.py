@@ -1,0 +1,56 @@
+"""Train a small LM end-to-end with the full framework stack:
+data pipeline -> model -> butterfly gradient sync -> checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch olmo-1b]
+
+Uses the reduced same-family config (CPU-sized) of any assigned
+architecture; ``--grad-sync butterfly`` routes gradients through the
+paper's communication pattern (8 simulated data-parallel devices).
+"""
+
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--grad-sync", default="butterfly",
+                    choices=["xla", "butterfly", "rabenseifner", "all_to_all"])
+    ap.add_argument("--fanout", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro import configs
+    from repro.dist.sharding import rules_for_mesh
+    from repro.train.loop import LoopConfig, train
+
+    cfg = configs.reduced(configs.get_config(args.arch))
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rules = rules_for_mesh(mesh, fsdp=False)
+    out = train(
+        cfg, args.batch, args.seq,
+        loop=LoopConfig(
+            n_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+            grad_sync=args.grad_sync, fanout=args.fanout, log_every=25,
+            lr_kw={"peak": 3e-3, "warmup": 20, "total": args.steps},
+        ),
+        mesh=mesh, rules=rules,
+    )
+    losses = out["losses"]
+    print(f"\n{args.arch} ({args.grad_sync} grad sync): "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} steps")
+    assert losses[-1] < losses[0], "training failed to reduce loss"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

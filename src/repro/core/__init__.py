@@ -1,0 +1,3 @@
+"""The paper's contribution: butterfly schedules (butterfly.py), their
+ppermute realizations (collectives.py), packed-bitmap frontiers
+(frontier.py), and the distributed ButterFly BFS engine (bfs.py)."""

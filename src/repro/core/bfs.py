@@ -1,0 +1,317 @@
+"""ButterFly BFS (paper Alg. 2) — distributed breadth-first search in JAX.
+
+Structure mirrors the paper exactly:
+
+* **Phase 1 — traversal** (per compute node, here: per TPU chip): expand the
+  current frontier over the node's owned edges.  Both *top-down* (push) and
+  *bottom-up* (pull) formulations are implemented, plus Beamer's
+  direction-optimizing switch — the paper's Contribution 3 is that the
+  communication pattern is independent of the traversal direction, and it is
+  here: both feed the same phase-2 merge.
+* **Phase 2 — butterfly frontier synchronization**: the per-node "global
+  queue" (a packed bitmap, DESIGN.md Sec. 3) is OR-merged across nodes with
+  the butterfly network of :mod:`repro.core.collectives` (configurable
+  fanout), or with the paper's all-to-all baseline for comparison.
+
+The whole traversal (level loop included) compiles to ONE XLA program:
+``jit(shard_map(...))`` with a ``lax.while_loop`` over levels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives
+from repro.core import frontier as fr
+from repro.graph.csr import Graph
+from repro.graph.partition import PartitionedGraph
+
+INF = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# Host oracle (paper Alg. 1 semantics)
+# ---------------------------------------------------------------------------
+
+
+def bfs_reference(g: Graph, root: int) -> np.ndarray:
+    """Sequential frontier BFS — the ground truth for every test."""
+    d = np.full(g.n, np.iinfo(np.int32).max, dtype=np.int64)
+    d[root] = 0
+    frontier = [root]
+    level = 0
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for u in g.neighbors(v):
+                if d[u] > level + 1:
+                    d[u] = level + 1
+                    nxt.append(u)
+        frontier = nxt
+        level += 1
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Distributed ButterFly BFS
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BFSConfig:
+    """Algorithm knobs (paper Sec. 3/4)."""
+
+    axes: Tuple[str, ...] = ("data",)
+    fanout: int = 2  # paper fanout: 1 -> pairwise, 4 -> radix-4 rounds
+    sync: str = "butterfly"  # butterfly | all_to_all | xla
+    mode: str = "top_down"  # top_down | bottom_up | direction_optimizing
+    alpha: float = 15.0  # Beamer push->pull threshold
+    beta: float = 18.0  # Beamer pull->push threshold
+    max_levels: Optional[int] = None
+    use_pallas: bool = False  # frontier kernels via Pallas (TPU) vs XLA ops
+
+
+def _sync_frontier(words: jax.Array, cfg: BFSConfig) -> jax.Array:
+    if cfg.sync == "butterfly":
+        return collectives.butterfly_or(words, cfg.axes, fanout=cfg.fanout)
+    if cfg.sync == "rabenseifner":
+        # beyond-paper: OR-reduce-scatter + all-gather on the same wiring —
+        # 2(P-1)/P of the bitmap per node vs log_f(P) full-bitmap ships
+        return collectives.butterfly_allreduce_rabenseifner(
+            words, cfg.axes, fanout=cfg.fanout, op="or"
+        )
+    if cfg.sync == "all_to_all":
+        return collectives.all_to_all_merge(words, cfg.axes, op="or")
+    if cfg.sync == "xla":
+        return collectives.xla_allreduce(words, cfg.axes, op="or")
+    raise ValueError(f"unknown sync {cfg.sync!r}")
+
+
+def _expand_push(arrays, frontier_words, n_words, use_pallas, meta=None):
+    """Top-down: scatter frontier bits along owned out-edges (paper Alg. 2
+    phase 1).  Returns the node's 'global queue' bitmap."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.expand_push_pallas(frontier_words, arrays, meta, n_words)
+    src, dst = arrays["edge_src"], arrays["edge_dst"]
+    mask = jnp.arange(src.shape[0], dtype=jnp.int32) < arrays["edge_count"]
+    active = fr.get_bits(frontier_words, src) & mask
+    return fr.scatter_or(n_words, dst, active)
+
+
+def _expand_pull(arrays, frontier_words, visited_words, n_words, use_pallas, meta=None):
+    """Bottom-up: every unvisited owned vertex probes its in-edges for a
+    parent in the frontier (Beamer; paper Sec. 3 'Parallelization Schemes')."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.expand_pull_pallas(frontier_words, visited_words, arrays, meta, n_words)
+    src, dst = arrays["in_src"], arrays["in_dst"]
+    mask = jnp.arange(src.shape[0], dtype=jnp.int32) < arrays["in_count"]
+    parent_in_frontier = fr.get_bits(frontier_words, src) & mask
+    unvisited = ~fr.get_bits(visited_words, dst)
+    found = parent_in_frontier & unvisited
+    return fr.scatter_or(n_words, dst, found)
+
+
+def build_bfs_fn(
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: BFSConfig, layout=None
+):
+    """Compile-ready distributed BFS.
+
+    Returns ``run(arrays, root)`` where ``arrays`` is ``pg.arrays()`` placed
+    on ``mesh`` (leading [P] axis sharded over ``cfg.axes``) and ``root`` a
+    replicated int32 scalar.  Output: per-device owned distances
+    ``int32[P, vmax]`` (INF for unreached), levels executed, and the number
+    of edges examined (for honest TEPS, paper Sec. 2 metric discussion).
+    """
+    n_words = pg.n_words
+    vmax = pg.vmax
+    wmax = pg.wmax
+    max_levels = cfg.max_levels if cfg.max_levels is not None else pg.n
+    spec = P(cfg.axes if len(cfg.axes) > 1 else cfg.axes[0])
+    if cfg.use_pallas and layout is None:
+        raise ValueError("use_pallas=True requires a BFSPallasLayout")
+    meta = layout.meta if layout is not None else None
+    array_keys = _ARRAY_KEYS + (
+        tuple(sorted(layout.arrays)) if layout is not None else ()
+    )
+
+    def body(arrays, root):
+        # [P, ...] -> local [...]  (shard_map gives a leading axis of 1)
+        arrays = jax.tree.map(lambda a: a[0], arrays)
+        v_start = arrays["v_start"]
+        v_count = arrays["v_count"]
+        word_start = arrays["word_start"]
+        vown_ids = jnp.arange(vmax, dtype=jnp.int32)
+        owned_mask = vown_ids < v_count
+
+        visited = jnp.zeros((n_words,), jnp.uint32)
+        visited = fr.set_bit(visited, root)
+        frontier_words = visited
+        d_owned = jnp.full((vmax,), INF, jnp.int32)
+        is_owner = (root >= v_start) & (root < v_start + v_count)
+        d_owned = jnp.where(
+            is_owner & (vown_ids == root - v_start), 0, d_owned
+        )
+
+        if cfg.mode == "top_down":
+            init_dir = jnp.array(False)  # False == push
+        elif cfg.mode == "bottom_up":
+            init_dir = jnp.array(True)
+        else:
+            init_dir = jnp.array(False)
+
+        def cond(state):
+            frontier_words, visited, d_owned, level, scanned, pull = state
+            return (fr.popcount(frontier_words) > 0) & (level < max_levels)
+
+        def step(state):
+            frontier_words, visited, d_owned, level, scanned, pull = state
+
+            # -- Phase 1: traversal -------------------------------------
+            def do_push(_):
+                return _expand_push(
+                    arrays, frontier_words, n_words, cfg.use_pallas, meta
+                )
+
+            def do_pull(_):
+                return _expand_pull(
+                    arrays, frontier_words, visited, n_words, cfg.use_pallas, meta
+                )
+
+            if cfg.mode == "top_down":
+                gq = do_push(None)
+            elif cfg.mode == "bottom_up":
+                gq = do_pull(None)
+            else:
+                gq = lax.cond(pull, do_pull, do_push, None)
+
+            # edges examined this level (honest TEPS accounting):
+            owned_front = fr.unpack(
+                lax.dynamic_slice(frontier_words, (word_start,), (wmax,))
+            )[:vmax] & owned_mask
+            m_f = (arrays["deg_out"] * owned_front).sum()
+            owned_unvis = (
+                ~fr.unpack(lax.dynamic_slice(visited, (word_start,), (wmax,)))[:vmax]
+            ) & owned_mask
+            m_u = (arrays["deg_out"] * owned_unvis).sum()
+            if cfg.mode == "bottom_up":
+                lvl_scanned = m_u  # pull probes unvisited in-edges
+            elif cfg.mode == "top_down":
+                lvl_scanned = m_f
+            else:
+                lvl_scanned = jnp.where(pull, m_u, m_f)
+
+            # -- Phase 2: butterfly frontier synchronization -------------
+            merged = _sync_frontier(gq, cfg)
+
+            # -- Update (enqueue-if-new as set ops) -----------------------
+            new = merged & ~visited
+            visited = visited | new
+            owned_new = fr.unpack(
+                lax.dynamic_slice(new, (word_start,), (wmax,))
+            )[:vmax] & owned_mask
+            d_owned = jnp.where(owned_new, level + 1, d_owned)
+
+            # -- Direction-optimizing switch (Beamer alpha/beta) ----------
+            if cfg.mode == "direction_optimizing":
+                g_mf = lax.psum(m_f, cfg.axes)
+                g_mu = lax.psum(m_u, cfg.axes)
+                n_f = fr.popcount(new)
+                go_pull = g_mf.astype(jnp.float32) > (
+                    g_mu.astype(jnp.float32) / cfg.alpha
+                )
+                go_push = n_f.astype(jnp.float32) < (pg.n / cfg.beta)
+                pull = jnp.where(pull, ~go_push, go_pull)
+
+            return (
+                new,
+                visited,
+                d_owned,
+                level + 1,
+                scanned + lvl_scanned.astype(jnp.float32),
+                pull,
+            )
+
+        init = (
+            frontier_words,
+            visited,
+            d_owned,
+            jnp.int32(0),
+            jnp.float32(0),
+            init_dir,
+        )
+        frontier_words, visited, d_owned, level, scanned, _ = lax.while_loop(
+            cond, step, init
+        )
+        total_scanned = lax.psum(scanned, cfg.axes)
+        return d_owned[None], level[None], total_scanned[None]
+
+    shard_fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=({k: spec for k in array_keys}, P()),
+        out_specs=(spec, spec, spec),
+        check_vma=False,
+    )
+    return jax.jit(shard_fn)
+
+
+_ARRAY_KEYS = (
+    "v_start",
+    "v_count",
+    "word_start",
+    "edge_src",
+    "edge_dst",
+    "edge_count",
+    "in_src",
+    "in_dst",
+    "in_count",
+    "deg_out",
+)
+
+
+def place_arrays(
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, axes, layout=None
+) -> dict:
+    """Device-put the stacked partition arrays, [P] axis sharded over axes."""
+    spec = P(axes if len(axes) > 1 else axes[0])
+    sharding = jax.sharding.NamedSharding(mesh, spec)
+    arrays = dict(pg.arrays())
+    if layout is not None:
+        arrays.update(layout.arrays)
+    return {k: jax.device_put(v, sharding) for k, v in arrays.items()}
+
+
+def distributed_bfs(
+    pg: PartitionedGraph,
+    mesh: jax.sharding.Mesh,
+    root: int,
+    cfg: BFSConfig = BFSConfig(),
+) -> Tuple[np.ndarray, int, float]:
+    """End-to-end helper: place arrays, run, assemble global distances."""
+    layout = None
+    if cfg.use_pallas:
+        from repro.kernels import blocks
+
+        layout = blocks.build_bfs_layout(pg)
+    arrays = place_arrays(pg, mesh, cfg.axes, layout)
+    fn = build_bfs_fn(pg, mesh, cfg, layout)
+    d_owned, levels, scanned = fn(arrays, jnp.int32(root))
+    d_owned = np.asarray(d_owned)
+    levels = int(np.max(levels))
+    dist = np.full(pg.n, np.iinfo(np.int32).max, dtype=np.int64)
+    for i in range(pg.p):
+        s, c = int(pg.v_start[i]), int(pg.v_count[i])
+        dist[s : s + c] = d_owned[i, :c]
+    return dist, levels, float(np.asarray(scanned)[0])

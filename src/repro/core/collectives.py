@@ -1,0 +1,360 @@
+"""Butterfly collectives lowered to ``jax.lax.ppermute`` chains.
+
+These are the JAX realizations of :mod:`repro.core.butterfly` schedules and
+must be called *inside* ``jax.shard_map`` (they use named mesh axes).
+
+Three families:
+
+* ``butterfly_merge`` / ``butterfly_or`` / ``butterfly_allreduce`` — the
+  paper-faithful pattern: every round ships the FULL buffer to ``digit-1``
+  partners and merges (paper Alg. 2 phase 2, generalized merge op).
+  Bytes/node = ``sum(d_i - 1) * |buf|``; depth = ``len(digits)`` rounds;
+  peak live buffers = ``O(fanout * |buf|)`` (paper Contribution 4).
+
+* ``butterfly_allreduce_rabenseifner`` — beyond-paper: recursive halving
+  (reduce-scatter) + recursive doubling (all-gather) on the *same* butterfly
+  wiring.  Bytes/node = ``2 * (P-1)/P * |buf|`` — asymptotically ``log(P)``×
+  fewer bytes than the full-buffer pattern, at the same depth ``2 log(P)``.
+
+* ``all_to_all_merge`` — the naive baseline the paper replaces: every node
+  ships its buffer to all ``P-1`` peers (implemented as ``P-1`` ring shifts).
+
+All support *hierarchical* mesh axes: pass ``axes=("model", "data", "pod")``
+to run intra-chip-group digits first so the slowest interconnect carries only
+the final round(s) (DESIGN.md Sec. 11).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import butterfly
+
+Axes = Union[str, Sequence[str]]
+
+_MERGE_OPS = {
+    "add": lax.add,
+    "or": jnp.bitwise_or,
+    "and": jnp.bitwise_and,
+    "max": lax.max,
+    "min": lax.min,
+}
+
+
+def _as_axes(axes: Axes) -> Tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _resolve_op(op: Union[str, Callable]) -> Callable:
+    return _MERGE_OPS[op] if isinstance(op, str) else op
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful full-buffer butterfly (Alg. 2, phase 2)
+# ---------------------------------------------------------------------------
+
+
+def butterfly_merge(
+    x: jax.Array,
+    axes: Axes,
+    *,
+    fanout: int = 2,
+    op: Union[str, Callable] = "add",
+) -> jax.Array:
+    """Merge ``x`` across ``axes`` with the paper's butterfly pattern.
+
+    Every participating rank ends with ``op``-reduction of all ranks' inputs
+    (op must be associative + commutative).  One ``lax.ppermute`` per partner
+    per round; ``sum(d_i - 1)`` messages sent per rank in ``len(digits)``
+    rounds per axis.
+    """
+    merge = _resolve_op(op)
+    for axis in _as_axes(axes):
+        p = lax.axis_size(axis)
+        if p == 1:
+            continue
+        sched = butterfly.build_schedule(p, fanout)
+        for rnd in sched.rounds:
+            # All sends of a round ship the same pre-round accumulator
+            # (paper: the node's current merged frontier).
+            received = [
+                lax.ppermute(x, axis, list(enumerate(perm))) for perm in rnd.perms
+            ]
+            for r in received:
+                x = merge(x, r)
+    return x
+
+
+def butterfly_or(x: jax.Array, axes: Axes, *, fanout: int = 2) -> jax.Array:
+    """Bitmap frontier synchronization (BFS phase 2): bitwise-OR merge."""
+    return butterfly_merge(x, axes, fanout=fanout, op="or")
+
+
+def butterfly_allreduce(
+    x: jax.Array, axes: Axes, *, fanout: int = 2
+) -> jax.Array:
+    """Sum all-reduce with the paper-faithful full-buffer butterfly."""
+    return butterfly_merge(x, axes, fanout=fanout, op="add")
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: Rabenseifner on the butterfly wiring
+# ---------------------------------------------------------------------------
+
+
+def _global_stages(axes: Tuple[str, ...], fanout: int):
+    """Stages (axis, digit, within-axis stride, perms) MSB-first over the
+    combined mixed radix where ``axes[0]`` is the least-significant axis."""
+    stages = []
+    for axis in axes:  # LSB axis first...
+        p = lax.axis_size(axis)
+        if p == 1:
+            continue
+        sched = butterfly.build_schedule(p, fanout)  # rounds LSB digit first
+        for rnd in sched.rounds:
+            stages.append((axis, rnd))
+    return stages[::-1]  # ...then reverse the flat list => global MSB first
+
+
+def butterfly_reduce_scatter(
+    x: jax.Array, axes: Axes, *, fanout: int = 2,
+    op: Union[str, Callable] = "add",
+) -> Tuple[jax.Array, jax.Array]:
+    """Recursive-halving reduce-scatter over the butterfly wiring.
+
+    ``x`` is flattened and zero-padded to a multiple of ``P`` (the pad is
+    the identity of ``add``/``or``/``max``-on-unsigned).  Returns
+    ``(chunk, chunk_index)`` where ``chunk`` is this rank's ``1/P`` slice of
+    the reduced buffer and ``chunk_index`` its (traced) position.
+    """
+    merge = _resolve_op(op)
+    axes = _as_axes(axes)
+    p_total = 1
+    for a in axes:
+        p_total *= lax.axis_size(a)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % p_total
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunk_elems = flat.shape[0] // p_total
+
+    stages = _global_stages(axes, fanout)
+    lo = jnp.zeros((), jnp.int32)  # chunk-range start (in chunks), traced
+    size = p_total  # chunk-range length (in chunks), static
+    for axis, rnd in stages:
+        d, stride = rnd.digit, rnd.stride
+        newsize = size // d
+        dig = (lax.axis_index(axis) // stride) % d
+        mylo = lo + dig * newsize
+        acc = lax.dynamic_slice(flat, (mylo * chunk_elems,), (newsize * chunk_elems,))
+        for j, perm in enumerate(rnd.perms, start=1):
+            send_lo = lo + ((dig + j) % d) * newsize
+            chunk = lax.dynamic_slice(
+                flat, (send_lo * chunk_elems,), (newsize * chunk_elems,)
+            )
+            recv = lax.ppermute(chunk, axis, list(enumerate(perm)))
+            acc = merge(acc, recv)
+        flat = lax.dynamic_update_slice(flat, acc, (mylo * chunk_elems,))
+        lo, size = mylo, newsize
+    chunk = lax.dynamic_slice(flat, (lo * chunk_elems,), (chunk_elems,))
+    return chunk, lo
+
+
+def butterfly_allgather_chunks(
+    chunk: jax.Array,
+    lo: jax.Array,
+    total_elems: int,
+    axes: Axes,
+    *,
+    fanout: int = 2,
+) -> jax.Array:
+    """Recursive-doubling all-gather: inverse of the reduce-scatter above."""
+    axes = _as_axes(axes)
+    p_total = 1
+    for a in axes:
+        p_total *= lax.axis_size(a)
+    chunk_elems = chunk.shape[0]
+    flat = jnp.zeros((p_total * chunk_elems,), chunk.dtype)
+    flat = lax.dynamic_update_slice(flat, chunk, (lo * chunk_elems,))
+
+    stages = _global_stages(axes, fanout)[::-1]  # LSB first
+    size = 1
+    for axis, rnd in stages:
+        d, stride = rnd.digit, rnd.stride
+        dig = (lax.axis_index(axis) // stride) % d
+        base = lo - dig * size
+        mine = lax.dynamic_slice(flat, (lo * chunk_elems,), (size * chunk_elems,))
+        for j, perm in enumerate(rnd.perms, start=1):
+            recv = lax.ppermute(mine, axis, list(enumerate(perm)))
+            pdig = (dig - j) % d  # sender's digit
+            flat = lax.dynamic_update_slice(
+                flat, recv, ((base + pdig * size) * chunk_elems,)
+            )
+        lo, size = base, size * d
+    return flat[:total_elems]
+
+
+def butterfly_allreduce_rabenseifner(
+    x: jax.Array, axes: Axes, *, fanout: int = 2,
+    op: Union[str, Callable] = "add",
+) -> jax.Array:
+    """All-reduce = reduce-scatter + all-gather (bandwidth-optimal):
+    ``2·(P-1)/P`` of the buffer per node vs the full-buffer butterfly's
+    ``log_f(P)`` — the beyond-paper frontier-sync schedule (§Perf).
+    ``op='or'`` gives the BFS bitmap merge."""
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    chunk, lo = butterfly_reduce_scatter(x, axes, fanout=fanout, op=op)
+    p_total = 1
+    for a in _as_axes(axes):
+        p_total *= lax.axis_size(a)
+    padded = n + ((-n) % p_total)
+    flat = butterfly_allgather_chunks(chunk, lo, padded, axes, fanout=fanout)
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Naive baseline the paper replaces (Sec. 3 "two widely used approaches")
+# ---------------------------------------------------------------------------
+
+
+def all_to_all_merge(
+    x: jax.Array,
+    axes: Axes,
+    *,
+    op: Union[str, Callable] = "add",
+) -> jax.Array:
+    """All-to-all broadcast-merge: ``P-1`` ring shifts per axis, each rank
+    ships its ORIGINAL buffer to every peer.  O(P^2) total messages —
+    the pattern the butterfly replaces."""
+    merge = _resolve_op(op)
+    for axis in _as_axes(axes):
+        p = lax.axis_size(axis)
+        if p == 1:
+            continue
+        shifted = x
+        for _ in range(p - 1):
+            perm = [(i, (i + 1) % p) for i in range(p)]
+            shifted = lax.ppermute(shifted, axis, perm)
+            x = merge(x, shifted)
+    return x
+
+
+def xla_allreduce(x: jax.Array, axes: Axes, *, op: str = "add") -> jax.Array:
+    """XLA-native collective (psum / custom) — the compiler-scheduled
+    reference point for roofline comparisons."""
+    axes = _as_axes(axes)
+    if op == "add":
+        return lax.psum(x, axes)
+    if op == "max":
+        return lax.pmax(x, axes)
+    if op == "or":
+        # No native por; go through psum on popcount-safe widening or use
+        # max over unsigned words (OR == max only for single bits), so use
+        # sum-of-bools semantics: OR(a,b) == (a|b); emulate with pmax on each
+        # word is wrong; instead use psum on uint32 is wrong too.  Correct
+        # trick: OR across ranks == ~AND(~x) and AND == pmin for masks of
+        # 0/0xffffffff only.  General correct route: all_gather + fold.
+        g = lax.all_gather(x, axes[0], axis=0, tiled=False)
+        out = jax.tree_util.tree_reduce(
+            jnp.bitwise_or, [g[i] for i in range(g.shape[0])]
+        )
+        for a in axes[1:]:
+            g = lax.all_gather(out, a, axis=0, tiled=False)
+            out = jax.tree_util.tree_reduce(
+                jnp.bitwise_or, [g[i] for i in range(g.shape[0])]
+            )
+        return out
+    raise ValueError(op)
+
+
+# ---------------------------------------------------------------------------
+# Pytree wrappers (gradient synchronization entry point; DESIGN.md Sec. 7)
+# ---------------------------------------------------------------------------
+
+
+def tree_sync(
+    tree,
+    axes: Axes,
+    *,
+    method: str = "xla_psum",
+    fanout: int = 2,
+    mean: bool = True,
+):
+    """Synchronize a gradient pytree across data-parallel ``axes``.
+
+    method: ``xla_psum`` | ``butterfly`` (paper) | ``rabenseifner``
+    (beyond-paper) | ``all_to_all`` (paper's baseline).
+    """
+    axes = _as_axes(axes)
+    p_total = 1
+    for a in axes:
+        p_total *= lax.axis_size(a)
+
+    def sync_leaf(g):
+        if method == "xla_psum":
+            out = lax.psum(g, axes)
+        elif method == "butterfly":
+            out = butterfly_allreduce(g, axes, fanout=fanout)
+        elif method == "rabenseifner":
+            out = butterfly_allreduce_rabenseifner(g, axes, fanout=fanout)
+        elif method == "all_to_all":
+            out = all_to_all_merge(g, axes, op="add")
+        else:
+            raise ValueError(f"unknown grad-sync method {method!r}")
+        return out / p_total if mean else out
+
+    return jax.tree.map(sync_leaf, tree)
+
+
+def butterfly_allreduce_int8(x: jax.Array, axes: Axes, *, fanout: int = 2) -> jax.Array:
+    """Butterfly sum all-reduce with **int8 on the wire every round**.
+
+    Each round the local fp32 accumulator is quantized (per-message scalar
+    scale, shipped alongside); receivers dequantize and add.  Wire bytes per
+    round ≈ |buf|/4 of the fp32 butterfly.  Quantization error compounds
+    over the ``log_f(P)`` rounds — bounded to ``depth × max|g|/127`` per
+    element; accuracy is property-tested against the fp32 path.
+    """
+    acc = x.astype(jnp.float32)
+    for axis in _as_axes(axes):
+        p = lax.axis_size(axis)
+        if p == 1:
+            continue
+        sched = butterfly.build_schedule(p, fanout)
+        for rnd in sched.rounds:
+            scale = jnp.maximum(jnp.max(jnp.abs(acc)) / 127.0, 1e-30)
+            q = jnp.clip(jnp.round(acc / scale), -127, 127).astype(jnp.int8)
+            for perm in rnd.perms:
+                pairs = list(enumerate(perm))
+                rq = lax.ppermute(q, axis, pairs)
+                rs = lax.ppermute(scale, axis, pairs)
+                acc = acc + rq.astype(jnp.float32) * rs
+    return acc
+
+
+def tree_sync_int8(
+    tree,
+    axes: Axes,
+    *,
+    method: str = "butterfly",
+    fanout: int = 2,
+    mean: bool = True,
+):
+    """Gradient sync with int8 wire compression (DESIGN.md §7)."""
+    axes = _as_axes(axes)
+    p_total = 1
+    for a in axes:
+        p_total *= lax.axis_size(a)
+
+    def sync_leaf(g):
+        out = butterfly_allreduce_int8(g, axes, fanout=fanout)
+        return ((out / p_total) if mean else out).astype(g.dtype)
+
+    return jax.tree.map(sync_leaf, tree)

@@ -1,0 +1,63 @@
+"""Packed-bitmap frontier representation (DESIGN.md Sec. 3).
+
+The paper's per-node vertex queues become packed uint32 bitmaps: the global
+queue is ``uint32[n_words]`` covering every vertex; merge == bitwise OR
+(idempotent — replaces the paper's atomic enqueue-if-new); the wire format
+of the butterfly exchange is the bitmap itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+WORD_BITS = 32
+_U32 = jnp.uint32
+
+
+def pack(bits: jax.Array) -> jax.Array:
+    """bool[n] -> uint32[n/32] (n must be a multiple of 32)."""
+    n = bits.shape[0]
+    assert n % WORD_BITS == 0, n
+    lanes = bits.reshape(n // WORD_BITS, WORD_BITS).astype(_U32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=_U32)).astype(_U32)
+    return (lanes * weights).sum(axis=1, dtype=_U32)
+
+
+def unpack(words: jax.Array) -> jax.Array:
+    """uint32[w] -> bool[w*32]."""
+    shifts = jnp.arange(WORD_BITS, dtype=_U32)
+    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return bits.reshape(-1).astype(jnp.bool_)
+
+
+def get_bits(words: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather single bits at vertex ids ``idx`` -> bool[...]."""
+    idx = idx.astype(jnp.uint32)
+    w = words[(idx >> 5).astype(jnp.int32)]
+    return ((w >> (idx & jnp.uint32(31))) & jnp.uint32(1)).astype(jnp.bool_)
+
+
+def set_bit(words: jax.Array, idx) -> jax.Array:
+    """Set a single bit (used for root seeding)."""
+    idx = jnp.asarray(idx, jnp.uint32)
+    word = (idx >> 5).astype(jnp.int32)
+    mask = (jnp.uint32(1) << (idx & jnp.uint32(31))).astype(_U32)
+    return words.at[word].set(words[word] | mask)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Total set bits (int32)."""
+    return lax.population_count(words).astype(jnp.int32).sum()
+
+
+def scatter_or(n_words: int, idx: jax.Array, active: jax.Array) -> jax.Array:
+    """Build a bitmap with bits ``idx[i]`` set where ``active[i]``.
+
+    XLA path: scatter-max into a dense byte vector, then pack.  The Pallas
+    kernel (kernels/frontier_scatter) replaces this on TPU.
+    """
+    dense = jnp.zeros((n_words * WORD_BITS,), jnp.bool_)
+    dense = dense.at[idx].max(active, mode="drop")
+    return pack(dense)

@@ -1,0 +1,16 @@
+"""Graph substrate: CSR structures, generators, ETL, partitioning."""
+
+from repro.graph.csr import Graph
+from repro.graph.generators import kronecker, uniform_random, torus_2d, path_graph, star_graph
+from repro.graph.partition import PartitionedGraph, partition_1d
+
+__all__ = [
+    "Graph",
+    "kronecker",
+    "uniform_random",
+    "torus_2d",
+    "path_graph",
+    "star_graph",
+    "PartitionedGraph",
+    "partition_1d",
+]

@@ -1,0 +1,137 @@
+"""Host-side graph container + ETL (paper Sec. 4 "Inputs").
+
+The paper's ETL: directed inputs are symmetrized, duplicate edges and
+self-loops removed.  We reproduce that pipeline in vectorized NumPy.
+Vertex counts are padded to a multiple of 32 so frontier bitmaps pack into
+whole uint32 words and 1D partition boundaries can sit on word boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+WORD_BITS = 32
+
+
+def _pad32(n: int) -> int:
+    return (n + WORD_BITS - 1) // WORD_BITS * WORD_BITS
+
+
+@dataclasses.dataclass
+class Graph:
+    """CSR graph.  ``src``/``dst`` are the COO view sorted by (src, dst);
+    ``row_offsets`` indexes it as CSR.  Always deduplicated, no self-loops."""
+
+    n: int  # padded to a multiple of 32; trailing vertices are isolated
+    n_real: int
+    src: np.ndarray  # int32[E]
+    dst: np.ndarray  # int32[E]
+    row_offsets: np.ndarray  # int64[n + 1]
+    symmetric: bool = True
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def out_degree(self) -> np.ndarray:
+        return np.diff(self.row_offsets).astype(np.int32)
+
+    @property
+    def n_words(self) -> int:
+        return self.n // WORD_BITS
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.dst[self.row_offsets[v] : self.row_offsets[v + 1]]
+
+    def validate(self) -> None:
+        assert self.n % WORD_BITS == 0
+        assert self.row_offsets.shape == (self.n + 1,)
+        assert self.row_offsets[-1] == self.n_edges
+        assert np.all(np.diff(self.row_offsets) >= 0)
+        if self.n_edges:
+            assert self.src.min() >= 0 and self.src.max() < self.n
+            assert self.dst.min() >= 0 and self.dst.max() < self.n
+            assert np.all(self.src != self.dst), "self-loops survived ETL"
+        if self.symmetric and self.n_edges:
+            fwd = (self.src.astype(np.int64) << 32) | self.dst.astype(np.int64)
+            rev = (self.dst.astype(np.int64) << 32) | self.src.astype(np.int64)
+            assert np.array_equal(np.sort(fwd), np.sort(rev)), "not symmetric"
+
+
+def from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n: int,
+    *,
+    symmetrize: bool = True,
+) -> Graph:
+    """ETL: (optionally) symmetrize, drop self-loops, dedup, sort, build CSR."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    n_pad = max(_pad32(n), WORD_BITS)
+    key = (src << 32) | dst
+    key = np.unique(key)
+    src = (key >> 32).astype(np.int32)
+    dst = (key & 0xFFFFFFFF).astype(np.int32)
+    row_offsets = np.zeros(n_pad + 1, dtype=np.int64)
+    counts = np.bincount(src, minlength=n_pad)
+    row_offsets[1:] = np.cumsum(counts)
+    g = Graph(
+        n=n_pad,
+        n_real=n,
+        src=src,
+        dst=dst,
+        row_offsets=row_offsets,
+        symmetric=symmetrize,
+    )
+    g.validate()
+    return g
+
+
+def in_csr(g: Graph):
+    """(in_offsets, in_src) — the CSC view (edges grouped by destination).
+    For symmetric graphs this equals the CSR with endpoints swapped."""
+    order = np.lexsort((g.src, g.dst))
+    in_src = g.src[order]
+    by_dst = g.dst[order]
+    counts = np.bincount(by_dst, minlength=g.n)
+    in_offsets = np.zeros(g.n + 1, dtype=np.int64)
+    in_offsets[1:] = np.cumsum(counts)
+    return in_offsets, in_src, by_dst
+
+
+def largest_component_root(g: Graph, rng: np.random.Generator) -> int:
+    """Pick a random root inside the largest connected component (paper
+    Sec. 4 picks roots whose traversal covers the big component)."""
+    comp = connected_components(g)
+    largest = np.bincount(comp[: g.n_real]).argmax()
+    candidates = np.flatnonzero(comp[: g.n_real] == largest)
+    return int(rng.choice(candidates))
+
+
+def connected_components(g: Graph) -> np.ndarray:
+    """Union-find components (host oracle for tests + root selection)."""
+    parent = np.arange(g.n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    for u, v in zip(g.src.tolist(), g.dst.tolist()):
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    roots = np.array([find(i) for i in range(g.n)])
+    _, labels = np.unique(roots, return_inverse=True)
+    return labels

@@ -1,0 +1,201 @@
+"""1D edge-balanced partitioning (paper Sec. 4 "Graph Partitioning").
+
+The paper: "a straightforward 1D partitioning scheme where we divide the
+vertices to the multiple GPUs such that each GPU gets a near equal number of
+edges and the vertices are consecutive in their ids."  We reproduce exactly
+that, with two TPU-specific refinements:
+
+* partition boundaries are rounded to multiples of 32 so each device's owned
+  vertex range is a whole number of frontier-bitmap words;
+* per-device edge arrays are padded to a common static shape (XLA needs
+  static shapes) and stacked into ``[P, Emax]`` so a single ``shard_map``
+  consumes them with the leading axis sharded over the device mesh.
+
+Out-edges are kept sorted by (src, dst) — gather locality for top-down —
+and in-edges sorted by (dst, src) — scatter locality for bottom-up (the
+degree-uniform layout that stands in for the paper's LRB load balancing,
+see DESIGN.md Sec. 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.graph import csr
+
+WORD_BITS = 32
+
+
+@dataclasses.dataclass
+class PartitionedGraph:
+    """Static-shape, device-stacked view of a 1D-partitioned graph.
+
+    All ``[P, ...]`` arrays are sharded over the (flattened) device axis by
+    the BFS ``shard_map``; scalars are replicated Python ints.
+    """
+
+    p: int
+    n: int  # global vertex count (multiple of 32)
+    n_words: int  # bitmap words EXCHANGED (includes slack, multiple of 128)
+    n_edges: int  # global directed edge count
+    vmax: int  # max owned vertices per device
+    emax: int  # max owned edges per device (same pad for out and in)
+    v_start: np.ndarray  # int32[P]
+    v_count: np.ndarray  # int32[P]
+    word_start: np.ndarray  # int32[P] == v_start // 32
+    wmax: int  # max owned bitmap words per device
+    edge_src: np.ndarray  # int32[P, emax]   out-edges, sorted by (src, dst)
+    edge_dst: np.ndarray  # int32[P, emax]
+    edge_count: np.ndarray  # int32[P]
+    in_src: np.ndarray  # int32[P, emax]   in-edges, sorted by (dst, src)
+    in_dst: np.ndarray  # int32[P, emax]
+    in_count: np.ndarray  # int32[P]
+    deg_out: np.ndarray  # int32[P, vmax]  out-degree of owned vertices
+
+    def owner_of(self, v: int) -> int:
+        return int(np.searchsorted(self.v_start, v, side="right") - 1)
+
+    def arrays(self) -> dict:
+        """The pytree handed to the distributed BFS step."""
+        return dict(
+            v_start=self.v_start,
+            v_count=self.v_count,
+            word_start=self.word_start,
+            edge_src=self.edge_src,
+            edge_dst=self.edge_dst,
+            edge_count=self.edge_count,
+            in_src=self.in_src,
+            in_dst=self.in_dst,
+            in_count=self.in_count,
+            deg_out=self.deg_out,
+        )
+
+
+def _round32(x: int) -> int:
+    return (x + WORD_BITS - 1) // WORD_BITS * WORD_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticShapes:
+    """Shape-only stand-in for :class:`PartitionedGraph` (dry-run: lower +
+    compile the distributed BFS with ShapeDtypeStructs, no graph ETL).
+
+    Sizing rules (documented in EXPERIMENTS.md §Dry-run): edges are
+    1D-balanced with 15% slack; a Kronecker partition can own up to ~4× the
+    mean vertex count (degree skew pushes edge-balanced cuts off the uniform
+    grid), hence ``vmax = 4 * n/p``.
+    """
+
+    p: int
+    n: int
+    n_edges: int
+    n_words: int
+    vmax: int
+    emax: int
+    wmax: int
+
+    def array_shapes(self) -> dict:
+        p, emax, vmax = self.p, self.emax, self.vmax
+        return dict(
+            v_start=(p,),
+            v_count=(p,),
+            word_start=(p,),
+            edge_src=(p, emax),
+            edge_dst=(p, emax),
+            edge_count=(p,),
+            in_src=(p, emax),
+            in_dst=(p, emax),
+            in_count=(p,),
+            deg_out=(p, vmax),
+        )
+
+
+def synthetic_shapes(n: int, m_directed: int, p: int, *, lane_pad: int = 128,
+                     slack: float = 1.15, vskew: float = 4.0) -> SyntheticShapes:
+    n_pad = _round32(n)
+    emax = int(m_directed / p * slack)
+    emax = (emax + lane_pad - 1) // lane_pad * lane_pad
+    vmax = _round32(int(n_pad / p * vskew))
+    wmax = vmax // WORD_BITS
+    n_words = n_pad // WORD_BITS + wmax
+    n_words = (n_words + lane_pad - 1) // lane_pad * lane_pad
+    return SyntheticShapes(
+        p=p, n=n_pad, n_edges=m_directed, n_words=n_words,
+        vmax=vmax, emax=emax, wmax=wmax,
+    )
+
+
+def partition_1d(g: csr.Graph, p: int, *, lane_pad: int = 128) -> PartitionedGraph:
+    """Split vertices into ``p`` contiguous ranges with near-equal edges."""
+    cum = g.row_offsets  # int64[n+1], cumulative out-degree
+    bounds: List[int] = [0]
+    for i in range(1, p):
+        target = g.n_edges * i // p
+        b = int(np.searchsorted(cum, target, side="left"))
+        b = min(max(_round32(b), bounds[-1]), g.n)
+        bounds.append(b)
+    bounds.append(g.n)
+    v_start = np.array(bounds[:-1], dtype=np.int32)
+    v_end = np.array(bounds[1:], dtype=np.int32)
+    v_count = v_end - v_start
+
+    # --- out-edges per device (already sorted by (src, dst) globally)
+    e_lo = cum[v_start]
+    e_hi = cum[v_end]
+    edge_count = (e_hi - e_lo).astype(np.int32)
+
+    # --- in-edges per device (CSC view, grouped by destination)
+    in_offsets, in_src_all, in_dst_all = csr.in_csr(g)
+    ie_lo = in_offsets[v_start]
+    ie_hi = in_offsets[v_end]
+    in_count = (ie_hi - ie_lo).astype(np.int32)
+
+    emax = int(max(1, max(edge_count.max(initial=0), in_count.max(initial=0))))
+    emax = (emax + lane_pad - 1) // lane_pad * lane_pad
+    vmax = int(max(WORD_BITS, v_count.max(initial=0)))
+    vmax = _round32(vmax)
+    wmax = vmax // WORD_BITS
+
+    edge_src = np.zeros((p, emax), dtype=np.int32)
+    edge_dst = np.zeros((p, emax), dtype=np.int32)
+    in_src = np.zeros((p, emax), dtype=np.int32)
+    in_dst = np.zeros((p, emax), dtype=np.int32)
+    deg_out = np.zeros((p, vmax), dtype=np.int32)
+    degrees = g.out_degree
+    for i in range(p):
+        s, e = int(e_lo[i]), int(e_hi[i])
+        edge_src[i, : e - s] = g.src[s:e]
+        edge_dst[i, : e - s] = g.dst[s:e]
+        s, e = int(ie_lo[i]), int(ie_hi[i])
+        in_src[i, : e - s] = in_src_all[s:e]
+        in_dst[i, : e - s] = in_dst_all[s:e]
+        deg_out[i, : v_count[i]] = degrees[v_start[i] : v_end[i]]
+
+    # Exchanged bitmap length: whole graph + one device window of slack so
+    # every device can dynamic-slice its aligned [word_start, word_start+wmax)
+    # window without clamping; padded to the 128-lane boundary.
+    n_words = g.n // WORD_BITS + wmax
+    n_words = (n_words + lane_pad - 1) // lane_pad * lane_pad
+
+    return PartitionedGraph(
+        p=p,
+        n=g.n,
+        n_words=n_words,
+        n_edges=g.n_edges,
+        vmax=vmax,
+        emax=emax,
+        v_start=v_start,
+        v_count=v_count,
+        word_start=(v_start // WORD_BITS).astype(np.int32),
+        wmax=wmax,
+        edge_src=edge_src,
+        edge_dst=edge_dst,
+        edge_count=edge_count,
+        in_src=in_src,
+        in_dst=in_dst,
+        in_count=in_count,
+        deg_out=deg_out,
+    )

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the BFS traversal hot spots (paper phase 1 +
+butterfly merge): frontier gather/scatter + bitmap OR-reduce.
+jit wrappers in ops.py; pure-jnp oracles in ref.py; ETL layouts in blocks.py.
+"""

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frontier as fr
+
+
+def bitmap_or_reduce(stack: jax.Array) -> jax.Array:
+    """OR-reduce a [K, W] stack of packed bitmaps -> [W]."""
+    out = stack[0]
+    for k in range(1, stack.shape[0]):
+        out = out | stack[k]
+    return out
+
+
+def frontier_gather(words: jax.Array, block_ws: jax.Array, src_local: jax.Array, ww: int) -> jax.Array:
+    """Windowed bit-gather oracle.
+
+    ``src_local[b, e]`` is a bit index relative to window ``block_ws[b]*ww``
+    words; returns bool[NB, EB]."""
+    gsrc = block_ws[:, None].astype(jnp.int64) * (ww * 32) + src_local.astype(jnp.int64)
+    return fr.get_bits(words, gsrc.astype(jnp.int32).reshape(-1)).reshape(src_local.shape)
+
+
+def frontier_gather_full(words: jax.Array, src: jax.Array) -> jax.Array:
+    """Full-bitmap gather oracle: bool at vertex ids ``src`` (any shape)."""
+    return fr.get_bits(words, src.reshape(-1)).reshape(src.shape)
+
+
+def frontier_scatter(
+    active: jax.Array,
+    block_win: jax.Array,
+    dst_local: jax.Array,
+    n_windows: int,
+    ww: int,
+) -> jax.Array:
+    """Windowed scatter-OR oracle -> packed uint32[n_windows * ww].
+
+    ``dst_local[b, e] == ww*32`` marks an invalid (padding) slot."""
+    bits = ww * 32
+    valid = (dst_local < bits) & active.astype(bool)
+    gdst = block_win[:, None].astype(jnp.int64) * bits + jnp.minimum(dst_local, bits - 1)
+    dense = jnp.zeros((n_windows * bits,), jnp.bool_)
+    dense = dense.at[gdst.reshape(-1).astype(jnp.int32)].max(valid.reshape(-1))
+    return fr.pack(dense)

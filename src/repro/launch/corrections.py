@@ -1,0 +1,50 @@
+"""Analytic roofline corrections for scans that survive analysis mode.
+
+In analysis mode (``cfg.scan_unroll``) every layer scan is fully unrolled
+and every inner scan with <= 8 trips unrolls too, so XLA ``cost_analysis``
+counts them exactly.  The ONE remaining undercount is the query-chunk scan
+inside prefill attention when ``n_chunks > 8`` (prefill_32k: 32 trips):
+cost_analysis counts its body once, i.e. 1/n of the true score flops.
+
+This module adds back the missing ``(n-1)`` bodies with the exact matmul
+formula (scores + PV: ``4·B·Hq·C·Lk·hd`` flops per chunk; KV bytes re-read
+per chunk).  The chunking plan is imported from ``layers.attn_chunking`` so
+the correction can never drift from the model code.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import attn_chunking
+
+
+def _layer_correction(cfg: ModelConfig, b: int, l: int, is_global: bool):
+    q_chunk, n, unroll = attn_chunking(cfg, l, causal=True)
+    if n == 1 or unroll == n:  # exact in HLO
+        return 0.0, 0.0
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    lk = l if is_global else (cfg.local_window + q_chunk)
+    flops_per_chunk = 4.0 * b * hq * q_chunk * lk * hd
+    kv_bytes_per_chunk = 2.0 * b * lk * hk * hd * 2  # bf16 k + v
+    return (n - 1) * flops_per_chunk, (n - 1) * kv_bytes_per_chunk
+
+
+def prefill_corrections(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, float]:
+    """Global (all-chips) flops/bytes to ADD to the HLO-derived terms."""
+    if shape.kind != "prefill":
+        return {"flops": 0.0, "bytes": 0.0}
+    b, l = shape.global_batch, shape.seq_len
+    flops = byts = 0.0
+    if cfg.family == "audio":
+        # decoder self-attention layers (encoder is single-chunk: exact)
+        f1, b1 = _layer_correction(cfg, b, l, is_global=True)
+        return {"flops": cfg.n_layers * f1, "bytes": cfg.n_layers * b1}
+    for i in range(cfg.n_layers):
+        if not cfg.is_attn_layer(i):
+            continue
+        f1, b1 = _layer_correction(cfg, b, l, cfg.is_global_attn_layer(i))
+        flops += f1
+        byts += b1
+    return {"flops": flops, "bytes": byts}

@@ -1,0 +1,435 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (brief deliverable e).
+
+For every (architecture × input shape × mesh): build ShapeDtypeStruct
+stand-ins (no allocation), ``jit(step).lower(...).compile()``, print
+``memory_analysis()`` + ``cost_analysis()``, extract the three roofline
+terms, and write one JSON per cell under ``experiments/dryrun/``.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch butterfly-bfs --mesh single
+
+The two lines above this docstring MUST stay first: jax locks the device
+count on first init, and only the dry-run wants 512 host devices.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import numpy as np
+
+
+def _cell_record(**kw) -> Dict:
+    return dict(kw)
+
+
+def input_specs(arch: str, shape_name: str, mesh, rules):
+    """Brief-named helper: ShapeDtypeStruct stand-ins for every model input
+    of this (arch, shape) cell — weak-type-correct, shardable, no device
+    allocation."""
+    from repro import configs
+    from repro.configs.base import SHAPES
+    from repro.dist import sharding as shd
+    from repro.models import api
+
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    out = {
+        "inputs": shd.tree_structs(api.input_defs(cfg, shape), cfg.compute_dtype, rules, mesh)
+    }
+    if shape.kind == "decode":
+        out["cache"] = shd.tree_structs(
+            api.cache_defs(cfg, shape), cfg.compute_dtype, rules, mesh
+        )
+    return out
+
+
+def _parse_overrides(s: Optional[str]) -> Dict:
+    """--override 'ring_local_cache=True,train_microbatches=8'"""
+    out = {}
+    if not s:
+        return out
+    for kv in s.split(","):
+        k, v = kv.split("=")
+        out[k.strip()] = eval(v)  # noqa: S307 — trusted CLI input
+    return out
+
+
+def run_lm_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: str,
+    *,
+    grad_sync: str = "xla",
+    fanout: int = 2,
+    overrides: Optional[Dict] = None,
+    tag_suffix: str = "",
+    analysis: bool = True,
+    verbose: bool = True,
+) -> Dict:
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import configs
+    from repro.configs.base import SHAPES, shape_supported
+    from repro.dist import sharding as shd
+    from repro.dist.sharding import rules_for_mesh
+    from repro.launch import hlo_stats
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import api
+    from repro.train import optim
+    from repro.train import step as step_mod
+
+    import dataclasses as _dc
+
+    cfg = _dc.replace(configs.get_config(arch), scan_unroll=True,
+                      **(overrides or {}))
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}" + (f"__{tag_suffix}" if tag_suffix else "")
+    ok, reason = shape_supported(cfg, shape)
+    rec = _cell_record(
+        arch=arch, shape=shape_name, mesh=mesh_name, kind=shape.kind,
+        grad_sync=grad_sync, overrides=overrides or {}, tag=tag_suffix,
+        status="skip" if not ok else "pending",
+    )
+    if not ok:
+        rec["skip_reason"] = reason
+        _write(out_dir, mesh_name, tag, rec)
+        if verbose:
+            print(f"[{mesh_name}] {tag}: SKIP ({reason.split(':')[0]})")
+        return rec
+
+    try:
+        from repro.launch import analytic, corrections as corr
+
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = int(np.prod(list(mesh.shape.values())))
+        rules = rules_for_mesh(mesh, cfg.fsdp and grad_sync == "xla")
+        repl = NamedSharding(mesh, P())
+        scalar = jax.ShapeDtypeStruct((), np.int32, sharding=repl)
+
+        def build(c):
+            pdefs = api.param_defs(c)
+            params = shd.tree_structs(pdefs, c.param_dtype, rules, mesh)
+            if shape.kind == "train":
+                opt_defs = optim.get(c.optimizer).state_defs(pdefs)
+                opt_state = shd.tree_structs(opt_defs, "float32", rules, mesh)
+                batch = shd.tree_structs(
+                    api.input_defs(c, shape), c.compute_dtype, rules, mesh
+                )
+                # microbatching is a runtime-memory knob; per-step flop
+                # totals are identical, so the analysis compile uses mb=1
+                # (base.py `train_microbatches` docstring)
+                mb = 1 if c.scan_unroll else c.train_microbatches
+                if grad_sync == "xla":
+                    fn = step_mod.build_train_step(
+                        c, mesh=mesh, rules=rules, microbatches=mb
+                    )
+                else:
+                    fn = step_mod.build_train_step_butterfly(
+                        c, mesh, rules, method=grad_sync, fanout=fanout,
+                        microbatches=mb,
+                    )
+                return jax.jit(fn, donate_argnums=(0, 1)), (
+                    params, opt_state, batch, scalar,
+                )
+            if shape.kind == "prefill":
+                batch = shd.tree_structs(
+                    api.input_defs(c, shape), c.compute_dtype, rules, mesh
+                )
+                return jax.jit(api.prefill_fn(c, rules, mesh)), (params, batch)
+            cache = shd.tree_structs(
+                api.cache_defs(c, shape), c.compute_dtype, rules, mesh
+            )
+            ins = shd.tree_structs(
+                api.input_defs(c, shape), c.compute_dtype, rules, mesh
+            )
+            return (
+                jax.jit(api.decode_fn(c, rules, mesh), donate_argnums=(1,)),
+                (params, cache, ins["token"], ins["pos"]),
+            )
+
+        # --- compile 1: RUNTIME config (scans) -> memory fit + step compile
+        import dataclasses as _dc2
+
+        run_cfg = _dc2.replace(cfg, scan_unroll=False)
+        t0 = time.time()
+        jfn, args = build(run_cfg)
+        compiled_run = jfn.lower(*args).compile()
+        t_run = time.time() - t0
+        mem = hlo_stats.memory_stats(compiled_run)
+        mem_print = compiled_run.memory_analysis()
+        ca_run = compiled_run.cost_analysis() or {}
+        # runtime collectives: per-microbatch FSDP gathers etc. live inside
+        # the microbatch scan (counted once; × microbatches at runtime) —
+        # recorded for the §Perf grad-accum/FSDP coupling analysis
+        cstats_run = hlo_stats.collective_stats(compiled_run.as_text())
+        if not analysis:
+            # compile-proof mode (multi-pod mesh): the roofline table is
+            # single-pod per the brief; one runtime compile proves the
+            # sharding + records memory.
+            rec.update(
+                status="ok", chips=chips, analysis=False,
+                compile_runtime_cfg_s=round(t_run, 1),
+                memory=mem,
+                collectives_runtime=cstats_run,
+                flops_per_device_raw=float(ca_run.get("flops", 0.0)),
+            )
+            if verbose:
+                print(f"[{mesh_name}] {tag}: OK (compile-proof) "
+                      f"compile={t_run:.0f}s "
+                      f"mem/dev={mem['peak_bytes_per_device']/2**30:.2f}GiB")
+                print("  memory_analysis:", mem_print)
+            del compiled_run
+            _write(out_dir, mesh_name, tag, rec)
+            return rec
+        del compiled_run
+
+        # --- compile 2: ANALYSIS config (unrolled) -> flops + collectives
+        t0 = time.time()
+        jfn, args = build(cfg)
+        compiled = jfn.lower(*args).compile()
+        t_compile = time.time() - t0
+        hlo = compiled.as_text()
+        _save_hlo(out_dir, mesh_name, tag, hlo)
+        ca = compiled.cost_analysis() or {}
+        cstats = hlo_stats.collective_stats(hlo)
+        wire_b = sum(v["wire_bytes"] for v in cstats.values())
+        op_b = sum(v["operand_bytes"] for v in cstats.values())
+        c = corr.prefill_corrections(cfg, shape)
+        flops_dev = hlo_stats.dot_flops(hlo) + c["flops"] / chips
+        ana = analytic.step_bytes(cfg, shape)
+        bytes_dev = ana["global"] / chips
+        t_compute = flops_dev / hlo_stats.PEAK_FLOPS
+        t_memory = bytes_dev / hlo_stats.HBM_BW
+        t_coll = wire_b / hlo_stats.ICI_BW
+        terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        step_time = max(terms.values())
+        mf = api.model_flops(cfg, shape)
+        counts = api.param_counts(cfg)
+        hlo_flops_global = flops_dev * chips
+        rec.update(
+            status="ok",
+            chips=chips,
+            compile_s=round(t_compile, 1),
+            compile_runtime_cfg_s=round(t_run, 1),
+            memory=mem,
+            flops_per_device=flops_dev,
+            flops_per_device_raw=float(ca.get("flops", 0.0)),
+            bytes_per_device=bytes_dev,
+            bytes_per_device_raw=float(ca.get("bytes accessed", 0.0)),
+            collective_operand_bytes=op_b,
+            collective_wire_bytes=wire_b,
+            collectives=cstats,
+            collectives_runtime=cstats_run,
+            runtime_microbatches=(
+                run_cfg.train_microbatches if shape.kind == "train" else 1
+            ),
+            t_compute=t_compute,
+            t_memory=t_memory,
+            t_collective=t_coll,
+            dominant=dominant,
+            step_time_est=step_time,
+            model_flops=mf,
+            params_total=counts["total"],
+            params_active=counts["active"],
+            useful_flops_ratio=(mf / hlo_flops_global) if hlo_flops_global else 0.0,
+            roofline_fraction=(
+                (mf / chips / hlo_stats.PEAK_FLOPS) / step_time
+                if step_time > 0
+                else 0.0
+            ),
+        )
+        if verbose:
+            print(f"[{mesh_name}] {tag}: OK compile={t_run:.0f}s+{t_compile:.0f}s "
+                  f"mem/dev={mem['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"dom={dominant} "
+                  f"t=({t_compute*1e3:.1f},{t_memory*1e3:.1f},"
+                  f"{t_coll*1e3:.1f})ms "
+                  f"MF/HLO={rec['useful_flops_ratio']:.2f} "
+                  f"roofline={rec['roofline_fraction']*100:.1f}%")
+            print("  memory_analysis:", mem_print)
+            print("  cost_analysis: dot_flops=%.3e raw_flops=%.3e raw_bytes=%.3e"
+                  % (flops_dev, ca.get("flops", 0), ca.get("bytes accessed", 0)))
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[{mesh_name}] {tag}: FAIL {type(e).__name__}: {str(e)[:300]}")
+    _write(out_dir, mesh_name, tag, rec)
+    return rec
+
+
+def run_bfs_cell(
+    multi_pod: bool,
+    out_dir: str,
+    *,
+    scale: int = 29,
+    edge_factor: int = 8,
+    fanout: int = 4,
+    sync: str = "butterfly",
+    verbose: bool = True,
+) -> Dict:
+    """The paper's own workload on the production mesh: distributed BFS with
+    butterfly frontier synchronization over all mesh axes."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import bfs
+    from repro.graph.partition import synthetic_shapes
+    from repro.launch import hlo_stats
+    from repro.launch.mesh import make_production_mesh
+
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"butterfly-bfs__kron{scale}_ef{edge_factor}_f{fanout}_{sync}"
+    rec = _cell_record(
+        arch="butterfly-bfs", shape=f"kron{scale}_ef{edge_factor}",
+        mesh=mesh_name, kind="bfs", sync=sync, fanout=fanout, status="pending",
+    )
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        axes = tuple(mesh.axis_names)
+        chips = int(np.prod(list(mesh.shape.values())))
+        shapes = synthetic_shapes(1 << scale, 2 * (1 << scale) * edge_factor, chips)
+        cfg = bfs.BFSConfig(axes=axes, fanout=fanout, sync=sync,
+                            mode="top_down", max_levels=64)
+        spec = P(axes if len(axes) > 1 else axes[0])
+        sh = NamedSharding(mesh, spec)
+        arrays = {
+            k: jax.ShapeDtypeStruct(v, np.int32, sharding=sh)
+            for k, v in shapes.array_shapes().items()
+        }
+        root = jax.ShapeDtypeStruct((), np.int32, sharding=NamedSharding(mesh, P()))
+        t0 = time.time()
+        fn = bfs.build_bfs_fn(shapes, mesh, cfg)
+        lowered = fn.lower(arrays, root)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = hlo_stats.memory_stats(compiled)
+        hlo = compiled.as_text()
+        _save_hlo(out_dir, mesh_name, tag, hlo)
+        roof = hlo_stats.roofline_from(compiled, hlo)
+        rec.update(
+            status="ok", chips=chips,
+            n_vertices=shapes.n, n_edges=shapes.n_edges,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=mem,
+            flops_per_device=roof.flops_per_device,
+            bytes_per_device=roof.bytes_per_device,
+            collective_operand_bytes=roof.collective_operand_bytes,
+            collective_wire_bytes=roof.collective_wire_bytes,
+            collectives=hlo_stats.collective_stats(hlo),
+            t_compute=roof.t_compute, t_memory=roof.t_memory,
+            t_collective=roof.t_collective, dominant=roof.dominant,
+        )
+        if verbose:
+            print(f"[{mesh_name}] {tag}: OK compile={t_compile:.0f}s "
+                  f"mem/dev={mem['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"dom={roof.dominant}")
+            print("  memory_analysis:", compiled.memory_analysis())
+    except Exception as e:
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[{mesh_name}] {tag}: FAIL {type(e).__name__}: {str(e)[:300]}")
+    _write(out_dir, mesh_name, tag, rec)
+    return rec
+
+
+def _write(out_dir: str, mesh_name: str, tag: str, rec: Dict) -> None:
+    d = os.path.join(out_dir, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, f"{tag}.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def _save_hlo(out_dir: str, mesh_name: str, tag: str, hlo: str) -> None:
+    """Persist the optimized HLO (gzip) so roofline parsers can be re-run
+    without recompiling (launch/reroof.py)."""
+    import gzip
+
+    d = os.path.join(out_dir, mesh_name, "hlo")
+    os.makedirs(d, exist_ok=True)
+    with gzip.open(os.path.join(d, f"{tag}.hlo.gz"), "wt") as f:
+        f.write(hlo)
+
+
+def main(argv=None) -> int:
+    from repro import configs
+    from repro.configs.base import SHAPES
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id | all | butterfly-bfs (comma-separated ok)")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--grad-sync", default="xla",
+                    choices=["xla", "butterfly", "rabenseifner", "all_to_all"])
+    ap.add_argument("--fanout", type=int, default=2)
+    ap.add_argument("--bfs-scale", type=int, default=29)
+    ap.add_argument("--bfs-ef", type=int, default=8)
+    ap.add_argument("--bfs-sync", default="butterfly")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", default=None,
+                    help="ModelConfig overrides, e.g. 'ring_local_cache=True'")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output file (perf variants)")
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="compile-proof only (skip the unrolled analysis "
+                         "compile; used for the multi-pod mesh)")
+    args = ap.parse_args(argv)
+    overrides = _parse_overrides(args.override)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = (
+        configs.ARCH_NAMES if args.arch == "all" else args.arch.split(",")
+    )
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+
+    n_fail = 0
+    for mp in meshes:
+        mesh_name = "multi" if mp else "single"
+        for arch in archs:
+            if arch == "butterfly-bfs":
+                rec = run_bfs_cell(
+                    mp, args.out, scale=args.bfs_scale, edge_factor=args.bfs_ef,
+                    fanout=args.fanout, sync=args.bfs_sync,
+                )
+                n_fail += rec["status"] == "fail"
+                continue
+            for shp in shapes:
+                fname = f"{arch}__{shp}" + (f"__{args.tag}" if args.tag else "")
+                tagfile = os.path.join(args.out, mesh_name, f"{fname}.json")
+                if args.skip_existing and os.path.exists(tagfile):
+                    try:
+                        st = json.load(open(tagfile)).get("status")
+                    except Exception:
+                        st = None
+                    if st in ("ok", "skip"):
+                        print(f"[{mesh_name}] {arch}__{shp}: cached ({st})")
+                        continue
+                rec = run_lm_cell(
+                    arch, shp, mp, args.out,
+                    grad_sync=args.grad_sync, fanout=args.fanout,
+                    overrides=overrides, tag_suffix=args.tag,
+                    analysis=not args.no_analysis,
+                )
+                n_fail += rec["status"] == "fail"
+    print(f"dry-run done; failures: {n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,25 @@
+"""Production mesh builders (brief: MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state.  The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* importing
+jax; everything else (tests, benchmarks) sees the real device count.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist, as a 1-D data mesh (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,82 @@
+"""Recompute roofline fields from the SAVED optimized HLO (no recompile).
+
+Every dry-run cell persists its analysis-mode HLO under
+``experiments/dryrun/<mesh>/hlo/<tag>.hlo.gz``; when the parsers in
+hlo_stats / corrections / analytic evolve, this re-derives the JSON fields
+in seconds instead of re-running hour-long compiles.
+
+    PYTHONPATH=src python -m repro.launch.reroof [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import gzip
+import json
+import os
+
+
+def reroof_cell(json_path: str, hlo_path: str) -> bool:
+    from repro import configs
+    from repro.configs.base import SHAPES
+    from repro.launch import analytic, corrections as corr, hlo_stats
+    from repro.models import api
+
+    with open(json_path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok" or rec.get("kind") == "bfs":
+        return False
+    cfg = dataclasses.replace(configs.get_config(rec["arch"]), scan_unroll=True)
+    shape = SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    with gzip.open(hlo_path, "rt") as f:
+        hlo = f.read()
+    cstats = hlo_stats.collective_stats(hlo)
+    wire_b = sum(v["wire_bytes"] for v in cstats.values())
+    c = corr.prefill_corrections(cfg, shape)
+    flops_dev = hlo_stats.dot_flops(hlo) + c["flops"] / chips
+    bytes_dev = analytic.step_bytes(cfg, shape)["global"] / chips
+    t_compute = flops_dev / hlo_stats.PEAK_FLOPS
+    t_memory = bytes_dev / hlo_stats.HBM_BW
+    t_coll = wire_b / hlo_stats.ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    step_time = max(terms.values())
+    mf = api.model_flops(cfg, shape)
+    rec.update(
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_wire_bytes=wire_b,
+        collective_operand_bytes=sum(v["operand_bytes"] for v in cstats.values()),
+        collectives=cstats,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+        dominant=max(terms, key=terms.get),
+        step_time_est=step_time,
+        model_flops=mf,
+        useful_flops_ratio=mf / (flops_dev * chips) if flops_dev else 0.0,
+        roofline_fraction=(mf / chips / hlo_stats.PEAK_FLOPS) / step_time
+        if step_time > 0 else 0.0,
+    )
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+    n = 0
+    for mesh in ("single", "multi"):
+        for jp in glob.glob(os.path.join(args.dir, mesh, "*.json")):
+            tag = os.path.splitext(os.path.basename(jp))[0]
+            hp = os.path.join(args.dir, mesh, "hlo", f"{tag}.hlo.gz")
+            if os.path.exists(hp) and reroof_cell(jp, hp):
+                n += 1
+    print(f"re-derived roofline fields for {n} cells")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

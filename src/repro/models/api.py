@@ -1,0 +1,150 @@
+"""Family-dispatching model API.
+
+One entry point per step kind, uniform across all ten architectures:
+
+  * ``train_loss_fn(cfg)``   -> f(params, batch)              (train_4k)
+  * ``prefill_fn(cfg)``      -> f(params, inputs)             (prefill_32k)
+  * ``decode_fn(cfg)``       -> f(params, cache, token, pos)  (decode_* cells)
+
+plus declarative shape/spec builders consumed by the launcher and dry-run:
+``param_defs`` / ``input_defs`` / ``cache_defs`` (pytrees of PD).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding as shd
+from repro.dist.sharding import PD
+from repro.models import encdec, lm
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    return encdec.param_defs(cfg) if cfg.family == "audio" else lm.param_defs(cfg)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    return shd.tree_init(param_defs(cfg), rng, cfg.param_dtype)
+
+
+def input_defs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Step inputs (excluding params/cache) as PD descriptors."""
+    b, l = shape.global_batch, shape.seq_len
+    tok = lambda ln: PD((b, ln), ("batch", None), "zeros", dtype="int32")
+    if shape.kind in ("train", "prefill"):
+        d: Dict = {}
+        if cfg.family == "audio":
+            d["frames"] = PD(
+                (b, cfg.n_frames, cfg.d_model), ("batch", None, "embed"), "normal"
+            )
+            d["tokens"] = tok(l)
+        elif cfg.family == "vlm":
+            d["patches"] = PD(
+                (b, cfg.n_patches, cfg.patch_dim), ("batch", None, None), "normal"
+            )
+            d["tokens"] = tok(l - cfg.n_patches)
+        else:
+            d["tokens"] = tok(l)
+        if shape.kind == "train":
+            d["labels"] = PD(d["tokens"].shape, ("batch", None), "zeros", dtype="int32")
+        return d
+    # decode: one new token against a seq_len cache
+    return {
+        "token": PD((b, 1), ("batch", None), "zeros", dtype="int32"),
+        "pos": PD((), (), "zeros", dtype="int32"),
+    }
+
+
+def cache_defs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    long_ctx = shape.global_batch == 1
+    mk = encdec.decode_cache_defs if cfg.family == "audio" else lm.decode_cache_defs
+    return mk(cfg, shape.global_batch, shape.seq_len, long_ctx)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def train_loss_fn(cfg: ModelConfig, rules=None, mesh=None):
+    mod = encdec if cfg.family == "audio" else lm
+
+    def f(params, batch):
+        return mod.train_loss(cfg, params, batch, rules=rules, mesh=mesh)
+
+    return f
+
+
+def prefill_fn(cfg: ModelConfig, rules=None, mesh=None):
+    if cfg.family == "audio":
+
+        def f(params, inputs):
+            return encdec.prefill(
+                cfg, params, inputs["tokens"], frames=inputs["frames"],
+                rules=rules, mesh=mesh,
+            )
+
+    else:
+
+        def f(params, inputs):
+            return lm.prefill(
+                cfg, params, inputs["tokens"], patches=inputs.get("patches"),
+                rules=rules, mesh=mesh,
+            )
+
+    return f
+
+
+def decode_fn(cfg: ModelConfig, rules=None, mesh=None):
+    mod = encdec if cfg.family == "audio" else lm
+
+    def f(params, cache, token, pos):
+        return mod.decode_step(cfg, params, cache, token, pos, rules=rules, mesh=mesh)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, int]:
+    """total / active / embedding parameter counts (active: MoE top-k only)."""
+    defs = param_defs(cfg)
+    flat = jax.tree.flatten_with_path(defs, is_leaf=lambda x: isinstance(x, PD))[0]
+    total = active = embed = 0
+    frac = (
+        (cfg.experts_per_token / cfg.n_experts) if cfg.n_experts else 1.0
+    )
+    for path, pd in flat:
+        n = int(np.prod(pd.shape))
+        keys = [getattr(k, "key", str(k)) for k in path]
+        total += n
+        if "embed" in keys or "head" in keys:
+            embed += n
+            continue
+        is_expert = any(k in ("wi", "wg", "wo") for k in keys) and any(
+            k == "moe" for k in keys
+        )
+        active += int(n * frac) if is_expert else n
+    return {"total": total, "active": active, "embed": embed}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); D = tokens processed this step."""
+    c = param_counts(cfg)
+    n = c["active"]
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d  # forward only
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,159 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub).
+
+``input_specs`` provides precomputed frame embeddings (B, n_frames, d_model)
+— the paper brief's modality-stub rule.  The encoder is bidirectional; the
+decoder has causal self-attention + cross-attention to the encoder output.
+Decode caches: per-layer self-attn KV + precomputed cross KV.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import PD
+from repro.models import layers
+from repro.models.lm import (
+    _act_spec,
+    _constrain,
+    _stack,
+    chunked_xent,
+    lm_logits,
+)
+
+
+def _enc_block_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": layers.norm_defs(cfg),
+        "attn": layers.attn_defs(cfg),
+        "ln2": layers.norm_defs(cfg),
+        "mlp": layers.mlp_defs(cfg),
+    }
+
+
+def _dec_block_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": layers.norm_defs(cfg),
+        "attn": layers.attn_defs(cfg),
+        "lnx": layers.norm_defs(cfg),
+        "xattn": layers.attn_defs(cfg),
+        "ln2": layers.norm_defs(cfg),
+        "mlp": layers.mlp_defs(cfg),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    return {
+        "embed": {"tok": PD((cfg.padded_vocab, d), ("vocab", "embed"), "normal")},
+        "enc": _stack(_enc_block_defs(cfg), cfg.encoder_layers),
+        "enc_norm": layers.norm_defs(cfg),
+        "groups": {"dec": _stack(_dec_block_defs(cfg), cfg.n_layers)},
+        "final_norm": layers.norm_defs(cfg),
+    }
+
+
+def decode_cache_defs(cfg: ModelConfig, batch: int, s: int, long_ctx=False) -> Dict:
+    hk, hd, n = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_layers
+    seq_l = "long_seq" if long_ctx else "seq"
+    kv = lambda length, sl: {
+        "k": PD((n, batch, length, hk, hd), ("layers", "batch", sl, None, None), "zeros"),
+        "v": PD((n, batch, length, hk, hd), ("layers", "batch", sl, None, None), "zeros"),
+    }
+    return {"self": kv(s, seq_l), "cross": kv(cfg.n_frames, None)}
+
+
+def encode(cfg: ModelConfig, params: Dict, frames: jax.Array, *, rules=None, mesh=None):
+    """frames: (B, n_frames, d_model) stub embeddings -> encoder states."""
+    x = frames.astype(cfg.compute_dtype)
+    aspec = _act_spec(rules)
+
+    def body(carry, p):
+        h, _ = layers.self_attention(
+            cfg, p["attn"], layers.apply_norm(cfg, p["ln1"], carry), causal=False
+        )
+        y = carry + h
+        y = y + layers.mlp(cfg, p["mlp"], layers.apply_norm(cfg, p["ln2"], y))
+        return _constrain(y, mesh, P(*aspec, None, None)), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(body, x, params["enc"],
+                    unroll=cfg.encoder_layers if cfg.scan_unroll else 1)
+    return layers.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _decoder(cfg, params, tokens, enc, *, rules, mesh, want_cache=False):
+    x = (params["embed"]["tok"][tokens]).astype(cfg.compute_dtype)
+    aspec = _act_spec(rules)
+
+    def body(carry, p):
+        h, kv = layers.self_attention(
+            cfg, p["attn"], layers.apply_norm(cfg, p["ln1"], carry)
+        )
+        y = carry + h
+        xkv = layers.cross_kv(cfg, p["xattn"], enc)
+        y = y + layers.cross_attention(
+            cfg, p["xattn"], layers.apply_norm(cfg, p["lnx"], y), xkv
+        )
+        y = y + layers.mlp(cfg, p["mlp"], layers.apply_norm(cfg, p["ln2"], y))
+        y = _constrain(y, mesh, P(*aspec, None, None))
+        return y, (kv, xkv) if want_cache else None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, ys = lax.scan(body, x, params["groups"]["dec"],
+                     unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    return layers.apply_norm(cfg, params["final_norm"], x), ys
+
+
+def train_loss(cfg: ModelConfig, params: Dict, batch: Dict, *, rules=None, mesh=None):
+    enc = encode(cfg, params, batch["frames"], rules=rules, mesh=mesh)
+    h, _ = _decoder(cfg, params, batch["tokens"], enc, rules=rules, mesh=mesh)
+    return chunked_xent(cfg, params, h, batch["labels"])
+
+
+def prefill(cfg: ModelConfig, params: Dict, tokens, *, frames, rules=None, mesh=None):
+    enc = encode(cfg, params, frames, rules=rules, mesh=mesh)
+    h, ys = _decoder(
+        cfg, params, tokens, enc, rules=rules, mesh=mesh, want_cache=True
+    )
+    (k, v), (xk, xv) = ys
+    cache = {"self": {"k": k, "v": v}, "cross": {"k": xk, "v": xv}}
+    return lm_logits(cfg, params, h[:, -1]), cache, jnp.int32(tokens.shape[1])
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, token, pos, *,
+                rules=None, mesh=None):
+    x = (params["embed"]["tok"][token]).astype(cfg.compute_dtype)
+
+    def body(carry, xs):
+        p, ck, cv, xk, xv = xs
+        h, ck, cv = layers.decode_attention(
+            cfg, p["attn"], layers.apply_norm(cfg, p["ln1"], carry), ck, cv, pos
+        )
+        y = carry + h
+        y = y + layers.cross_attention(
+            cfg, p["xattn"], layers.apply_norm(cfg, p["lnx"], y), (xk, xv)
+        )
+        y = y + layers.mlp(cfg, p["mlp"], layers.apply_norm(cfg, p["ln2"], y))
+        return y, (ck, cv)
+
+    x, (ck, cv) = lax.scan(
+        body,
+        x,
+        xs=(
+            params["groups"]["dec"],
+            cache["self"]["k"],
+            cache["self"]["v"],
+            cache["cross"]["k"],
+            cache["cross"]["v"],
+        ),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    new_cache = {"self": {"k": ck, "v": cv}, "cross": cache["cross"]}
+    return lm_logits(cfg, params, x[:, 0]), new_cache

@@ -1,0 +1,354 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, gated MLP.
+
+Attention is written memory-bounded by construction:
+
+* train/prefill: a ``lax.scan`` over query chunks (online per-chunk softmax);
+  sliding-window layers ``dynamic_slice`` only ``window + chunk`` keys per
+  query chunk, so local layers are **sub-quadratic in HLO flops**, not just
+  masked (this is what makes gemma3 long-context cells viable).
+* decode: one-token query against a static cache with a ``pos`` validity
+  mask; the cache sequence axis may be sharded (flash-decoding: XLA emits
+  partial max/sum + small all-reduces for the softmax).
+
+GQA is expressed by reshaping query heads into ``(kv_heads, group)``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import PD
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        x = x * (1.0 + scale.astype(jnp.float32))
+    return x.astype(dt)
+
+
+def layernorm(
+    x: jax.Array,
+    scale: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Parametric LN, or OLMo's non-parametric LN when scale/bias are None."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def norm_defs(cfg: ModelConfig) -> Dict[str, PD]:
+    """Pre-block norm params (empty dict for non-parametric LN)."""
+    if cfg.norm == "layernorm_np":
+        return {}
+    if cfg.norm == "layernorm":
+        return {
+            "scale": PD((cfg.d_model,), ("embed",), "ones"),
+            "bias": PD((cfg.d_model,), ("embed",), "zeros"),
+        }
+    return {"scale": PD((cfg.d_model,), ("embed",), "zeros")}  # rmsnorm (+1)
+
+
+def apply_norm(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm_np":
+        return layernorm(x)
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, H, D); positions: broadcastable to (..., L)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., L, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., L, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ModelConfig) -> Dict[str, PD]:
+    d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": PD((d, hq, hd), ("embed", "heads", None), "scaled"),
+        "wk": PD((d, hk, hd), ("embed", "kv_heads", None), "scaled"),
+        "wv": PD((d, hk, hd), ("embed", "kv_heads", None), "scaled"),
+        "wo": PD((hq, hd, d), ("heads", None, "embed"), "scaled"),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = PD((hd,), (None,), "zeros")
+        p["knorm"] = PD((hd,), (None,), "zeros")
+    return p
+
+
+def _qk_project(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array):
+    """x (..., L, d) -> q (..., L, Hq, D), k/v (..., L, Hk, D) with RoPE."""
+    q = jnp.einsum("...ld,dhk->...lhk", x, p["wq"])
+    k = jnp.einsum("...ld,dhk->...lhk", x, p["wk"])
+    v = jnp.einsum("...ld,dhk->...lhk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qnorm"])
+        k = rmsnorm(k, p["knorm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(
+    q: jax.Array,  # (B, Lq, Hk, G, D)
+    k: jax.Array,  # (B, Lk, Hk, D)
+    v: jax.Array,  # (B, Lk, Hk, D)
+    mask: Optional[jax.Array],  # (B or 1, 1, 1, Lq, Lk) additive or None
+) -> jax.Array:
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = s + mask
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+
+
+def attn_chunking(cfg: ModelConfig, l: int, causal: bool = True):
+    """Query-chunking plan shared with the roofline corrections
+    (launch/corrections.py): (q_chunk, n_chunks, unroll).
+
+    Short or non-causal sequences run in ONE chunk (no scan, exact HLO
+    flops); in analysis mode (cfg.scan_unroll) scans with <= 8 trips unroll
+    fully, longer ones stay scans and get an analytic flops correction."""
+    if not causal or l <= 2048:
+        return l, 1, 1
+    q_chunk = min(1024, l)
+    while l % q_chunk:
+        q_chunk //= 2
+    n = l // q_chunk
+    unroll = n if (cfg.scan_unroll and n <= 8) else 1
+    return q_chunk, n, unroll
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,  # (B, L, d)
+    *,
+    window: Optional[int] = None,  # STATIC sliding window; None = global
+    causal: bool = True,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence self-attention (train / prefill).
+
+    Returns (out (B, L, d), (k, v)) so prefill can keep the cache.
+    Scans over query chunks; when ``window`` is set (a static int — local
+    layers live in their own scan groups, see lm.layer_groups), only a
+    ``window + chunk`` key slice is touched per chunk: local layers are
+    sub-quadratic in actual HLO flops, not just masked.
+    """
+    b, l, d = x.shape
+    hk, hq, hd = cfg.n_kv_heads, cfg.n_heads, cfg.resolved_head_dim
+    g = hq // hk
+    positions = jnp.arange(l, dtype=jnp.int32)[None, :]
+    q, k, v = _qk_project(cfg, p, x, positions)
+    qg = q.reshape(b, l, hk, g, hd)
+
+    q_chunk, n_chunks, unroll = attn_chunking(cfg, l, causal)
+
+    use_window = window is not None and causal and window < l
+    if use_window:
+        # static key-slice length: window + chunk.  Left-pad by WINDOW so
+        # padded index q0 + j holds key (q0 - window + j).
+        klen = window + q_chunk
+        pad = jnp.zeros((b, window, hk, hd), k.dtype)
+        kp = jnp.concatenate([pad, k], axis=1)
+        vp = jnp.concatenate([pad, v], axis=1)
+
+    def chunk_body(_, ci):
+        q0 = ci * q_chunk
+        qc = lax.dynamic_slice_in_dim(qg, q0, q_chunk, axis=1)
+        qpos = q0 + jnp.arange(q_chunk, dtype=jnp.int32)
+        if use_window:
+            # keys for [q0 - window, q0 + q_chunk): slice from padded arrays
+            kc = lax.dynamic_slice_in_dim(kp, q0, klen, axis=1)
+            vc = lax.dynamic_slice_in_dim(vp, q0, klen, axis=1)
+            kpos = q0 - window + jnp.arange(klen, dtype=jnp.int32)
+            valid = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+            valid &= (qpos[:, None] - kpos[None, :]) < window
+            mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None]
+            out = _sdpa(qc, kc, vc, mask)
+        else:
+            kpos = jnp.arange(l, dtype=jnp.int32)
+            valid = kpos[None, :] <= qpos[:, None] if causal else jnp.ones(
+                (q_chunk, l), bool
+            )
+            if window is not None and causal:
+                valid &= (qpos[:, None] - kpos[None, :]) < window
+            mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None]
+            out = _sdpa(qc, k, v, mask)
+        return _, out
+
+    if n_chunks == 1:
+        _, out = chunk_body(None, jnp.int32(0))
+        out = out.reshape(b, l, hq, hd)
+    else:
+        _, outs = lax.scan(
+            chunk_body, None, jnp.arange(n_chunks, dtype=jnp.int32), unroll=unroll
+        )
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, l, hq, hd)
+    y = jnp.einsum("blhd,hdk->blk", out.reshape(b, l, hq, hd), p["wo"])
+    return y, (k, v)
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,  # (B, Lq, d) decoder states
+    kv: Tuple[jax.Array, jax.Array],  # precomputed (k, v): (B, Lk, Hk, D)
+) -> jax.Array:
+    b, lq, _ = x.shape
+    hk, hq, hd = cfg.n_kv_heads, cfg.n_heads, cfg.resolved_head_dim
+    g = hq // hk
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["qnorm"])
+    k, v = kv
+    out = _sdpa(q.reshape(b, lq, hk, g, hd), k, v, None)
+    return jnp.einsum("blhd,hdk->blk", out.reshape(b, lq, hq, hd), p["wo"])
+
+
+def cross_kv(cfg: ModelConfig, p: Dict, enc: jax.Array):
+    """Precompute encoder-side K/V for cross attention."""
+    k = jnp.einsum("bld,dhk->blhk", enc, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", enc, p["wv"])
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["knorm"])
+    return k, v
+
+
+def decode_attention(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,  # (B, 1, d) current-token states
+    cache_k: jax.Array,  # (B, S, Hk, D)
+    cache_v: jax.Array,
+    pos: jax.Array,  # scalar int32: tokens already in cache
+    *,
+    window: Optional[int] = None,  # STATIC
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention against a static cache.  Returns (out, k, v) —
+    caller writes k/v at ``pos``.  Cache S may be sharded (flash-decode)."""
+    b, _, d = x.shape
+    s = cache_k.shape[1]
+    hk, hq, hd = cfg.n_kv_heads, cfg.n_heads, cfg.resolved_head_dim
+    g = hq // hk
+    q, k, v = _qk_project(cfg, p, x, pos[None, None])
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+    idx = jnp.arange(s, dtype=jnp.int32)
+    valid = idx <= pos
+    if window is not None:
+        valid &= (pos - idx) < window
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+    out = _sdpa(q.reshape(b, 1, hk, g, hd), cache_k, cache_v, mask)
+    y = jnp.einsum("blhd,hdk->blk", out.reshape(b, 1, hq, hd), p["wo"])
+    return y, cache_k, cache_v
+
+
+def decode_attention_ring(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,  # (B, 1, d)
+    cache_k: jax.Array,  # (B, W, Hk, D) ring buffer, W == window
+    cache_v: jax.Array,
+    pos: jax.Array,  # scalar int32: absolute position being written
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sliding-window decode against a RING cache (§Perf hillclimb 2):
+    slot ``j`` holds absolute position ``pos - ((pos - j) mod W)``; the new
+    token overwrites slot ``pos % W``.  32k-seq local layers touch W=1024
+    entries instead of 32768 — less HBM, less flops, same math (RoPE is
+    applied at write time, so stored keys carry their true positions)."""
+    b, _, d = x.shape
+    w = cache_k.shape[1]
+    hk, hq, hd = cfg.n_kv_heads, cfg.n_heads, cfg.resolved_head_dim
+    g = hq // hk
+    q, k, v = _qk_project(cfg, p, x, pos[None, None])
+    slot = jnp.mod(pos, w)
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    j = jnp.arange(w, dtype=jnp.int32)
+    p_j = pos - jnp.mod(pos - j, w)  # absolute position held by slot j
+    valid = p_j >= 0  # window bound (pos - p_j < w) holds by construction
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+    out = _sdpa(q.reshape(b, 1, hk, g, hd), cache_k, cache_v, mask)
+    y = jnp.einsum("blhd,hdk->blk", out.reshape(b, 1, hq, hd), p["wo"])
+    return y, cache_k, cache_v
+
+
+def to_ring(k: jax.Array, pos: int, window: int) -> jax.Array:
+    """Convert a full prefill cache (B, S, H, D) with `pos` valid entries to
+    the ring layout (B, W, H, D): slot j <- absolute position
+    pos-1 - ((pos-1 - j) mod W) (the last W positions, ring-indexed)."""
+    j = jnp.arange(window)
+    src = (pos - 1) - jnp.mod((pos - 1) - j, window)
+    src = jnp.clip(src, 0, k.shape[1] - 1)
+    return jnp.take(k, src, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU); whisper uses plain GELU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, PD]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.family == "audio":  # whisper: non-gated GELU MLP
+        return {
+            "wi": PD((d, f), ("embed", "ff"), "scaled"),
+            "wo": PD((f, d), ("ff", "embed"), "scaled"),
+        }
+    return {
+        "wi": PD((d, f), ("embed", "ff"), "scaled"),
+        "wg": PD((d, f), ("embed", "ff"), "scaled"),
+        "wo": PD((f, d), ("ff", "embed"), "scaled"),
+    }
+
+
+def mlp(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    if "wg" not in p:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["wi"]))
+        return jnp.einsum("...f,fd->...d", h, p["wo"])
+    h = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["wg"]))
+    h = h * jnp.einsum("...d,df->...f", x, p["wi"])
+    return jnp.einsum("...f,fd->...d", h, p["wo"])

@@ -1,0 +1,648 @@
+"""Decoder-only LM stack: dense / MoE / SSM / hybrid / VLM families.
+
+Layers are **stacked and scanned** (``lax.scan`` over a leading layer axis)
+so the HLO stays small for 94-layer models and FSDP all-gathers stream one
+layer at a time.  Heterogeneous stacks are decomposed into homogeneous
+*groups* executed in order:
+
+  dense / vlm : [("blocks", L)]                  per-layer window as scan xs
+  moe         : [("dense_blocks", k), ("moe_blocks", L-k)]   (kimi: k=1)
+  ssm         : [("blocks", L)]                  mamba mixers, no MLP
+  hybrid      : [("periods", L/period)]          jamba: scan periods; inside
+                a period the 8 sublayers are unrolled with static structure
+
+Three entry points share the per-layer bodies: ``forward_hidden`` (train),
+``prefill`` (returns the KV/SSM cache), ``decode_step`` (one token).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import PD, MeshRules
+from repro.models import layers, mamba2, moe as moe_mod
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def _stack(defs, n: int):
+    """Add a leading stacked-layer axis to every PD in a def tree."""
+    return jax.tree.map(
+        lambda pd: PD((n,) + pd.shape, ("layers",) + pd.logical, pd.init, pd.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, PD),
+    )
+
+
+def _attn_block_defs(cfg: ModelConfig, use_moe: bool) -> Dict:
+    d = {
+        "ln1": layers.norm_defs(cfg),
+        "attn": layers.attn_defs(cfg),
+        "ln2": layers.norm_defs(cfg),
+    }
+    d["moe" if use_moe else "mlp"] = (
+        moe_mod.moe_defs(cfg) if use_moe else layers.mlp_defs(cfg)
+    )
+    return d
+
+
+def _ssm_block_defs(cfg: ModelConfig) -> Dict:
+    return {"ln1": layers.norm_defs(cfg), "ssm": mamba2.ssm_defs(cfg)}
+
+
+def _jamba_period_defs(cfg: ModelConfig) -> Dict:
+    per = cfg.attn_period
+    n_mamba = per - 1
+    n_moe = sum(1 for j in range(per) if cfg.is_moe_layer(j))
+    n_dense = per - n_moe
+    return {
+        "attn": {"ln": layers.norm_defs(cfg), "p": layers.attn_defs(cfg)},
+        "mamba": _stack({"ln": layers.norm_defs(cfg), "p": mamba2.ssm_defs(cfg)}, n_mamba),
+        "mlp": _stack({"ln": layers.norm_defs(cfg), "p": layers.mlp_defs(cfg)}, n_dense),
+        "moe": _stack({"ln": layers.norm_defs(cfg), "p": moe_mod.moe_defs(cfg)}, n_moe),
+    }
+
+
+def layer_groups(cfg: ModelConfig) -> List[Tuple[str, int, str]]:
+    """(group name, stack length, kind) in execution order.
+
+    Sliding-window architectures (gemma3) scan over PERIODS of
+    ``locals_per_global + 1`` layers so each in-period position has a
+    STATIC window (local layers take the sliced sub-quadratic attention
+    path; the global layer takes the full path) — traced windows cannot
+    choose between those code paths."""
+    if cfg.family in ("dense", "vlm"):
+        if cfg.locals_per_global:
+            per = cfg.locals_per_global + 1
+            full, rem = divmod(cfg.n_layers, per)
+            g: List[Tuple[str, int, str]] = [("periods", full, "attn_period")]
+            if rem:  # trailing layers continue the pattern (all local)
+                g.append(("tail", rem, "attn_local"))
+            return g
+        return [("blocks", cfg.n_layers, "attn")]
+    if cfg.family == "moe":
+        g = []
+        if cfg.first_dense_layers:
+            g.append(("dense_blocks", cfg.first_dense_layers, "attn"))
+        g.append(("moe_blocks", cfg.n_layers - cfg.first_dense_layers, "attn_moe"))
+        return g
+    if cfg.family == "ssm":
+        return [("blocks", cfg.n_layers, "ssm")]
+    if cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.attn_period == 0
+        return [("periods", cfg.n_layers // cfg.attn_period, "jamba")]
+    raise ValueError(cfg.family)
+
+
+_GROUP_DEFS = {
+    "attn": lambda cfg: _attn_block_defs(cfg, use_moe=False),
+    "attn_local": lambda cfg: _attn_block_defs(cfg, use_moe=False),
+    "attn_moe": lambda cfg: _attn_block_defs(cfg, use_moe=True),
+    "attn_period": lambda cfg: _stack(
+        _attn_block_defs(cfg, use_moe=False), cfg.locals_per_global + 1
+    ),
+    "ssm": _ssm_block_defs,
+    "jamba": _jamba_period_defs,
+}
+
+
+def _period_window(cfg: ModelConfig, j: int) -> Optional[int]:
+    """Static window for in-period position j (LLLLLG: global last)."""
+    return None if j == cfg.locals_per_global else cfg.local_window
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    tree: Dict[str, Any] = {
+        "embed": {"tok": PD((cfg.padded_vocab, d), ("vocab", "embed"), "normal")},
+        "final_norm": layers.norm_defs(cfg),
+    }
+    if cfg.family == "vlm":
+        tree["embed"]["vit_proj"] = PD((cfg.patch_dim, d), (None, "embed"), "scaled")
+    if not cfg.tie_embeddings:
+        tree["head"] = PD((d, cfg.padded_vocab), ("embed", "vocab"), "scaled")
+    tree["groups"] = {
+        name: _stack(_GROUP_DEFS[kind](cfg), n) for name, n, kind in layer_groups(cfg)
+    }
+    return tree
+
+
+def window_array(cfg: ModelConfig, n: int, offset: int = 0) -> jnp.ndarray:
+    """Per-layer sliding window (0 = global) for a stacked group."""
+    return jnp.array(
+        [
+            0 if cfg.is_global_attn_layer(offset + i) else cfg.local_window
+            for i in range(n)
+        ],
+        dtype=jnp.int32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache definitions
+# ---------------------------------------------------------------------------
+
+
+def _kv_defs(cfg: ModelConfig, batch: int, s: int, n: int, long_ctx: bool,
+             inner: int = 0) -> Dict:
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    seq_l = "long_seq" if long_ctx else "seq"
+    lead = (n, inner) if inner else (n,)
+    lead_l = ("layers", None) if inner else ("layers",)
+    return {
+        "k": PD(lead + (batch, s, hk, hd),
+                lead_l + ("batch", seq_l, None, None), "zeros"),
+        "v": PD(lead + (batch, s, hk, hd),
+                lead_l + ("batch", seq_l, None, None), "zeros"),
+    }
+
+
+def decode_cache_defs(cfg: ModelConfig, batch: int, s: int, long_ctx: bool = False) -> Dict:
+    ring_w = min(s, cfg.local_window) if cfg.ring_local_cache else 0
+    groups = {}
+    for name, n, kind in layer_groups(cfg):
+        if kind == "attn_local" and ring_w:
+            groups[name] = _kv_defs(cfg, batch, ring_w, n, False)
+        elif kind in ("attn", "attn_moe", "attn_local"):
+            groups[name] = _kv_defs(cfg, batch, s, n, long_ctx)
+        elif kind == "attn_period":
+            per = cfg.locals_per_global + 1
+            if ring_w:
+                groups[name] = {
+                    "local": _kv_defs(cfg, batch, ring_w, n, False, inner=per - 1),
+                    "global": _kv_defs(cfg, batch, s, n, long_ctx, inner=1),
+                }
+            else:
+                groups[name] = _kv_defs(cfg, batch, s, n, long_ctx, inner=per)
+        elif kind == "ssm":
+            groups[name] = _stack(mamba2.ssm_cache_defs(cfg, batch), n)
+        elif kind == "jamba":
+            groups[name] = {
+                "attn": _kv_defs(cfg, batch, s, n, long_ctx),
+                "mamba": _stack(
+                    _stack(mamba2.ssm_cache_defs(cfg, batch), cfg.attn_period - 1), n
+                ),
+            }
+    if cfg.family == "vlm":
+        # prefix patch tokens live in the cache; s already includes them
+        pass
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params: Dict, tokens: jax.Array) -> jax.Array:
+    e = params["embed"]["tok"]
+    x = e[tokens]
+    return (x * jnp.asarray(cfg.d_model**0.5, x.dtype)) if cfg.family != "audio" else x
+
+
+def lm_logits(cfg: ModelConfig, params: Dict, h: jax.Array) -> jax.Array:
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("...d,dv->...v", h, head)
+    if cfg.padded_vocab != cfg.vocab:  # mask dead pad rows
+        iota = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(iota < cfg.vocab, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def chunked_xent(
+    cfg: ModelConfig,
+    params: Dict,
+    h: jax.Array,  # (B, L, d) final hidden
+    labels: jax.Array,  # (B, L) int32; -1 = ignore
+    chunk: int = 1024,
+) -> jax.Array:
+    """Cross-entropy without materializing full (B, L, V) logits."""
+    b, l, d = h.shape
+    chunk = min(chunk, l)
+    while l % chunk:
+        chunk //= 2
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]
+    pad_mask = None
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.where(
+            jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, -1e30
+        ).astype(jnp.float32)
+
+    def body(acc, ci):
+        hc = lax.dynamic_slice_in_dim(h, ci * chunk, chunk, axis=1)
+        yc = lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, axis=1)
+        logits = jnp.einsum("bld,dv->blv", hc, head).astype(jnp.float32)
+        if pad_mask is not None:
+            logits = logits + pad_mask
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(yc, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (yc >= 0).astype(jnp.float32)
+        loss = ((lse - gold) * valid).sum()
+        return (acc[0] + loss, acc[1] + valid.sum()), None
+
+    trips = l // chunk
+    (tot, cnt), _ = lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), jnp.arange(trips),
+        unroll=trips if cfg.scan_unroll else 1,
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_fwd(cfg, p, x, window, want_cache: bool):
+    h, kv = layers.self_attention(cfg, p["attn"], layers.apply_norm(cfg, p["ln1"], x),
+                                  window=window)
+    x = x + h
+    sub = p.get("moe") or p["mlp"]
+    if "moe" in p:
+        x = x + moe_mod.moe_block(cfg, sub, layers.apply_norm(cfg, p["ln2"], x))
+    else:
+        x = x + layers.mlp(cfg, sub, layers.apply_norm(cfg, p["ln2"], x))
+    return (x, kv) if want_cache else (x, None)
+
+
+def _attn_block_decode(cfg, p, x, ck, cv, pos, window):
+    h, ck, cv = layers.decode_attention(
+        cfg, p["attn"], layers.apply_norm(cfg, p["ln1"], x), ck, cv, pos,
+        window=window
+    )
+    x = x + h
+    sub = p.get("moe") or p["mlp"]
+    if "moe" in p:
+        x = x + moe_mod.moe_block(cfg, sub, layers.apply_norm(cfg, p["ln2"], x))
+    else:
+        x = x + layers.mlp(cfg, sub, layers.apply_norm(cfg, p["ln2"], x))
+    return x, ck, cv
+
+
+def _ssm_block_fwd(cfg, p, x, want_cache: bool):
+    h, cache = mamba2.ssm_block(
+        cfg, p["ssm"], layers.apply_norm(cfg, p["ln1"], x), want_cache=want_cache
+    )
+    return x + h, cache
+
+
+def _jamba_period_fwd(cfg, p, x, want_cache: bool):
+    """One jamba period: attn at attn_offset, mamba elsewhere; MoE per parity."""
+    per = cfg.attn_period
+    kv = None
+    states = []
+    jm = jd = jmo = 0
+    for j in range(per):
+        if j == cfg.attn_offset:
+            sp = p["attn"]
+            h, kv = layers.self_attention(
+                cfg, sp["p"], layers.apply_norm(cfg, sp["ln"], x), window=None
+            )
+            x = x + h
+        else:
+            sp = jax.tree.map(lambda a: a[jm], p["mamba"])
+            h, s = mamba2.ssm_block(
+                cfg, sp["p"], layers.apply_norm(cfg, sp["ln"], x),
+                want_cache=want_cache,
+            )
+            x = x + h
+            states.append(s)
+            jm += 1
+        if cfg.is_moe_layer(j):
+            sp = jax.tree.map(lambda a: a[jmo], p["moe"])
+            x = x + moe_mod.moe_block(cfg, sp["p"], layers.apply_norm(cfg, sp["ln"], x))
+            jmo += 1
+        else:
+            sp = jax.tree.map(lambda a: a[jd], p["mlp"])
+            x = x + layers.mlp(cfg, sp["p"], layers.apply_norm(cfg, sp["ln"], x))
+            jd += 1
+    if want_cache:
+        return x, (kv, jax.tree.map(lambda *s: jnp.stack(s), *states))
+    return x, None
+
+
+def _jamba_period_decode(cfg, p, x, cache_kv, cache_mamba, pos):
+    per = cfg.attn_period
+    ck, cv = cache_kv
+    jm = jd = jmo = 0
+    new_states = []
+    for j in range(per):
+        if j == cfg.attn_offset:
+            sp = p["attn"]
+            h, ck, cv = layers.decode_attention(
+                cfg, sp["p"], layers.apply_norm(cfg, sp["ln"], x), ck, cv, pos
+            )
+            x = x + h
+        else:
+            sp = jax.tree.map(lambda a: a[jm], p["mamba"])
+            st = jax.tree.map(lambda a: a[jm], cache_mamba)
+            h, st = mamba2.ssm_decode_step(
+                cfg, sp["p"], layers.apply_norm(cfg, sp["ln"], x), st
+            )
+            x = x + h
+            new_states.append(st)
+            jm += 1
+        if cfg.is_moe_layer(j):
+            sp = jax.tree.map(lambda a: a[jmo], p["moe"])
+            x = x + moe_mod.moe_block(cfg, sp["p"], layers.apply_norm(cfg, sp["ln"], x))
+            jmo += 1
+        else:
+            sp = jax.tree.map(lambda a: a[jd], p["mlp"])
+            x = x + layers.mlp(cfg, sp["p"], layers.apply_norm(cfg, sp["ln"], x))
+            jd += 1
+    return x, (ck, cv), jax.tree.map(lambda *s: jnp.stack(s), *new_states)
+
+
+# ---------------------------------------------------------------------------
+# Full-model passes
+# ---------------------------------------------------------------------------
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _act_spec(rules: Optional[MeshRules]) -> P:
+    if rules is None:
+        return P()
+    b = rules.batch if len(rules.batch) != 1 else rules.batch[0]
+    return P(b if rules.batch else None)
+
+
+def forward_hidden(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jax.Array,  # (B, L_text)
+    *,
+    patches: Optional[jax.Array] = None,  # vlm: (B, n_patches, patch_dim)
+    rules: Optional[MeshRules] = None,
+    mesh=None,
+    want_cache: bool = False,
+):
+    """Full-sequence pass -> final hidden (B, L, d) (+ cache when asked)."""
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm":
+        pe = jnp.einsum("bpk,kd->bpd", patches.astype(x.dtype),
+                        params["embed"]["vit_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    x = x.astype(cfg.compute_dtype)
+    aspec = _act_spec(rules)
+    x = _constrain(x, mesh, P(*aspec, None, None))
+    caches = {}
+
+    for name, n, kind in layer_groups(cfg):
+        gp = params["groups"][name]
+        if kind in ("attn", "attn_moe", "attn_local"):
+            window = cfg.local_window if kind == "attn_local" else None
+
+            def body(carry, p, _w=window):
+                y, kv = _attn_block_fwd(cfg, p, carry, _w, want_cache)
+                y = _constrain(y, mesh, P(*aspec, None, None))
+                return y, kv
+
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, kv = lax.scan(body, x, gp,
+                             unroll=n if cfg.scan_unroll else 1)
+            if want_cache:
+                caches[name] = {"k": kv[0], "v": kv[1]}
+        elif kind == "attn_period":
+            per = cfg.locals_per_global + 1
+
+            def body(carry, p):
+                y = carry
+                ks, vs = [], []
+                for j in range(per):
+                    pj = jax.tree.map(lambda a: a[j], p)
+                    y, kv = _attn_block_fwd(
+                        cfg, pj, y, _period_window(cfg, j), want_cache
+                    )
+                    if want_cache:
+                        ks.append(kv[0])
+                        vs.append(kv[1])
+                y = _constrain(y, mesh, P(*aspec, None, None))
+                return y, (jnp.stack(ks), jnp.stack(vs)) if want_cache else None
+
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, kv = lax.scan(body, x, gp,
+                             unroll=n if cfg.scan_unroll else 1)
+            if want_cache:
+                caches[name] = {"k": kv[0], "v": kv[1]}
+        elif kind == "ssm":
+
+            def body(carry, p):
+                y, s = _ssm_block_fwd(cfg, p, carry, want_cache)
+                y = _constrain(y, mesh, P(*aspec, None, None))
+                return y, s
+
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, s_last = lax.scan(body, x, gp,
+                                 unroll=n if cfg.scan_unroll else 1)
+            if want_cache:
+                caches[name] = s_last  # (n, B, H, P, N) final states
+        elif kind == "jamba":
+
+            def body(carry, p):
+                y, c = _jamba_period_fwd(cfg, p, carry, want_cache)
+                y = _constrain(y, mesh, P(*aspec, None, None))
+                return y, c
+
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, c = lax.scan(body, x, gp, unroll=n if cfg.scan_unroll else 1)
+            if want_cache:
+                kv, mamba_c = c
+                caches[name] = {
+                    "attn": {"k": kv[0], "v": kv[1]},
+                    "mamba": mamba_c,
+                }
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    return (x, caches) if want_cache else x
+
+
+def train_loss(
+    cfg: ModelConfig,
+    params: Dict,
+    batch: Dict[str, jax.Array],
+    *,
+    rules=None,
+    mesh=None,
+) -> jax.Array:
+    h = forward_hidden(
+        cfg, params, batch["tokens"], patches=batch.get("patches"),
+        rules=rules, mesh=mesh,
+    )
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # prefix patch positions carry no labels
+        pad = jnp.full(
+            (labels.shape[0], cfg.n_patches), -1, labels.dtype
+        )
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return chunked_xent(cfg, params, h, labels)
+
+
+# --- prefill -----------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jax.Array,
+    *,
+    patches=None,
+    rules=None,
+    mesh=None,
+):
+    """Process the prompt; return (last-token logits, cache, pos)."""
+    h, caches = forward_hidden(
+        cfg, params, tokens, patches=patches, rules=rules, mesh=mesh,
+        want_cache=True,
+    )
+    logits = lm_logits(cfg, params, h[:, -1])
+    pos = jnp.int32(h.shape[1])
+    return logits, caches, pos
+
+
+# --- decode ------------------------------------------------------------------
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict,
+    cache: Dict,
+    token: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # scalar int32 — current cache length
+    *,
+    rules=None,
+    mesh=None,
+):
+    """One decode step; returns (logits (B, V), new cache)."""
+    x = embed_tokens(cfg, params, token).astype(cfg.compute_dtype)
+    # RoPE position must account for any vlm prefix (already inside pos).
+    new_cache = {}
+    for name, n, kind in layer_groups(cfg):
+        gp = params["groups"][name]
+        gc = cache[name]
+        if kind in ("attn", "attn_moe", "attn_local"):
+            window = cfg.local_window if kind == "attn_local" else None
+            ring = cfg.ring_local_cache and kind == "attn_local"
+            if cfg.decode_inplace or ring:
+                # §Perf hillclimb 1: unrolled loop + .at[i] chained updates
+                # let XLA reuse the donated cache buffer in place (no scan
+                # double-buffering); ring variant = hillclimb 2.
+                ck, cv = gc["k"], gc["v"]
+                for i in range(n):
+                    p_i = jax.tree.map(lambda a: a[i], gp)
+                    if ring:
+                        h, ki, vi = layers.decode_attention_ring(
+                            cfg, p_i["attn"],
+                            layers.apply_norm(cfg, p_i["ln1"], x),
+                            ck[i], cv[i], pos)
+                        x = x + h
+                        sub = p_i.get("moe") or p_i["mlp"]
+                        mlp_in = layers.apply_norm(cfg, p_i["ln2"], x)
+                        if "moe" in p_i:
+                            x = x + moe_mod.moe_block(cfg, sub, mlp_in)
+                        else:
+                            x = x + layers.mlp(cfg, sub, mlp_in)
+                    else:
+                        x, ki, vi = _attn_block_decode(
+                            cfg, p_i, x, ck[i], cv[i], pos, window)
+                    ck = ck.at[i].set(ki)
+                    cv = cv.at[i].set(vi)
+            else:
+
+                def body(carry, xs, _w=window):
+                    p, ck, cv = xs
+                    y, ck, cv = _attn_block_decode(cfg, p, carry, ck, cv, pos, _w)
+                    return y, (ck, cv)
+
+                x, (ck, cv) = lax.scan(body, x, (gp, gc["k"], gc["v"]),
+                                       unroll=n if cfg.scan_unroll else 1)
+            new_cache[name] = {"k": ck, "v": cv}
+        elif kind == "attn_period":
+            per = cfg.locals_per_global + 1
+            if cfg.ring_local_cache:
+                lk, lv = gc["local"]["k"], gc["local"]["v"]
+                gk, gv = gc["global"]["k"], gc["global"]["v"]
+                for i in range(n):
+                    p_i = jax.tree.map(lambda a: a[i], gp)
+                    jl = 0
+                    for j in range(per):
+                        pj = jax.tree.map(lambda a: a[j], p_i)
+                        ln_in = layers.apply_norm(cfg, pj["ln1"], x)
+                        if _period_window(cfg, j) is None:
+                            h, k1, v1 = layers.decode_attention(
+                                cfg, pj["attn"], ln_in, gk[i, 0], gv[i, 0], pos)
+                            gk = gk.at[i, 0].set(k1)
+                            gv = gv.at[i, 0].set(v1)
+                        else:
+                            h, k1, v1 = layers.decode_attention_ring(
+                                cfg, pj["attn"], ln_in, lk[i, jl], lv[i, jl], pos)
+                            lk = lk.at[i, jl].set(k1)
+                            lv = lv.at[i, jl].set(v1)
+                            jl += 1
+                        x = x + h
+                        x = x + layers.mlp(
+                            cfg, pj["mlp"], layers.apply_norm(cfg, pj["ln2"], x))
+                new_cache[name] = {"local": {"k": lk, "v": lv},
+                                   "global": {"k": gk, "v": gv}}
+            else:
+
+                def body(carry, xs):
+                    p, ck, cv = xs
+                    y = carry
+                    ks, vs = [], []
+                    for j in range(per):
+                        pj = jax.tree.map(lambda a: a[j], p)
+                        y, ckj, cvj = _attn_block_decode(
+                            cfg, pj, y, ck[j], cv[j], pos, _period_window(cfg, j)
+                        )
+                        ks.append(ckj)
+                        vs.append(cvj)
+                    return y, (jnp.stack(ks), jnp.stack(vs))
+
+                x, (ck, cv) = lax.scan(body, x, (gp, gc["k"], gc["v"]),
+                                       unroll=n if cfg.scan_unroll else 1)
+                new_cache[name] = {"k": ck, "v": cv}
+        elif kind == "ssm":
+
+            def body(carry, xs):
+                p, st = xs
+                ln = layers.apply_norm(cfg, p["ln1"], carry)
+                h, st = mamba2.ssm_decode_step(cfg, p["ssm"], ln, st)
+                return carry + h, st
+
+            x, st = lax.scan(body, x, (gp, gc),
+                             unroll=n if cfg.scan_unroll else 1)
+            new_cache[name] = st
+        elif kind == "jamba":
+
+            def body(carry, xs):
+                p, ck, cv, cm = xs
+                y, (ck, cv), cm = _jamba_period_decode(
+                    cfg, p, carry, (ck, cv), cm, pos
+                )
+                return y, (ck, cv, cm)
+
+            x, (ck, cv, cm) = lax.scan(
+                body, x, (gp, gc["attn"]["k"], gc["attn"]["v"], gc["mamba"]),
+                unroll=n if cfg.scan_unroll else 1,
+            )
+            new_cache[name] = {"attn": {"k": ck, "v": cv}, "mamba": cm}
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x[:, 0])
+    return logits, new_cache

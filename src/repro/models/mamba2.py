@@ -1,0 +1,207 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD: the sequence is cut into chunks of ``Q``; within a chunk the
+quadratic "attention-like" term runs on the MXU, between chunks a single
+``lax.scan`` carries the (H, P, N) state.  Decode is the O(1) recurrent
+update — this is why SSM/hybrid architectures run the ``long_500k`` cell.
+
+TP sharding: the inner width ``d_inner`` (and its head dim) shards over the
+``model`` axis; B/C projections (state dim N) are small and replicated.
+Projections are kept separate (wz/wx/wB/wC/wdt) instead of one fused
+in_proj so each can carry its own PartitionSpec.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import PD
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict[str, PD]:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    cw = cfg.ssm_conv_width
+    return {
+        "wz": PD((d, din), ("embed", "d_inner"), "scaled"),
+        "wx": PD((d, din), ("embed", "d_inner"), "scaled"),
+        "wB": PD((d, n), ("embed", None), "scaled"),
+        "wC": PD((d, n), ("embed", None), "scaled"),
+        "wdt": PD((d, h), ("embed", "d_inner"), "scaled"),
+        "conv_x": PD((cw, din), (None, "d_inner"), "scaled"),
+        "conv_B": PD((cw, n), (None, None), "scaled"),
+        "conv_C": PD((cw, n), (None, None), "scaled"),
+        "A_log": PD((h,), ("d_inner",), "zeros", dtype="float32"),
+        "dt_bias": PD((h,), ("d_inner",), "zeros", dtype="float32"),
+        "D": PD((h,), ("d_inner",), "ones", dtype="float32"),
+        "gate_norm": PD((din,), ("d_inner",), "zeros"),
+        "wo": PD((din, d), ("d_inner", "embed"), "scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, L, C), w (W, C) -> (B, L, C)."""
+    wlen = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(wlen):  # W is tiny (4): unrolled taps, no conv op needed
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def _rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P) inputs (pre-multiplied by nothing)
+    dt: jax.Array,  # (B, L, H) softplus'd step sizes
+    a_log: jax.Array,  # (H,) log of -A
+    bmat: jax.Array,  # (B, L, N)
+    cmat: jax.Array,  # (B, L, N)
+    chunk: int,
+    state_in: jax.Array = None,  # (B, H, P, N) or None
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, L, H, P), final state (B, H, P, N))."""
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, l)
+    while l % q:
+        q //= 2
+    nc = l // q
+
+    f32 = jnp.float32
+    xdt = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, nc, q, h, p)
+    a = (-jnp.exp(a_log.astype(f32)) * dt.astype(f32)).reshape(b, nc, q, h)
+    bc = bmat.astype(f32).reshape(b, nc, q, n)
+    cc = cmat.astype(f32).reshape(b, nc, q, n)
+
+    cum = jnp.cumsum(a, axis=2)  # (b, nc, q, h) inclusive
+    # --- intra-chunk (quadratic) term
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,i,j,h)
+    iq = jnp.arange(q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)
+    y = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, xdt)
+
+    # --- inter-chunk state passing
+    dend = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,q,h) decay to chunk end
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, dend, xdt)
+    gamma = jnp.exp(cum[:, :, -1, :])  # (b,nc,h) whole-chunk decay
+
+    if state_in is None:
+        state_in = jnp.zeros((b, h, p, n), f32)
+
+    def scan_fn(s, inp):
+        s_c, g_c = inp  # (b,h,p,n), (b,h)
+        s_new = s * g_c[..., None, None] + s_c
+        return s_new, s  # emit the state *entering* this chunk
+
+    s_last, s_prev = lax.scan(
+        scan_fn,
+        state_in.astype(f32),
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(gamma, 1, 0)),
+    )
+    s_prev = jnp.moveaxis(s_prev, 0, 1)  # (b, nc, h, p, n)
+    y = y + jnp.einsum("bcin,bchpn->bcihp", cc, s_prev) * jnp.exp(cum)[..., None]
+    return y.reshape(b, l, h, p).astype(x.dtype), s_last
+
+
+def ssm_block(
+    cfg: ModelConfig, prm: Dict, x: jax.Array, state_in=None, want_cache=False
+) -> Tuple[jax.Array, Any]:
+    """Full-sequence Mamba-2 mixer: x (B, L, d) -> (B, L, d), cache.
+
+    ``want_cache=True`` returns the full decode cache (final SSD state +
+    conv tail buffers of the RAW pre-conv projections)."""
+    b, l, _ = x.shape
+    h, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bld,de->ble", x, prm["wz"])
+    xr = jnp.einsum("bld,de->ble", x, prm["wx"])
+    br = jnp.einsum("bld,dn->bln", x, prm["wB"])
+    cr = jnp.einsum("bld,dn->bln", x, prm["wC"])
+    dt = jnp.einsum("bld,dh->blh", x, prm["wdt"])
+    xi = jax.nn.silu(_causal_conv(xr, prm["conv_x"]))
+    bm = jax.nn.silu(_causal_conv(br, prm["conv_B"]))
+    cm = jax.nn.silu(_causal_conv(cr, prm["conv_C"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + prm["dt_bias"])
+    y, s_last = ssd_chunked(
+        xi.reshape(b, l, h, p), dt, prm["A_log"], bm, cm, cfg.ssm_chunk, state_in
+    )
+    y = y + (prm["D"].astype(jnp.float32)[:, None] * xi.reshape(b, l, h, p)).astype(
+        y.dtype
+    )
+    y = _rmsnorm(y.reshape(b, l, -1), prm["gate_norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("ble,ed->bld", y, prm["wo"])
+    if want_cache:
+        cw = cfg.ssm_conv_width - 1
+        cache = dict(
+            state=s_last,
+            conv_x=xr[:, l - cw :],
+            conv_B=br[:, l - cw :],
+            conv_C=cr[:, l - cw :],
+        )
+        return out, cache
+    return out, s_last
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent, O(1) per token)
+# ---------------------------------------------------------------------------
+
+
+def ssm_cache_defs(cfg: ModelConfig, batch: int) -> Dict[str, PD]:
+    h, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cwm1 = cfg.ssm_conv_width - 1
+    return {
+        "state": PD((batch, h, p, n), ("batch", "d_inner", None, None), "zeros",
+                    dtype="float32"),
+        "conv_x": PD((batch, cwm1, cfg.d_inner), ("batch", None, "d_inner"), "zeros"),
+        "conv_B": PD((batch, cwm1, n), ("batch", None, None), "zeros"),
+        "conv_C": PD((batch, cwm1, n), ("batch", None, None), "zeros"),
+    }
+
+
+def _conv_step(buf: jax.Array, cur: jax.Array, w: jax.Array):
+    """buf (B, W-1, C) history, cur (B, C) -> (out (B, C), new buf)."""
+    full = jnp.concatenate([buf, cur[:, None]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", full, w)
+    return out, full[:, 1:]
+
+
+def ssm_decode_step(
+    cfg: ModelConfig, prm: Dict, x: jax.Array, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d) one token -> (B, 1, d), updated cache."""
+    b = x.shape[0]
+    h, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xt = x[:, 0]
+    z = xt @ prm["wz"]
+    xi = xt @ prm["wx"]
+    bm = xt @ prm["wB"]
+    cm = xt @ prm["wC"]
+    dt = xt @ prm["wdt"]
+    xi, cx = _conv_step(cache["conv_x"], xi, prm["conv_x"])
+    bm, cb = _conv_step(cache["conv_B"], bm, prm["conv_B"])
+    cm, cc = _conv_step(cache["conv_C"], cm, prm["conv_C"])
+    xi, bm, cm = jax.nn.silu(xi), jax.nn.silu(bm), jax.nn.silu(cm)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + prm["dt_bias"])  # (B, H)
+    a = jnp.exp(-jnp.exp(prm["A_log"]) * dt)  # (B, H)
+    xh = xi.reshape(b, h, p).astype(jnp.float32)
+    s = cache["state"] * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bm.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cm.astype(jnp.float32), s)
+    y = y + prm["D"][:, None] * xh
+    y = y.reshape(b, -1).astype(x.dtype)
+    y = _rmsnorm(y, prm["gate_norm"]) * jax.nn.silu(z)
+    out = (y @ prm["wo"])[:, None]
+    return out, dict(state=s, conv_x=cx, conv_B=cb, conv_C=cc)

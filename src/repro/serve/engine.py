@@ -1,0 +1,128 @@
+"""Batched serving: prefill + decode loop with a static KV cache.
+
+The engine allocates the cache at ``max_len`` up front (the paper's
+tight-memory-bound philosophy applied to serving: no dynamic allocation in
+the decode loop), prefilling writes ``[0, prompt)``, decode appends one
+token per step under ``jit``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+def pad_cache(cache, max_len: int):
+    """Grow the SELF-attention KV seq axis (rank-5: L,B,S,H,D) to max_len.
+
+    Path-aware: SSM states and whisper's cross-attention KV must NOT be
+    padded (cross attention is unmasked — zero keys would perturb the
+    softmax; SSM caches are recurrent state, not sequences)."""
+
+    def grow(path, x):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if "mamba" in keys or "cross" in keys:
+            return x
+        # KV layout is (..., S, Hk, D): seq axis is always ndim-3
+        # (rank 5 for flat layer stacks, rank 6 for period groups).
+        ax = x.ndim - 3
+        if keys[-1] in ("k", "v") and x.ndim >= 5 and x.shape[ax] < max_len:
+            pad = [(0, 0)] * x.ndim
+            pad[ax] = (0, max_len - x.shape[ax])
+            return jnp.pad(x, pad)
+        return x
+
+    return jax.tree_util.tree_map_with_path(grow, cache)
+
+
+def prepare_decode_cache(cfg: ModelConfig, cache, pos: int, max_len: int):
+    """Pad prefill caches for decode; under ``cfg.ring_local_cache``,
+    convert sliding-window layers to the ring layout (§Perf hillclimb 2)."""
+    from repro.models import layers, lm
+
+    if not cfg.ring_local_cache or cfg.local_window == 0:
+        return pad_cache(cache, max_len)
+    w = cfg.local_window
+    per = cfg.locals_per_global + 1
+    ring2 = jax.vmap(jax.vmap(lambda x: layers.to_ring(x, pos, w)))
+    ring1 = jax.vmap(lambda x: layers.to_ring(x, pos, w))
+    out = {}
+    for name, gc in cache.items():
+        kinds = {g[0]: g[2] for g in lm.layer_groups(cfg)}
+        kind = kinds.get(name)
+        if kind == "attn_period":
+            li = [j for j in range(per) if j != cfg.locals_per_global]
+            out[name] = {
+                "local": {c: ring2(gc[c][:, li]) for c in ("k", "v")},
+                "global": {
+                    c: pad_cache(
+                        {"k": gc[c][:, cfg.locals_per_global : cfg.locals_per_global + 1]},
+                        max_len)["k"]
+                    for c in ("k", "v")
+                },
+            }
+        elif kind == "attn_local":
+            out[name] = {c: ring1(gc[c]) for c in ("k", "v")}
+        else:
+            out[name] = pad_cache({"x": gc}, max_len)["x"]
+    return out
+
+
+def sample(logits: jax.Array, rng: jax.Array, *, temperature: float = 0.0,
+           top_k: int = 0) -> jax.Array:
+    """logits (B, V) -> token ids (B,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray  # (B, n_new)
+    steps: int
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    prompts: jax.Array,  # (B, L_prompt) int32
+    n_new: int,
+    *,
+    extra_inputs: Optional[Dict] = None,  # frames / patches for audio / vlm
+    temperature: float = 0.0,
+    seed: int = 0,
+    rules=None,
+    mesh=None,
+) -> GenerateResult:
+    """Prefill the prompts then decode ``n_new`` tokens (greedy or sampled)."""
+    b, lp = prompts.shape
+    extra = extra_inputs or {}
+    prefill = jax.jit(api.prefill_fn(cfg, rules, mesh))
+    decode = jax.jit(api.decode_fn(cfg, rules, mesh), donate_argnums=(1,))
+    inputs = {"tokens": prompts, **extra}
+    logits, cache, pos = prefill(params, inputs)
+    prefix = cfg.n_patches if cfg.family == "vlm" else 0
+    cache = prepare_decode_cache(cfg, cache, lp + prefix, lp + prefix + n_new)
+    rng = jax.random.PRNGKey(seed)
+    out = []
+    tok = sample(logits, rng, temperature=temperature)
+    out.append(tok)
+    for i in range(n_new - 1):
+        rng, k = jax.random.split(rng)
+        logits, cache = decode(params, cache, tok[:, None], pos + i)
+        tok = sample(logits, k, temperature=temperature)
+        out.append(tok)
+    return GenerateResult(tokens=np.stack([np.asarray(t) for t in out], 1),
+                          steps=n_new)

@@ -1,0 +1,125 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler detection,
+simulated failures (the single-process stand-ins for pod-level faults —
+DESIGN.md §11 documents the multi-host mapping).
+
+* restart: on startup, restore the latest checkpoint if present and resume
+  at its step; the data pipeline is a pure function of step (deterministic
+  skip), so no data state is saved.
+* straggler mitigation: per-step wall times feed an EWMA; steps slower than
+  ``straggler_factor``× the EWMA are logged as stragglers (on a real pod
+  this signal drives hot-spare swap; here it drives the log + metrics).
+* simulated failure: ``fail_at_step`` raises mid-run — tests restart the
+  loop and assert bit-exact continuation vs an uninterrupted run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models import api
+from repro.train import optim, step as step_mod
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    n_steps: int = 50
+    ckpt_every: int = 20
+    ckpt_dir: Optional[str] = None
+    async_ckpt: bool = True
+    fail_at_step: Optional[int] = None  # simulate a node failure
+    straggler_factor: float = 3.0
+    log_every: int = 10
+    microbatches: int = 1
+    grad_sync: str = "xla"  # xla | butterfly | rabenseifner | all_to_all
+    fanout: int = 2
+    lr_kw: Optional[Dict] = None
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def train(
+    cfg: ModelConfig,
+    batch_size: int,
+    seq_len: int,
+    loop: LoopConfig = LoopConfig(),
+    *,
+    mesh=None,
+    rules=None,
+    seed: int = 0,
+    on_metrics: Optional[Callable[[int, Dict], None]] = None,
+) -> Dict:
+    """Returns final metrics dict (params under "params" etc.)."""
+    opt = optim.get(cfg.optimizer)
+    data = SyntheticLM(cfg, batch_size, seq_len)
+    if loop.grad_sync == "xla":
+        fn = step_mod.build_train_step(
+            cfg, mesh=mesh, rules=rules, microbatches=loop.microbatches,
+            lr_kw=loop.lr_kw,
+        )
+    else:
+        fn = step_mod.build_train_step_butterfly(
+            cfg, mesh, rules, method=loop.grad_sync, fanout=loop.fanout,
+            microbatches=loop.microbatches, lr_kw=loop.lr_kw,
+        )
+    jfn = jax.jit(fn, donate_argnums=(0, 1))
+
+    start = 0
+    params = opt_state = None
+    if loop.ckpt_dir and ckpt.latest_step(loop.ckpt_dir) is not None:
+        template_p = api.init_params(cfg, jax.random.PRNGKey(seed))
+        template_o = opt.init(template_p)
+        start, trees = ckpt.restore(
+            loop.ckpt_dir, {"params": template_p, "opt_state": template_o}
+        )
+        params, opt_state = trees["params"], trees["opt_state"]
+        print(f"[restart] resumed from step {start}")
+    if params is None:
+        params = api.init_params(cfg, jax.random.PRNGKey(seed))
+        opt_state = opt.init(params)
+
+    ewma = None
+    losses: List[float] = []
+    pending = None
+    for step in range(start, loop.n_steps):
+        if loop.fail_at_step is not None and step == loop.fail_at_step:
+            raise SimulatedFailure(f"simulated node failure at step {step}")
+        batch = {k: jax.numpy.asarray(v) for k, v in data.batch_at(step).items()}
+        t0 = time.time()
+        params, opt_state, metrics = jfn(
+            params, opt_state, batch, jax.numpy.int32(step)
+        )
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        straggler = step > start + 2 and dt > loop.straggler_factor * ewma
+        losses.append(loss)
+        if on_metrics:
+            on_metrics(step, {**{k: float(v) for k, v in metrics.items()},
+                              "step_time": dt, "straggler": straggler})
+        if straggler:
+            print(f"[straggler] step {step}: {dt:.2f}s vs ewma {ewma:.2f}s")
+        if step % loop.log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} ({dt:.2f}s)")
+        if loop.ckpt_dir and (step + 1) % loop.ckpt_every == 0:
+            if pending is not None:
+                pending.join()  # one in-flight async save at a time
+            pending = ckpt.save(
+                loop.ckpt_dir, step + 1,
+                {"params": params, "opt_state": opt_state},
+                async_=loop.async_ckpt, meta={"arch": cfg.name},
+            )
+    if pending is not None:
+        pending.join()
+    return {"params": params, "opt_state": opt_state, "losses": losses,
+            "final_step": loop.n_steps}

@@ -1,0 +1,175 @@
+"""Optimizers from scratch: AdamW and Adafactor (factored second moments).
+
+Adafactor exists because trillion-parameter AdamW moments cannot fit a
+single 256-chip v5e pod (see EXPERIMENTS.md §Dry-run, kimi-k2 row): factored
+states store O(rows + cols) instead of O(rows × cols) per matrix.
+
+State trees are declared as PD descriptors so the dry-run can shard them
+exactly like the parameters they mirror (ZeRO-style: optimizer state
+inherits the param sharding, including the FSDP axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import PD
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    state_defs: Callable[[Any], Any]  # param defs -> state defs (PD tree)
+    init: Callable[[Any], Any]  # params -> state
+    apply: Callable[..., Tuple[Any, Any]]  # (params, grads, state, lr) -> ...
+
+
+def cosine_lr(
+    step: jax.Array,
+    *,
+    peak: float = 3e-4,
+    warmup: int = 100,
+    total: int = 10_000,
+    floor: float = 0.1,
+) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = peak * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float = 1.0):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _adamw_state_defs(pdefs):
+    f32 = lambda pd: PD(pd.shape, pd.logical, "zeros", dtype="float32")
+    is_pd = lambda x: isinstance(x, PD)
+    return {
+        "m": jax.tree.map(f32, pdefs, is_leaf=is_pd),
+        "v": jax.tree.map(f32, pdefs, is_leaf=is_pd),
+        "count": PD((), (), "zeros", dtype="int32"),
+    }
+
+
+def _adamw_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _adamw_apply(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    cnt = state["count"] + 1
+    t = cnt.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1**t)
+        vh = v / (1 - b2**t)
+        step = mh / (jnp.sqrt(vh) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v, "count": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moments, no momentum
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def _adafactor_state_defs(pdefs):
+    is_pd = lambda x: isinstance(x, PD)
+
+    def leaf(pd: PD):
+        if _factored(pd.shape):
+            return {
+                "vr": PD(pd.shape[:-1], pd.logical[:-1], "zeros", dtype="float32"),
+                "vc": PD(pd.shape[:-2] + pd.shape[-1:],
+                         pd.logical[:-2] + pd.logical[-1:], "zeros", dtype="float32"),
+            }
+        return {"v": PD(pd.shape, pd.logical, "zeros", dtype="float32")}
+
+    return {"f": jax.tree.map(leaf, pdefs, is_leaf=is_pd),
+            "count": PD((), (), "zeros", dtype="int32")}
+
+
+def _adafactor_init(params):
+    def leaf(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree.map(leaf, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def _adafactor_apply_tree(params, grads, state, lr, **kw):
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    is_state_leaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    flat_s = jax.tree.leaves(state["f"], is_leaf=is_state_leaf)
+    cnt = state["count"] + 1
+    t = cnt.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8
+    d = kw.get("d", 1.0)
+    eps = 1e-30
+    wd = kw.get("wd", 0.0)
+    new_p, new_s = [], []
+    for p, g, s in zip(flat_p, flat_g, flat_s):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = (
+                vr[..., None] / (vr.mean(axis=-1, keepdims=True)[..., None] + eps)
+            ) * vc[..., None, :]
+            u = g * jax.lax.rsqrt(denom + eps)
+            ns = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(v + eps)
+            ns = {"v": v}
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / d)
+        newp = p.astype(jnp.float32) - lr * u - lr * wd * p.astype(jnp.float32)
+        new_p.append(newp.astype(p.dtype))
+        new_s.append(ns)
+    sdef = jax.tree.structure(state["f"], is_leaf=is_state_leaf)
+    return (
+        jax.tree.unflatten(tdef, new_p),
+        {"f": jax.tree.unflatten(sdef, new_s), "count": cnt},
+    )
+
+
+ADAMW = Optimizer("adamw", _adamw_state_defs, _adamw_init, _adamw_apply)
+ADAFACTOR = Optimizer(
+    "adafactor", _adafactor_state_defs, _adafactor_init, _adafactor_apply_tree
+)
+
+
+def get(name: str) -> Optimizer:
+    return {"adamw": ADAMW, "adafactor": ADAFACTOR}[name]

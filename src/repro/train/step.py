@@ -1,0 +1,131 @@
+"""Train-step builders.
+
+Two distribution paths:
+
+* ``build_train_step`` — GSPMD: shardings come from the params/batch
+  in_shardings; XLA schedules the gradient all-reduce.  Used by the 40-cell
+  dry-run (the roofline baseline).
+* ``build_train_step_butterfly`` — the paper's communication pattern as a
+  first-class gradient-sync backend: a partial-manual ``shard_map`` over the
+  data axes runs the per-shard backward, then
+  :func:`repro.core.collectives.tree_sync` merges gradients with the
+  butterfly network (``method`` ∈ butterfly | rabenseifner | all_to_all |
+  xla_psum, ``fanout`` knob).  The model axis stays auto, so tensor
+  parallelism inside is still GSPMD.  Requires params replicated over data
+  (no FSDP) — asserted.
+
+Optional ``microbatches`` folds a ``lax.scan`` gradient accumulation inside
+the step (activation memory / global-batch decoupling).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import collectives
+from repro.dist.sharding import MeshRules
+from repro.models import api
+from repro.train import optim
+
+
+def _split_batch(batch: Dict, n: int) -> Dict:
+    return jax.tree.map(lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def _grads_of(loss_fn, params, batch, microbatches: int,
+              accum_dtype=jnp.float32):
+    if microbatches <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+    mb = _split_batch(batch, microbatches)
+
+    def acc_fn(carry, b):
+        l, g = jax.value_and_grad(loss_fn)(params, b)
+        g = jax.tree.map(lambda a, c: a.astype(c.dtype), g, carry[1])
+        return (carry[0] + l, jax.tree.map(jnp.add, carry[1], g)), None
+
+    zero = (jnp.float32(0),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params))
+    (loss, grads), _ = lax.scan(acc_fn, zero, mb)
+    inv = 1.0 / microbatches
+    return loss * inv, jax.tree.map(lambda g: (g.astype(jnp.float32) * inv
+                                               ).astype(g.dtype), grads)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+    rules: Optional[MeshRules] = None,
+    microbatches: int = 1,
+    clip_norm: float = 1.0,
+    lr_kw: Optional[Dict] = None,
+):
+    """GSPMD train step: (params, opt_state, batch, step_idx) -> ..."""
+    loss_fn = api.train_loss_fn(cfg, rules, mesh)
+    opt = optim.get(cfg.optimizer)
+    lr_kw = lr_kw or {}
+
+    accum = jnp.dtype(cfg.grad_accum_dtype)
+
+    def step(params, opt_state, batch, step_idx):
+        loss, grads = _grads_of(loss_fn, params, batch, microbatches, accum)
+        grads, gnorm = optim.clip_by_global_norm(grads, clip_norm)
+        lr = optim.cosine_lr(step_idx, **lr_kw)
+        params, opt_state = opt.apply(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return step
+
+
+def build_train_step_butterfly(
+    cfg: ModelConfig,
+    mesh,
+    rules: MeshRules,
+    *,
+    method: str = "butterfly",
+    fanout: int = 2,
+    microbatches: int = 1,
+    clip_norm: float = 1.0,
+    compress: Optional[str] = None,  # None | "int8" (error-feedback handled by caller)
+    lr_kw: Optional[Dict] = None,
+):
+    """Paper-pattern gradient sync (DESIGN.md §7)."""
+    assert not rules.fsdp, "butterfly grad-sync path requires non-FSDP params"
+    axes = rules.batch
+    # inner model: no batch-axis constraints (we're manual over those axes)
+    inner_rules = MeshRules(batch=(), model=rules.model, fsdp=())
+    loss_fn = api.train_loss_fn(cfg, None, None)
+    opt = optim.get(cfg.optimizer)
+    lr_kw = lr_kw or {}
+
+    accum = jnp.dtype(cfg.grad_accum_dtype)
+
+    def inner(params, opt_state, batch, step_idx):
+        loss, grads = _grads_of(loss_fn, params, batch, microbatches, accum)
+        if compress == "int8":
+            grads = collectives.tree_sync_int8(grads, axes, method=method, fanout=fanout)
+        else:
+            grads = collectives.tree_sync(grads, axes, method=method, fanout=fanout)
+        loss = lax.pmean(loss, axes)
+        grads, gnorm = optim.clip_by_global_norm(grads, clip_norm)
+        lr = optim.cosine_lr(step_idx, **lr_kw)
+        params, opt_state = opt.apply(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    bspec = P(axes if len(axes) > 1 else axes[0])
+    step = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(P(), P(), bspec, P()),
+        out_specs=(P(), P(), P()),
+        axis_names=set(axes),
+        check_vma=False,
+    )
+    return step

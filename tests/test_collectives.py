@@ -1,0 +1,132 @@
+"""JAX butterfly collectives vs XLA-native references (8 devices)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as coll
+
+
+def _run(mesh, fn, x, axes=("data",)):
+    spec = P(axes if len(axes) > 1 else axes[0])
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                       check_vma=False)
+    return np.asarray(jax.jit(sm)(x))
+
+
+@pytest.mark.parametrize("fanout", [1, 2, 4, 8])
+def test_butterfly_allreduce_matches_psum(mesh8, fanout):
+    x = np.arange(8 * 6, dtype=np.float32).reshape(8, 6) + 1
+    want = _run(mesh8, lambda v: jax.lax.psum(v, "data"), x)
+    got = _run(mesh8, lambda v: coll.butterfly_allreduce(v, "data", fanout=fanout), x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("fanout", [1, 2, 4])
+def test_butterfly_or_merges_bitmaps(mesh8, fanout):
+    x = (np.uint32(1) << np.arange(8, dtype=np.uint32))[:, None] * np.ones(
+        (8, 4), np.uint32
+    )
+    got = _run(mesh8, lambda v: coll.butterfly_or(v, "data", fanout=fanout), x)
+    assert np.all(got == np.bitwise_or.reduce(x, axis=0))
+
+
+@pytest.mark.parametrize("fanout", [1, 2, 4])
+def test_rabenseifner_matches_psum(mesh8, fanout):
+    x = np.random.default_rng(0).normal(size=(8, 16)).astype(np.float32)
+    want = _run(mesh8, lambda v: jax.lax.psum(v, "data"), x)
+    got = _run(
+        mesh8,
+        lambda v: coll.butterfly_allreduce_rabenseifner(v, "data", fanout=fanout),
+        x,
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_rabenseifner_non_divisible_buffer(mesh8):
+    x = np.random.default_rng(1).normal(size=(8, 13)).astype(np.float32)  # pads
+    want = _run(mesh8, lambda v: jax.lax.psum(v, "data"), x)
+    got = _run(mesh8, lambda v: coll.butterfly_allreduce_rabenseifner(v, "data"), x)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_all_to_all_merge_baseline(mesh8):
+    x = np.arange(8, dtype=np.float32)[:, None] * np.ones((8, 3), np.float32)
+    want = _run(mesh8, lambda v: jax.lax.psum(v, "data"), x)
+    got = _run(mesh8, lambda v: coll.all_to_all_merge(v, "data", op="add"), x)
+    np.testing.assert_allclose(got, want)
+
+
+def test_hierarchical_axes(mesh24):
+    """Butterfly over ('pod', 'data') — the multi-pod wiring."""
+    x = np.random.default_rng(2).normal(size=(8, 5)).astype(np.float32)
+    axes = ("pod", "data")
+    want = _run(mesh24, lambda v: jax.lax.psum(v, axes), x, axes)
+    for fn in (
+        lambda v: coll.butterfly_allreduce(v, axes, fanout=2),
+        lambda v: coll.butterfly_allreduce_rabenseifner(v, axes, fanout=2),
+    ):
+        got = _run(mesh24, fn, x, axes)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_int8_compressed_allreduce_close(mesh8):
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(8, 256)).astype(np.float32) * 0.01
+    want = _run(mesh8, lambda v: jax.lax.psum(v, "data"), x)
+    got = _run(
+        mesh8, lambda v: coll.butterfly_allreduce_int8(v, "data", fanout=2), x
+    )
+    # error bound: depth * max|acc|/127 per element (DESIGN.md §7)
+    err = np.abs(got - want).max()
+    bound = 3 * np.abs(x).sum(axis=0).max() / 127  # 3 rounds for P=8
+    assert err <= bound + 1e-6, (err, bound)
+    # and it is meaningfully correct
+    rel = np.abs(got - want).mean() / np.abs(want).mean()
+    assert rel < 0.05
+
+
+def test_xla_or_reference(mesh8):
+    x = (np.uint32(1) << np.arange(8, dtype=np.uint32))[:, None] * np.ones(
+        (8, 4), np.uint32
+    )
+    got = _run(mesh8, lambda v: coll.xla_allreduce(v, "data", op="or"), x)
+    assert np.all(got == np.bitwise_or.reduce(x, axis=0))
+
+
+def test_tree_sync_methods_agree(mesh8):
+    tree = {
+        "a": np.random.default_rng(4).normal(size=(8, 7)).astype(np.float32),
+        "b": np.random.default_rng(5).normal(size=(8, 3, 2)).astype(np.float32),
+    }
+    spec = P("data")
+
+    def run(method):
+        def f(t):
+            return coll.tree_sync(t, ("data",), method=method)
+
+        sm = jax.shard_map(f, mesh=mesh8, in_specs=spec, out_specs=spec,
+                           check_vma=False)
+        return jax.tree.map(np.asarray, jax.jit(sm)(tree))
+
+    ref = run("xla_psum")
+    for m in ("butterfly", "rabenseifner", "all_to_all"):
+        out = run(m)
+        for k in tree:
+            np.testing.assert_allclose(out[k], ref[k], rtol=1e-5)
+
+
+@pytest.mark.parametrize("fanout", [1, 2, 4])
+def test_rabenseifner_or_matches_reference(mesh8, fanout):
+    x = (np.uint32(1) << np.arange(8, dtype=np.uint32))[:, None] * np.ones(
+        (8, 13), np.uint32
+    )
+    got = _run(
+        mesh8,
+        lambda v: coll.butterfly_allreduce_rabenseifner(
+            v, "data", fanout=fanout, op="or"),
+        x,
+    )
+    assert np.all(got == np.bitwise_or.reduce(x, axis=0))

@@ -1,0 +1,147 @@
+"""Dry-run analysis machinery: corrections, analytic bytes, spec builders,
+and an in-process mini dry-run cell on a (data=2, model=4) mesh.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.dist import sharding as shd
+from repro.dist.sharding import rules_for_mesh
+from repro.launch import analytic, corrections, hlo_stats
+from repro.models import api, layers
+
+
+def _long_cfg():
+    return dataclasses.replace(
+        configs.reduced(configs.get_config("olmo-1b")),
+        n_layers=2, d_model=64, d_ff=128, n_heads=2, n_kv_heads=2,
+        head_dim=32, vocab=256, scan_unroll=True,
+    )
+
+
+def test_attention_correction_matches_unrolled_reference(monkeypatch):
+    """The prefill flops correction must equal ground truth: dot-flops of a
+    single-chunk (exact-HLO) compile of the same model."""
+    cfg = _long_cfg()
+    l = 16 * 1024  # 16 chunks > unroll threshold -> correction kicks in
+    shape = ShapeConfig("test_prefill", l, 1, "prefill")
+    toks = jax.ShapeDtypeStruct((1, l), jnp.int32)
+
+    def lower():
+        return jax.jit(api.prefill_fn(cfg)).lower(
+            {"embed": pstructs["embed"], "final_norm": pstructs["final_norm"],
+             "groups": pstructs["groups"]}, {"tokens": toks}
+        ).compile().as_text()
+
+    pstructs = jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, pd.dtype or cfg.param_dtype),
+        api.param_defs(cfg), is_leaf=lambda x: hasattr(x, "logical"),
+    )
+    scanned = hlo_stats.dot_flops(lower())
+    corr = corrections.prefill_corrections(cfg, shape)["flops"]
+
+    # ground truth: force one chunk (no scan, exact flops in HLO)
+    monkeypatch.setattr(layers, "attn_chunking", lambda c, ll, causal=True: (ll, 1, 1))
+    truth = hlo_stats.dot_flops(lower())
+    assert truth > scanned  # the scan really does undercount
+    np.testing.assert_allclose(scanned + corr, truth, rtol=1e-6)
+
+
+def test_corrections_zero_for_train_and_decode():
+    cfg = configs.get_config("olmo-1b")
+    assert corrections.prefill_corrections(cfg, SHAPES["train_4k"])["flops"] == 0
+    assert corrections.prefill_corrections(cfg, SHAPES["decode_32k"])["flops"] == 0
+    # but nonzero for a 32k prefill of a full-attention arch
+    assert corrections.prefill_corrections(cfg, SHAPES["prefill_32k"])["flops"] > 0
+
+
+def test_corrections_windowed_smaller_than_global():
+    g3 = configs.get_config("gemma3-27b")
+    ds = configs.get_config("deepseek-7b")
+    c_g3 = corrections.prefill_corrections(g3, SHAPES["prefill_32k"])["flops"]
+    c_ds = corrections.prefill_corrections(ds, SHAPES["prefill_32k"])["flops"]
+    # per-layer: gemma's 5/6 local layers only pay window+chunk keys
+    assert c_g3 / g3.n_layers < 0.35 * c_ds / ds.n_layers
+
+
+def test_analytic_bytes_structure():
+    cfg = configs.get_config("deepseek-7b")
+    b_train = analytic.step_bytes(cfg, SHAPES["train_4k"])["global"]
+    b_pre = analytic.step_bytes(cfg, SHAPES["prefill_32k"])["global"]
+    b_dec = analytic.step_bytes(cfg, SHAPES["decode_32k"])["global"]
+    n = api.param_counts(cfg)["total"]
+    assert b_train > 2 * 4 * n  # must cover optimizer moments r/w
+    # decode is dominated by the KV cache read
+    kv = 30 * 128 * 32768 * 32 * 128 * 2 * 2
+    assert b_dec > kv
+    assert b_pre > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_spec_builders_cover_all_cells(mesh_dm, arch, shape):
+    """input/cache/param defs resolve to sharded ShapeDtypeStructs on a
+    (data, model) mesh for every cell (divisibility fallbacks included)."""
+    cfg = configs.get_config(arch)
+    sh = SHAPES[shape]
+    ok, _ = configs.shape_supported(cfg, sh)
+    if not ok:
+        pytest.skip("unsupported cell (long_500k full-attention)")
+    rules = rules_for_mesh(mesh_dm, cfg.fsdp)
+    p = shd.tree_structs(api.param_defs(cfg), cfg.param_dtype, rules, mesh_dm)
+    assert all(hasattr(x, "sharding") for x in jax.tree.leaves(p))
+    ins = shd.tree_structs(api.input_defs(cfg, sh), cfg.compute_dtype, rules,
+                           mesh_dm)
+    assert jax.tree.leaves(ins)
+    if sh.kind == "decode":
+        cache = shd.tree_structs(api.cache_defs(cfg, sh), cfg.compute_dtype,
+                                 rules, mesh_dm)
+        assert jax.tree.leaves(cache)
+
+
+def test_mini_dryrun_cell_compiles(mesh_dm):
+    """The full dry-run build path (GSPMD jit with sharded structs) on the
+    in-process 8-device mesh, reduced dims."""
+    from repro.train import optim, step as step_mod
+
+    cfg = dataclasses.replace(
+        configs.reduced(configs.get_config("qwen3-1.7b")),
+        n_layers=2, scan_unroll=True,
+    )
+    rules = rules_for_mesh(mesh_dm, False)
+    pdefs = api.param_defs(cfg)
+    params = shd.tree_structs(pdefs, cfg.param_dtype, rules, mesh_dm)
+    opt_state = shd.tree_structs(
+        optim.get(cfg.optimizer).state_defs(pdefs), "float32", rules, mesh_dm)
+    shape = ShapeConfig("t", 64, 8, "train")
+    batch = shd.tree_structs(api.input_defs(cfg, shape), cfg.compute_dtype,
+                             rules, mesh_dm)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    scalar = jax.ShapeDtypeStruct((), np.int32,
+                                  sharding=NamedSharding(mesh_dm, P()))
+    fn = step_mod.build_train_step(cfg, mesh=mesh_dm, rules=rules)
+    compiled = jax.jit(fn).lower(params, opt_state, batch, scalar).compile()
+    ms = hlo_stats.memory_stats(compiled)
+    assert ms["peak_bytes_per_device"] > 0
+    assert hlo_stats.dot_flops(compiled.as_text()) > 0
+
+
+def test_model_flops_definitions():
+    moe = configs.get_config("qwen3-moe-235b-a22b")
+    dense = configs.get_config("deepseek-7b")
+    tr, pre = SHAPES["train_4k"], SHAPES["prefill_32k"]
+    assert api.model_flops(moe, tr) < 6 * api.param_counts(moe)["total"] * (
+        tr.global_batch * tr.seq_len)  # active < total for MoE
+    # train = 3x prefill flops per token at equal token count
+    d_tr = tr.global_batch * tr.seq_len
+    d_pre = pre.global_batch * pre.seq_len
+    assert abs(api.model_flops(dense, tr) / d_tr
+               - 3 * api.model_flops(dense, pre) / d_pre) < 1e-3 * (
+        api.model_flops(dense, tr) / d_tr)

@@ -1,0 +1,97 @@
+"""Graph substrate: ETL invariants, partitioning, generators."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import csr, generators, partition
+
+
+def test_etl_dedup_symmetrize():
+    src = np.array([0, 0, 1, 2, 2, 2, 3])
+    dst = np.array([1, 1, 0, 3, 3, 2, 2])  # dups + self-loop (2,2)
+    g = csr.from_edges(src, dst, 4)
+    g.validate()
+    assert g.n_edges == 4  # {0-1, 1-0, 2-3, 3-2}
+    assert np.all(g.src != g.dst)
+
+
+@given(
+    n=st.integers(2, 200),
+    m=st.integers(0, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_etl_properties(n, m, seed):
+    rng = np.random.default_rng(seed)
+    g = csr.from_edges(
+        rng.integers(0, n, size=m), rng.integers(0, n, size=m), n
+    )
+    g.validate()  # symmetry, sortedness, offsets
+    assert g.n % 32 == 0
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 5, 8])
+def test_partition_covers_everything(p):
+    g = generators.kronecker(9, 8, seed=0)
+    pg = partition.partition_1d(g, p)
+    assert pg.v_count.sum() == g.n
+    assert pg.edge_count.sum() == g.n_edges
+    assert pg.in_count.sum() == g.n_edges
+    # vertex ranges contiguous & word-aligned
+    assert pg.v_start[0] == 0
+    assert np.all(pg.v_start % 32 == 0)
+    for i in range(p - 1):
+        assert pg.v_start[i] + pg.v_count[i] == pg.v_start[i + 1]
+    # every out-edge's src belongs to its owner
+    for i in range(p):
+        c = pg.edge_count[i]
+        s = pg.edge_src[i, :c]
+        assert np.all((s >= pg.v_start[i]) & (s < pg.v_start[i] + pg.v_count[i]))
+
+
+def test_partition_edge_balance():
+    g = generators.kronecker(11, 8, seed=1)
+    pg = partition.partition_1d(g, 8)
+    frac = pg.edge_count / g.n_edges
+    # paper: "near equal number of edges" — word-rounding slack allowed
+    assert frac.max() < 2.5 / 8, frac
+
+
+def test_generators_shapes():
+    g = generators.torus_2d(10)
+    assert g.n_real == 100 and g.n_edges == 400  # 4-regular
+    g = generators.path_graph(50)
+    assert g.n_edges == 98
+    g = generators.star_graph(100)
+    assert g.out_degree[:1] == [99]
+
+
+def test_kronecker_degree_skew():
+    g = generators.kronecker(10, 8, seed=0)
+    deg = g.out_degree
+    assert deg.max() > 20 * max(1, np.median(deg))  # heavy tail exists
+
+
+def test_synthetic_shapes_match_real_partition():
+    """Dry-run sizing must upper-bound a real partition of the same graph."""
+    g = generators.kronecker(12, 8, seed=2)
+    p = 8
+    pg = partition.partition_1d(g, p)
+    syn = partition.synthetic_shapes(1 << 12, 2 * (1 << 12) * 8, p)
+    assert syn.emax >= pg.emax
+    assert syn.vmax >= pg.vmax
+    assert syn.n_words >= pg.n_words
+    ashapes = syn.array_shapes()
+    real = pg.arrays()
+    assert set(ashapes) == set(real)
+
+
+def test_largest_component_root():
+    g = generators.kronecker(8, 8, seed=0)
+    rng = np.random.default_rng(0)
+    comp = csr.connected_components(g)
+    largest = np.bincount(comp[: g.n_real]).argmax()
+    for _ in range(5):
+        r = csr.largest_component_root(g, rng)
+        assert comp[r] == largest

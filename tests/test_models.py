@@ -1,0 +1,300 @@
+"""Per-architecture smoke tests + numerical consistency of model internals.
+
+The brief's requirement: every assigned arch instantiates a REDUCED config
+of the same family and runs one forward/train step on CPU asserting output
+shapes + no NaNs.  Beyond that: prefill+decode must reproduce the full
+forward pass (the strongest cache-correctness property), MoE must equal a
+dense per-token expert sum when nothing is dropped, and the chunked SSD
+scan must equal the naive O(L·N) recurrence.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.models import api, lm, mamba2, moe as moe_mod
+
+ARCHS = configs.ARCH_NAMES
+
+
+def _batch(cfg, b=2, l=32):
+    rng = np.random.default_rng(0)
+    out = {}
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_frames, cfg.d_model)), jnp.float32
+        )
+        out["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, l)), jnp.int32)
+    elif cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_patches, cfg.patch_dim)), jnp.float32
+        )
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, l - cfg.n_patches)), jnp.int32
+        )
+    else:
+        out["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, l)), jnp.int32)
+    out["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab, out["tokens"].shape), jnp.int32
+    )
+    return out
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = configs.reduced(configs.get_config(arch))
+            params = api.init_params(cfg, jax.random.PRNGKey(0))
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(smoke_state, arch):
+    """One train step on the reduced config: finite loss, params move."""
+    from repro.train import optim, step as step_mod
+
+    cfg, params = smoke_state(arch)
+    batch = _batch(cfg)
+    fn = jax.jit(step_mod.build_train_step(cfg))
+    opt = optim.get(cfg.optimizer)
+    # step=1: warmup makes lr(0) == 0, which would freeze params
+    p2, o2, metrics = fn(params, opt.init(params), batch, jnp.int32(1))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually updated
+    delta = sum(
+        float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert delta > 0
+    # shapes preserved
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        assert a.shape == b.shape and np.all(np.isfinite(np.asarray(b)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(smoke_state, arch):
+    """Teacher-forced decode must reproduce the full forward logits."""
+    cfg, params = smoke_state(arch)
+    b, l = 2, 24
+    batch = _batch(cfg, b, l)
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    toks = inputs["tokens"]
+
+    # full forward logits at every position
+    if cfg.family == "audio":
+        from repro.models import encdec
+
+        enc = encdec.encode(cfg, params, inputs["frames"])
+        h, _ = encdec._decoder(cfg, params, toks, enc, rules=None, mesh=None)
+        full_logits = lm.lm_logits(cfg, params, h)
+    else:
+        h = lm.forward_hidden(cfg, params, toks, patches=inputs.get("patches"))
+        full_logits = lm.lm_logits(cfg, params, h)
+
+    # prefill on the prompt prefix, then teacher-forced decode
+    cut = toks.shape[1] - 5
+    pre_inputs = dict(inputs, tokens=toks[:, :cut])
+    logits, cache, pos = jax.jit(api.prefill_fn(cfg))(params, pre_inputs)
+    from repro.serve.engine import pad_cache
+
+    prefix = cfg.n_patches if cfg.family == "vlm" else 0
+    cache = pad_cache(cache, cut + prefix + 5)
+    dec = jax.jit(api.decode_fn(cfg))
+    got = [logits]
+    for i in range(4):
+        logits, cache = dec(params, cache, toks[:, cut + i : cut + i + 1], pos + i)
+        got.append(logits)
+    got = jnp.stack(got, axis=1)  # (B, 5, V)
+    want = full_logits[:, prefix + cut - 1 : prefix + cut + 4]
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-3
+    )
+
+
+def test_moe_equals_dense_when_undropped():
+    """capacity >= L*k  =>  MoE == explicit per-token weighted expert sum."""
+    cfg = dataclasses.replace(
+        configs.reduced(configs.get_config("qwen3-moe-235b-a22b")),
+        capacity_factor=100.0,
+    )
+    p = jax.tree.map(
+        lambda pd: np.random.default_rng(0).normal(size=pd.shape).astype(np.float32)
+        * 0.1,
+        moe_mod.moe_defs(cfg),
+        is_leaf=lambda x: hasattr(x, "logical"),
+    )
+    x = jnp.asarray(
+        np.random.default_rng(1).normal(size=(2, 16, cfg.d_model)), jnp.float32
+    )
+    got = moe_mod.moe_block(cfg, jax.tree.map(jnp.asarray, p), x)
+
+    logits = np.einsum("bld,de->ble", np.asarray(x, np.float32), p["router"])
+    probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    w, sel = jax.lax.top_k(probs, cfg.experts_per_token)
+    w = np.asarray(w / w.sum(-1, keepdims=True))
+    sel = np.asarray(sel)
+
+    def expert(e, xv):
+        g = xv @ p["wg"][e]
+        h = (g / (1 + np.exp(-g))) * (xv @ p["wi"][e])
+        return h @ p["wo"][e]
+
+    want = np.zeros_like(np.asarray(x))
+    for b in range(x.shape[0]):
+        for t in range(x.shape[1]):
+            for k in range(cfg.experts_per_token):
+                want[b, t] += w[b, t, k] * expert(sel[b, t, k], np.asarray(x)[b, t])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = dataclasses.replace(
+        configs.reduced(configs.get_config("qwen3-moe-235b-a22b")),
+        capacity_factor=0.25,
+    )
+    assert moe_mod.capacity(cfg, 64) < 64 * cfg.experts_per_token // cfg.n_experts + 8
+    p = jax.tree.map(
+        lambda pd: jnp.asarray(
+            np.random.default_rng(0).normal(size=pd.shape), jnp.float32
+        ) * 0.1,
+        moe_mod.moe_defs(cfg),
+        is_leaf=lambda x: hasattr(x, "logical"),
+    )
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(1, 64, cfg.d_model)),
+                    jnp.float32)
+    out = moe_mod.moe_block(cfg, p, x)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_ssd_chunked_equals_naive_recurrence():
+    b, l, h, p, n = 2, 32, 3, 8, 4
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(b, l, h, p)).astype(np.float32)
+    dt = np.abs(rng.normal(size=(b, l, h))).astype(np.float32) * 0.5
+    a_log = rng.normal(size=(h,)).astype(np.float32) * 0.3
+    bm = rng.normal(size=(b, l, n)).astype(np.float32)
+    cm = rng.normal(size=(b, l, n)).astype(np.float32)
+
+    for chunk in (4, 8, 16, 32):
+        y, s = mamba2.ssd_chunked(
+            jnp.asarray(x), jnp.asarray(dt), jnp.asarray(a_log),
+            jnp.asarray(bm), jnp.asarray(cm), chunk,
+        )
+        # naive recurrence
+        want = np.zeros((b, l, h, p), np.float32)
+        state = np.zeros((b, h, p, n), np.float32)
+        A = -np.exp(a_log)
+        for t in range(l):
+            decay = np.exp(A[None] * dt[:, t])  # (b, h)
+            state = state * decay[..., None, None] + np.einsum(
+                "bh,bhp,bn->bhpn", dt[:, t], x[:, t], bm[:, t]
+            )
+            want[:, t] = np.einsum("bn,bhpn->bhp", cm[:, t], state)
+        np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"chunk={chunk}")
+        np.testing.assert_allclose(np.asarray(s), state, rtol=2e-4, atol=2e-4)
+
+
+def test_window_pattern_gemma3():
+    cfg = configs.get_config("gemma3-27b")
+    w = np.asarray(lm.window_array(cfg, 12))
+    assert list(w[:6]) == [1024] * 5 + [0]  # 5 local : 1 global
+    assert list(w[6:12]) == [1024] * 5 + [0]
+
+
+def test_jamba_layer_plan():
+    cfg = configs.get_config("jamba-v0.1-52b")
+    attn_layers = [i for i in range(cfg.n_layers) if cfg.is_attn_layer(i)]
+    assert len(attn_layers) == 4  # 1:7 ratio over 32 layers
+    moe_layers = [i for i in range(cfg.n_layers) if cfg.is_moe_layer(i)]
+    assert len(moe_layers) == 16  # every other layer
+
+
+def test_param_counts_scale():
+    c = api.param_counts(configs.get_config("kimi-k2-1t-a32b"))
+    assert 0.9e12 < c["total"] < 1.3e12  # ~1T params
+    assert 25e9 < c["active"] + c["embed"] < 40e9  # ~32B active
+    c7 = api.param_counts(configs.get_config("deepseek-7b"))
+    assert 6e9 < c7["total"] < 8e9
+
+
+def test_sliding_window_attention_masks_past():
+    """A token beyond the window must not influence attention output."""
+    cfg = dataclasses.replace(
+        configs.reduced(configs.get_config("gemma3-27b")),
+        n_layers=1,  # one layer => receptive field == window exactly
+        local_window=4, locals_per_global=1000,  # all layers local
+    )
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    t1 = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (1, 16)),
+                     jnp.int32)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 7) % cfg.vocab)  # mutate far-past token
+    h1 = lm.forward_hidden(cfg, params, t1)
+    h2 = lm.forward_hidden(cfg, params, t2)
+    # last position attends only to [12..15]; token 0 is out of every window
+    np.testing.assert_allclose(
+        np.asarray(h1[:, -1]), np.asarray(h2[:, -1]), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("flags", [
+    {"decode_inplace": True},
+    {"ring_local_cache": True},
+    {"ring_local_cache": True, "decode_inplace": True},
+])
+def test_gemma3_perf_variants_match_forward(smoke_state, flags):
+    """§Perf hillclimb variants (in-place cache, ring local cache) must be
+    numerically identical to the baseline decode."""
+    base_cfg, params = smoke_state("gemma3-27b")
+    cfg = dataclasses.replace(base_cfg, **flags)
+    b, l = 2, 24
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, l)), jnp.int32)
+    h = lm.forward_hidden(cfg, params, toks)
+    full_logits = lm.lm_logits(cfg, params, h)
+    cut = l - 5
+    logits, cache, pos = jax.jit(api.prefill_fn(cfg))(
+        params, {"tokens": toks[:, :cut]})
+    from repro.serve import engine
+
+    cache = engine.prepare_decode_cache(cfg, cache, cut, l)
+    dec = jax.jit(api.decode_fn(cfg))
+    got = [logits]
+    for i in range(4):
+        logits, cache = dec(params, cache, toks[:, cut + i : cut + i + 1],
+                            pos + i)
+        got.append(logits)
+    got = jnp.stack(got, axis=1)
+    want = full_logits[:, cut - 1 : cut + 4]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_decode_inplace_matches_all_archs(smoke_state):
+    for arch in ("olmo-1b", "qwen3-moe-235b-a22b"):
+        base_cfg, params = smoke_state(arch)
+        cfg = dataclasses.replace(base_cfg, decode_inplace=True)
+        rng = np.random.default_rng(1)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 16)), jnp.int32)
+        logits0, cache, pos = jax.jit(api.prefill_fn(base_cfg))(
+            params, {"tokens": toks})
+        from repro.serve import engine
+
+        cache = engine.pad_cache(cache, 20)
+        tok = jnp.argmax(logits0, -1)[:, None].astype(jnp.int32)
+        l_base, _ = jax.jit(api.decode_fn(base_cfg))(params, cache, tok, pos)
+        l_inp, _ = jax.jit(api.decode_fn(cfg))(params, cache, tok, pos)
+        np.testing.assert_allclose(np.asarray(l_base), np.asarray(l_inp),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,79 @@
+"""GPipe pipeline parallelism: forward equivalence + trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import pipeline
+
+
+@pytest.fixture(scope="module")
+def mesh_stage():
+    return jax.make_mesh((4, 2), ("stage", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _stage_fn(params, x):
+    # params: (Lps, d, d) — a stage's slice of the stacked layer weights
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    y, _ = jax.lax.scan(body, x, params)
+    return y
+
+
+def _ref_apply(stacked, mbs):
+    outs = []
+    for i in range(mbs.shape[0]):
+        x = mbs[i]
+        for l in range(stacked.shape[0]):
+            x = jnp.tanh(x @ stacked[l])
+        outs.append(x)
+    return jnp.stack(outs)
+
+
+def test_pipeline_matches_sequential(mesh_stage):
+    rng = np.random.default_rng(0)
+    n_layers, d, m, mb = 8, 16, 6, 4  # 4 stages x 2 layers each
+    stacked = jnp.asarray(rng.normal(size=(n_layers, d, d)) * 0.3, jnp.float32)
+    mbs = jnp.asarray(rng.normal(size=(m, mb, d)), jnp.float32)
+    fn = pipeline.build_pipelined_apply(mesh_stage, _stage_fn)
+    got = jax.jit(fn)(stacked, mbs)
+    want = _ref_apply(stacked, mbs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_pipeline_differentiable(mesh_stage):
+    """grad through the pipeline == grad through sequential execution."""
+    rng = np.random.default_rng(1)
+    n_layers, d, m, mb = 4, 8, 3, 2
+    stacked = jnp.asarray(rng.normal(size=(n_layers, d, d)) * 0.3, jnp.float32)
+    mbs = jnp.asarray(rng.normal(size=(m, mb, d)), jnp.float32)
+    fn = pipeline.build_pipelined_apply(mesh_stage, _stage_fn)
+
+    def loss_pipe(w):
+        return jnp.sum(fn(w, mbs) ** 2)
+
+    def loss_ref(w):
+        return jnp.sum(_ref_apply(w, mbs) ** 2)
+
+    g_pipe = jax.jit(jax.grad(loss_pipe))(stacked)
+    g_ref = jax.grad(loss_ref)(stacked)
+    np.testing.assert_allclose(np.asarray(g_pipe), np.asarray(g_ref),
+                               rtol=5e-4, atol=5e-6)
+
+
+def test_pipeline_bubble_structure(mesh_stage):
+    """HLO sanity: the schedule runs M+S-1 ticks of stage handoffs."""
+    from repro.launch import hlo_stats
+
+    n_layers, d, m, mb = 8, 16, 6, 4
+    stacked = jax.ShapeDtypeStruct((n_layers, d, d), jnp.float32)
+    mbs = jax.ShapeDtypeStruct((m, mb, d), jnp.float32)
+    fn = pipeline.build_pipelined_apply(mesh_stage, _stage_fn)
+    txt = jax.jit(fn).lower(stacked, mbs).compile().as_text()
+    st = hlo_stats.collective_stats(txt)
+    assert st["collective-permute"]["count"] >= 1  # the handoff exists
