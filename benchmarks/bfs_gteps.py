@@ -1,20 +1,27 @@
-"""Paper Table 1 analogue: BFS time + honest TEPS across graph families.
+"""Paper Table 1 analogue: BFS time + honest TEPS across graph families,
+now per frontier-sync mode (dense butterfly vs density-adaptive sparse).
 
 Paper protocol: multiple random roots in the largest component, trimmed
 mean.  Graph families mirror Table 1's regimes: Kronecker (GAP_kron),
 uniform random (GAP_urand), 2-D torus and path (Webbase-2001's
-high-diameter, no-parallelism pathology).
+high-diameter, no-parallelism pathology — exactly where the sparse wire
+format wins, since every level ships a handful of words).  The TD-vs-DO
+direction study lives in benchmarks/direction.py.
+
+The wire column is the analytic per-level bytes of the sync's hot path
+(dense bitmap for ``butterfly``, compact pairs for ``adaptive``) —
+machine-checked against compiled HLO in benchmarks/collective_bytes.py.
 """
 
 from benchmarks.common import Report, mesh8, timeit
 
 import numpy as np
 
+SYNCS = ("butterfly", "adaptive")
+
 
 def run(scale: int = 13, roots: int = 4) -> Report:
-    import jax
-
-    from repro.core import bfs
+    from repro.core import bfs, butterfly
     from repro.graph import csr, generators, partition
 
     graphs = {
@@ -27,34 +34,45 @@ def run(scale: int = 13, roots: int = 4) -> Report:
     }
     mesh = mesh8()
     rep = Report(
-        "bfs_gteps (paper Table 1)",
-        ["graph", "V", "E", "diam(levels)", "TD ms", "TD MTEP/s", "DO ms",
-         "DO MTEP/s", "TD/DO scanned ratio"],
+        "bfs_gteps (paper Table 1, per sync mode)",
+        ["graph", "V", "E", "diam(levels)", "sync", "ms", "MTEP/s",
+         "wire KiB/node/level"],
     )
     rng = np.random.default_rng(0)
     for name, g in graphs.items():
         pg = partition.partition_1d(g, 8)
         rs = [csr.largest_component_root(g, rng) for _ in range(roots)]
-        row = {}
-        for mode in ("top_down", "direction_optimizing"):
-            cfg = bfs.BFSConfig(axes=("data",), fanout=4, mode=mode)
+        rep.extra.setdefault("bfs", {})[name] = {}
+        for sync in SYNCS:
+            cfg = bfs.BFSConfig(axes=("data",), fanout=4, sync=sync)
             arrays = bfs.place_arrays(pg, mesh, cfg.axes)
             fn = bfs.build_bfs_fn(pg, mesh, cfg)
             times, scans, levels = [], [], 0
             for r in rs:
                 t = timeit(lambda rr=r: fn(arrays, np.int32(rr)), iters=2)
-                d, lv, sc = fn(arrays, np.int32(rs[0]))
+                d, lv, sc = fn(arrays, np.int32(r))
                 times.append(t)
                 scans.append(float(sc[0]))
                 levels = max(levels, int(np.max(lv)))
-            row[mode] = (np.mean(times), np.mean(scans), levels)
-        td, do = row["top_down"], row["direction_optimizing"]
-        rep.add(
-            name, g.n_real, g.n_edges, td[2],
-            td[0] * 1e3, td[1] / td[0] / 1e6,
-            do[0] * 1e3, do[1] / do[0] / 1e6,
-            td[1] / max(do[1], 1.0),
-        )
+            ms = float(np.mean(times)) * 1e3
+            mteps = float(np.mean(scans)) / np.mean(times) / 1e6
+            if sync == "adaptive":
+                wire = butterfly.bytes_per_node_sparse(
+                    pg.p, cfg.fanout, cfg.resolved_capacity(pg.n_words),
+                    pg.n_words,
+                )
+            else:
+                wire = butterfly.bytes_per_node_allreduce(
+                    pg.p, cfg.fanout, pg.n_words * 4
+                )
+            rep.add(name, g.n_real, g.n_edges, levels, sync, ms, mteps,
+                    wire / 1024)
+            rep.extra["bfs"][name][sync] = {
+                "ms": ms,
+                "mteps": mteps,
+                "levels": levels,
+                "wire_kib_per_node_level": wire / 1024,
+            }
     return rep
 
 

@@ -11,6 +11,8 @@ import numpy as np
 
 
 def run(n_words: int = 1 << 16) -> Report:
+    import math
+
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
@@ -25,6 +27,8 @@ def run(n_words: int = 1 << 16) -> Report:
          "HLO wire KiB/node", "analytic KiB/node"],
     )
     buf_bytes = n_words * 4
+    # sparse capacity sized for the acceptance regime: 1% word density
+    cap = max(64, math.ceil(0.01 * n_words))
 
     def lower(fn):
         sm = jax.shard_map(fn, mesh=mesh, in_specs=P("data"),
@@ -59,6 +63,48 @@ def run(n_words: int = 1 << 16) -> Report:
     rab = butterfly.bytes_per_node_rabenseifner(8, 2, buf_bytes)
     rep.add("rabenseifner f=2", st["collective-permute"]["count"], "2(P-1)/P",
             st["collective-permute"]["wire_bytes"] / 1024, rab / 1024)
+
+    # --- sparse / adaptive frontier exchange (DESIGN.md §12) --------------
+    # dense reference at the same fanout, for the byte-reduction ratio
+    st = hlo_stats.collective_stats(
+        lower(lambda v: coll.butterfly_or(v, "data", fanout=2)))
+    dense_f2 = st["collective-permute"]["wire_bytes"]
+
+    # conditional-free sparse lowering: plain collective_stats applies
+    st = hlo_stats.collective_stats(lower(
+        lambda v: coll.butterfly_or_sparse(
+            v[0], "data", fanout=2, capacity=cap, fallback=False)[None]))
+    sparse_analytic = butterfly.bytes_per_node_sparse(8, 2, cap, n_words)
+    rep.add(f"sparse f=2 cap={cap}", st["collective-permute"]["count"],
+            2 * butterfly.messages_per_node(8, 2),  # idx + vals per message
+            st["collective-permute"]["wire_bytes"] / 1024,
+            sparse_analytic / 1024)
+
+    # full adaptive dispatcher: both branches live in the HLO; attribute
+    # wire bytes per lax.cond branch (branch 1 = the sparse/True path)
+    txt = lower(lambda v: coll.butterfly_or_adaptive(
+        v[0], "data", fanout=2, capacity=cap, density_threshold=0.01)[None])
+    branches = hlo_stats.conditional_branch_stats(txt)
+    assert branches, "adaptive lowering lost its conditional"
+    (dense_name, dense_st), (sparse_name, sparse_st) = branches[0]
+    adaptive = {
+        "dense": dense_st["collective-permute"]["wire_bytes"],
+        "sparse": sparse_st["collective-permute"]["wire_bytes"],
+    }
+    for label, wire in adaptive.items():
+        rep.add(f"adaptive f=2 ({label} branch)", "-", "-", wire / 1024,
+                (buf_bytes * butterfly.messages_per_node(8, 2) if label == "dense"
+                 else sparse_analytic) / 1024)
+    ratio = adaptive["sparse"] / dense_f2
+    rep.add("adaptive sparse/dense wire ratio", "-", "-", ratio, "<=0.10")
+    rep.extra["bfs_wire"] = {
+        "n_words": n_words,
+        "sparse_capacity": cap,
+        "dense_f2_wire_bytes_per_node": dense_f2,
+        "adaptive_sparse_wire_bytes_per_node": adaptive["sparse"],
+        "adaptive_dense_wire_bytes_per_node": adaptive["dense"],
+        "sparse_over_dense_ratio": ratio,
+    }
     return rep
 
 

@@ -47,6 +47,9 @@ class Report:
         self.name = name
         self.columns = columns
         self.rows: List[List] = []
+        # machine-readable side channel (run.py lifts bfs entries into
+        # BENCH_bfs.json so the perf trajectory is tracked across PRs)
+        self.extra: Dict = {}
 
     def add(self, *row):
         self.rows.append(list(row))
@@ -64,7 +67,10 @@ class Report:
         return "\n".join(out)
 
     def to_dict(self) -> Dict:
-        return {"name": self.name, "columns": self.columns, "rows": self.rows}
+        out = {"name": self.name, "columns": self.columns, "rows": self.rows}
+        if self.extra:
+            out["extra"] = self.extra
+        return out
 
 
 def _fmt(v) -> str:

@@ -32,6 +32,7 @@ def main() -> int:
 
     mods = [bfs_gteps, scaling, fanout, collective_bytes, direction, grad_sync]
     results = []
+    extras = {}
     t_all = time.time()
     for mod in mods:
         t0 = time.time()
@@ -39,10 +40,22 @@ def main() -> int:
         print(rep.render())
         print(f"   [{mod.__name__} took {time.time()-t0:.1f}s]\n")
         results.append(rep.to_dict())
+        extras.update(rep.extra)
     out = os.path.join(os.path.dirname(__file__), "results.json")
     with open(out, "w") as f:
         json.dump(results, f, indent=1)
+    # machine-readable BFS perf trajectory: TEPS + wire bytes per sync mode
+    # (tracked across PRs; see ROADMAP.md)
+    bench = {
+        "teps_per_sync": extras.get("bfs", {}),
+        "wire_per_sync": extras.get("bfs_wire", {}),
+    }
+    bench_out = os.path.join(os.path.dirname(__file__), "..", "BENCH_bfs.json")
+    bench_out = os.path.abspath(bench_out)
+    with open(bench_out, "w") as f:
+        json.dump(bench, f, indent=1)
     print(f"all benchmarks done in {time.time()-t_all:.1f}s -> {out}")
+    print(f"machine-readable BFS trajectory -> {bench_out}")
     return 0
 
 

@@ -1,0 +1,107 @@
+"""Version-compatibility shims for the pinned JAX toolchain.
+
+The codebase is written against the modern public JAX API:
+
+* ``jax.shard_map(..., check_vma=..., axis_names=...)``
+* ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)``
+* ``jax.tree.flatten_with_path``
+
+The container pins ``jax==0.4.37`` where those spell differently
+(``jax.experimental.shard_map.shard_map`` with ``check_rep``/``auto``, no
+``AxisType``, no ``axis_types`` kwarg).  Rather than sprinkle version
+branches through every module, this file installs forward-looking aliases
+onto the ``jax`` namespace once, at ``repro`` import time.  On a JAX that
+already provides the modern names every shim is a no-op, so the package
+keeps working unchanged after an upgrade.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.tree
+import jax.tree_util
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" in params:
+        return
+    _make_mesh = jax.make_mesh
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # axis_types is advisory (Auto everywhere here); old JAX has no
+        # explicit-sharding mode, so dropping it preserves semantics.
+        del axis_types
+        return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                  axis_names=None):
+        kwargs = {}
+        if axis_names is not None:
+            # modern API: axis_names = manually-mapped axes; old API takes
+            # the complement as `auto`.
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            if auto:
+                kwargs["auto"] = auto
+        return _shard_map(f, mesh, in_specs, out_specs,
+                          check_rep=check_vma, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        # psum of a concrete 1 is evaluated eagerly to the (static) axis
+        # size — the documented pre-axis_size idiom.
+        total = 1
+        names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        for name in names:
+            total *= jax.lax.psum(1, name)
+        return total
+
+    jax.lax.axis_size = axis_size
+
+
+def _install_tree_flatten_with_path() -> None:
+    if hasattr(jax.tree, "flatten_with_path"):
+        return
+    jax.tree.flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()
+    _install_axis_size()
+    _install_tree_flatten_with_path()
+
+
+install()

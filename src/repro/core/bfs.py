@@ -71,17 +71,43 @@ class BFSConfig:
 
     axes: Tuple[str, ...] = ("data",)
     fanout: int = 2  # paper fanout: 1 -> pairwise, 4 -> radix-4 rounds
-    sync: str = "butterfly"  # butterfly | all_to_all | xla
+    # butterfly | sparse | adaptive | rabenseifner | all_to_all | xla
+    sync: str = "butterfly"
     mode: str = "top_down"  # top_down | bottom_up | direction_optimizing
     alpha: float = 15.0  # Beamer push->pull threshold
     beta: float = 18.0  # Beamer pull->push threshold
     max_levels: Optional[int] = None
     use_pallas: bool = False  # frontier kernels via Pallas (TPU) vs XLA ops
+    # --- sparse/adaptive sync knobs (DESIGN.md §12) -----------------------
+    # max (word_index, word) pairs shipped in the first sparse round;
+    # 0 -> auto-size to n_words // 64 (>= 64) at build time.
+    sparse_capacity: int = 0
+    # adaptive dispatch: go sparse while the densest rank's popcount stays
+    # under this fraction of the bitmap bits (and its word count fits the
+    # capacity).
+    density_threshold: float = 0.02
+
+    def resolved_capacity(self, n_words: int) -> int:
+        cap = self.sparse_capacity or max(64, n_words // 64)
+        return min(cap, n_words)
 
 
 def _sync_frontier(words: jax.Array, cfg: BFSConfig) -> jax.Array:
     if cfg.sync == "butterfly":
         return collectives.butterfly_or(words, cfg.axes, fanout=cfg.fanout)
+    if cfg.sync == "sparse":
+        # always-sparse wire format, dense fallback only on overflow
+        return collectives.butterfly_or_sparse(
+            words, cfg.axes, fanout=cfg.fanout,
+            capacity=cfg.resolved_capacity(words.shape[0]),
+        )
+    if cfg.sync == "adaptive":
+        # per-level dense/sparse dispatch keyed on frontier density
+        return collectives.butterfly_or_adaptive(
+            words, cfg.axes, fanout=cfg.fanout,
+            capacity=cfg.resolved_capacity(words.shape[0]),
+            density_threshold=cfg.density_threshold,
+        )
     if cfg.sync == "rabenseifner":
         # beyond-paper: OR-reduce-scatter + all-gather on the same wiring —
         # 2(P-1)/P of the bitmap per node vs log_f(P) full-bitmap ships

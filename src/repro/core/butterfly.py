@@ -47,10 +47,16 @@ __all__ = [
     "total_messages",
     "bytes_per_node_allreduce",
     "bytes_per_node_rabenseifner",
+    "sparse_round_capacities",
+    "bytes_per_node_sparse",
+    "expected_bytes_per_node_adaptive",
     "simulate_allreduce",
     "simulate_reduce_scatter_allgather",
+    "simulate_or_sparse",
     "peak_buffer_elems",
 ]
+
+SPARSE_PAIR_BYTES = 8  # int32 word index + uint32 word on the wire
 
 
 def _digit_size(fanout: int) -> int:
@@ -197,6 +203,70 @@ def bytes_per_node_rabenseifner(p: int, fanout: int, nbytes: int) -> int:
     return 2 * sent
 
 
+def sparse_round_capacities(
+    p: int, fanout: int, capacity: int, n_words: int | None = None
+) -> List[int]:
+    """Per-round send capacity (in (idx, word) pairs) of the sparse butterfly.
+
+    Round ``r`` ships up to ``capacity * prod(digits[:r])`` pairs — the
+    union-growth bound: after ``r`` rounds each accumulator holds at most
+    that many active words when every initial frontier fits ``capacity``.
+    Clamped at ``n_words`` (a compaction can never exceed the dense size).
+    """
+    caps: List[int] = []
+    c = capacity
+    for d in digit_plan(p, fanout):
+        caps.append(min(c, n_words) if n_words is not None else c)
+        c *= d
+    return caps
+
+
+def bytes_per_node_sparse(
+    p: int,
+    fanout: int,
+    capacity: int,
+    n_words: int | None = None,
+    pair_bytes: int = SPARSE_PAIR_BYTES,
+) -> int:
+    """Wire bytes sent per node by :func:`collectives.butterfly_or_sparse`:
+    ``(d_r - 1)`` messages of ``cap_r`` pairs per round (paper Sec. 3 model
+    extended to the compact wire format)."""
+    caps = sparse_round_capacities(p, fanout, capacity, n_words)
+    return sum(
+        (d - 1) * cap * pair_bytes for d, cap in zip(digit_plan(p, fanout), caps)
+    )
+
+
+def expected_bytes_per_node_adaptive(
+    p: int,
+    fanout: int,
+    n_words: int,
+    density: float,
+    capacity: int,
+    word_bytes: int = 4,
+    *,
+    density_threshold: float | None = None,
+    mean_bits_per_word: float = 32.0,
+) -> int:
+    """Per-level wire bytes of the ADAPTIVE sync at a given active-WORD
+    density (fraction of ``n_words`` nonzero on the densest rank).
+
+    Mirrors both conditions of ``collectives.butterfly_or_adaptive``: the
+    capacity fit (``density * n_words <= capacity``) and, when
+    ``density_threshold`` is given, the popcount guard — modeled as
+    ``active_words * mean_bits_per_word <= threshold * n_words * 32``
+    (set ``mean_bits_per_word`` to the expected set bits per active word;
+    32 is the pessimistic fully-populated-word case)."""
+    active_words = math.ceil(density * n_words)
+    sparse_ok = active_words <= min(capacity, n_words)
+    if density_threshold is not None:
+        popcount = active_words * mean_bits_per_word
+        sparse_ok = sparse_ok and popcount <= density_threshold * n_words * 32
+    if sparse_ok:
+        return bytes_per_node_sparse(p, fanout, capacity, n_words)
+    return bytes_per_node_allreduce(p, fanout, n_words * word_bytes)
+
+
 def peak_buffer_elems(p: int, fanout: int, v: int) -> int:
     """Paper Contribution 4: intermediate buffers are bounded by O(f * V).
 
@@ -238,6 +308,56 @@ def _merge_all(acc, incoming, op):
     for r in incoming:
         acc = op(acc, r)
     return acc
+
+
+def simulate_or_sparse(
+    bitmaps: Sequence[np.ndarray],
+    fanout: int,
+    capacity: int,
+    *,
+    fallback: bool = True,
+):
+    """Host oracle for ``collectives.butterfly_or_sparse`` (+ its fallback).
+
+    Mirrors the JAX lowering operation for operation: per round every rank
+    compacts its CURRENT accumulator to the round capacity (ascending word
+    index, truncating past capacity — same semantics as the size-bounded
+    ``jnp.nonzero``), ships the pairs along the schedule's permutations, and
+    scatter-ORs what it receives.  With ``fallback=True`` an initial count
+    over ``capacity`` on ANY rank reroutes to the dense full-bitmap
+    butterfly, exactly like the ``lax.cond`` guard.
+
+    Returns ``(per_rank_bitmaps, stats)`` where ``stats`` records the mode
+    taken and the analytic wire bytes per node for that mode.
+    """
+    p = len(bitmaps)
+    n_words = int(bitmaps[0].size)
+    state = [np.array(b, dtype=np.uint32) for b in bitmaps]
+    cap0 = min(capacity, n_words)
+    overflow = any(int(np.count_nonzero(b)) > cap0 for b in state)
+    if fallback and overflow:
+        merged = simulate_allreduce(state, fanout, op=np.bitwise_or)
+        return merged, {
+            "mode": "dense",
+            "bytes_per_node": bytes_per_node_allreduce(p, fanout, n_words * 4),
+        }
+
+    sched = build_schedule(p, fanout)
+    caps = sparse_round_capacities(p, fanout, capacity, n_words)
+    for rnd, cap in zip(sched.rounds, caps):
+        # compact once per rank against the pre-round accumulator
+        compacts = []
+        for g in range(p):
+            idx = np.flatnonzero(state[g])[:cap]
+            compacts.append((idx, state[g][idx]))
+        for perm in rnd.perms:
+            for src, dst in enumerate(perm):
+                idx, vals = compacts[src]
+                state[dst][idx] |= vals
+    return state, {
+        "mode": "sparse",
+        "bytes_per_node": bytes_per_node_sparse(p, fanout, capacity, n_words),
+    }
 
 
 def simulate_reduce_scatter_allgather(

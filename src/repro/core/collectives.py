@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import butterfly
+from repro.core import frontier as fr
 
 Axes = Union[str, Sequence[str]]
 
@@ -100,6 +101,114 @@ def butterfly_allreduce(
 ) -> jax.Array:
     """Sum all-reduce with the paper-faithful full-buffer butterfly."""
     return butterfly_merge(x, axes, fanout=fanout, op="add")
+
+
+# ---------------------------------------------------------------------------
+# Density-adaptive sparse frontier exchange (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def butterfly_or_sparse(
+    x: jax.Array,
+    axes: Axes,
+    *,
+    fanout: int = 2,
+    capacity: int = 256,
+    fallback: bool = True,
+) -> jax.Array:
+    """Bitmap OR-merge shipping COMPACT ``(word_index, word)`` pairs.
+
+    Same :class:`butterfly.Schedule` wiring as :func:`butterfly_or`, but each
+    round ppermutes a fixed-capacity compaction of the accumulator instead of
+    the full ``O(V/32)`` bitmap.  The per-round send capacity multiplies by
+    the round's digit (clamped at the dense size): after merging a round the
+    accumulator is a union of ``prod(digits so far)`` initial frontiers, so
+    its nonzero-word count is bounded by ``capacity x prod`` whenever every
+    rank's INITIAL count fits ``capacity``.  That makes the initial count the
+    only overflow condition.
+
+    ``fallback=True`` guards exactly that condition with a scalar ``pmax``
+    and a ``lax.cond`` to the dense :func:`butterfly_or` — truncation can
+    never corrupt the frontier.  ``fallback=False`` skips the guard (callers
+    that pre-checked the count, e.g. the adaptive dispatcher, and the HLO
+    byte-accounting benchmarks that need a conditional-free lowering).
+
+    Wire bytes per message: ``8 * cap_r`` (int32 index + uint32 word) vs the
+    dense ``4 * n_words`` — the paper Sec. 3 byte model's decisive lever on
+    high-diameter graphs where frontiers hold a handful of vertices.
+    """
+    axes = _as_axes(axes)
+    n_words = x.shape[0]
+
+    def sparse(words):
+        cap = capacity
+        for axis in axes:
+            p = lax.axis_size(axis)
+            if p == 1:
+                continue
+            sched = butterfly.build_schedule(p, fanout)
+            for rnd in sched.rounds:
+                c = min(cap, n_words)
+                idx, vals, _, _ = fr.compact_words(words, c)
+                for perm in rnd.perms:
+                    pairs = list(enumerate(perm))
+                    ridx = lax.ppermute(idx, axis, pairs)
+                    rvals = lax.ppermute(vals, axis, pairs)
+                    words = fr.scatter_or_words(words, ridx, rvals)
+                cap *= rnd.digit
+        return words
+
+    if not fallback:
+        return sparse(x)
+
+    count = jnp.count_nonzero(x).astype(jnp.int32)
+    for a in axes:
+        count = lax.pmax(count, a)
+    return lax.cond(
+        count <= min(capacity, n_words),
+        sparse,
+        lambda w: butterfly_or(w, axes, fanout=fanout),
+        x,
+    )
+
+
+def butterfly_or_adaptive(
+    x: jax.Array,
+    axes: Axes,
+    *,
+    fanout: int = 2,
+    capacity: int = 256,
+    density_threshold: float = 0.02,
+) -> jax.Array:
+    """Per-call dense/sparse dispatch keyed on the frontier's density.
+
+    Inside the jitted BFS level loop this decides EVERY level: sparse when
+    the densest rank's popcount stays under ``density_threshold`` of the
+    bitmap bits AND its active-word count fits ``capacity`` (the sparse
+    path's no-overflow precondition — so the sparse branch needs no inner
+    fallback), dense otherwise.  The two scalar ``pmax`` reductions ride the
+    wire as a handful of bytes; both branches live in the compiled HLO and
+    ``lax.cond`` picks one per level at run time.
+    """
+    axes = _as_axes(axes)
+    n_words = x.shape[0]
+    cap = min(capacity, n_words)
+
+    pops = fr.popcount(x)
+    nz = jnp.count_nonzero(x).astype(jnp.int32)
+    for a in axes:
+        pops = lax.pmax(pops, a)
+        nz = lax.pmax(nz, a)
+    bits_limit = jnp.int32(density_threshold * n_words * fr.WORD_BITS)
+    go_sparse = (pops <= bits_limit) & (nz <= cap)
+    return lax.cond(
+        go_sparse,
+        lambda w: butterfly_or_sparse(
+            w, axes, fanout=fanout, capacity=cap, fallback=False
+        ),
+        lambda w: butterfly_or(w, axes, fanout=fanout),
+        x,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -255,21 +364,12 @@ def xla_allreduce(x: jax.Array, axes: Axes, *, op: str = "add") -> jax.Array:
     if op == "max":
         return lax.pmax(x, axes)
     if op == "or":
-        # No native por; go through psum on popcount-safe widening or use
-        # max over unsigned words (OR == max only for single bits), so use
-        # sum-of-bools semantics: OR(a,b) == (a|b); emulate with pmax on each
-        # word is wrong; instead use psum on uint32 is wrong too.  Correct
-        # trick: OR across ranks == ~AND(~x) and AND == pmin for masks of
-        # 0/0xffffffff only.  General correct route: all_gather + fold.
-        g = lax.all_gather(x, axes[0], axis=0, tiled=False)
-        out = jax.tree_util.tree_reduce(
-            jnp.bitwise_or, [g[i] for i in range(g.shape[0])]
-        )
-        for a in axes[1:]:
+        # XLA has no native bitwise-OR all-reduce: all-gather the words and
+        # OR-reduce the gathered axis, one axis at a time.
+        out = x
+        for a in axes:
             g = lax.all_gather(out, a, axis=0, tiled=False)
-            out = jax.tree_util.tree_reduce(
-                jnp.bitwise_or, [g[i] for i in range(g.shape[0])]
-            )
+            out = jnp.bitwise_or.reduce(g, axis=0)
         return out
     raise ValueError(op)
 

@@ -52,6 +52,40 @@ def popcount(words: jax.Array) -> jax.Array:
     return lax.population_count(words).astype(jnp.int32).sum()
 
 
+def compact_words(words: jax.Array, capacity: int):
+    """Fixed-capacity sparse view of a bitmap: the first ``capacity`` active
+    ``(word_index, word)`` pairs (size-bounded nonzero), in ascending index
+    order — the wire format of the sparse butterfly exchange.
+
+    Returns ``(idx int32[capacity], vals uint32[capacity], count int32,
+    overflow bool)``.  Padding slots are ``(0, 0)``; a scatter-OR of a zero
+    word is a no-op, so neither ``count`` nor ``overflow`` needs to travel
+    on the wire — they exist for the density-adaptive dispatch and the
+    overflow→dense fallback.  When ``count > capacity`` the tail words are
+    silently truncated; callers MUST consult ``overflow`` (or pre-check the
+    count) before trusting the pairs.
+    """
+    count = jnp.count_nonzero(words).astype(jnp.int32)
+    (idx,) = jnp.nonzero(words, size=capacity, fill_value=0)
+    idx = idx.astype(jnp.int32)
+    slot = jnp.arange(capacity, dtype=jnp.int32)
+    vals = jnp.where(slot < count, words[idx], jnp.uint32(0))
+    return idx, vals, count, count > capacity
+
+
+def expand_words(n_words: int, idx: jax.Array, vals: jax.Array) -> jax.Array:
+    """Inverse of :func:`compact_words`: scatter the pairs into an empty
+    bitmap.  Scatter-max == scatter-OR here because real indices are unique
+    within one compaction and padding values are 0."""
+    return jnp.zeros((n_words,), _U32).at[idx].max(vals.astype(_U32))
+
+
+def scatter_or_words(words: jax.Array, idx: jax.Array, vals: jax.Array) -> jax.Array:
+    """OR compact ``(idx, vals)`` pairs into an existing bitmap (the receive
+    side of the sparse exchange)."""
+    return words | expand_words(words.shape[0], idx, vals)
+
+
 def scatter_or(n_words: int, idx: jax.Array, active: jax.Array) -> jax.Array:
     """Build a bitmap with bits ``idx[i]`` set where ``active[i]``.
 

@@ -1,0 +1,1 @@
+"""Distribution substrate: logical sharding rules + pipeline parallelism."""

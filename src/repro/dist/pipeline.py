@@ -1,0 +1,74 @@
+"""GPipe pipeline parallelism on a ``stage`` mesh axis (DESIGN.md §11).
+
+The stacked per-layer weights ``(L, ...)`` are split into ``S = |stage|``
+contiguous stage slices; microbatches ``(M, mb, d)`` stream through the
+stages with one ``lax.ppermute`` handoff per tick.  The schedule runs
+``M + S - 1`` ticks (the classic GPipe bubble); stage ``s`` computes
+microbatch ``t - s`` at tick ``t``.  Everything is a ``lax.scan`` over
+ticks inside one ``shard_map``, so the whole pipeline is a single XLA
+program and is differentiable end to end (the ppermute transposes to the
+reverse handoff).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def build_pipelined_apply(mesh: jax.sharding.Mesh,
+                          stage_fn: Callable) -> Callable:
+    """Returns ``f(stacked_params, microbatches) -> outputs``.
+
+    * ``stacked_params``: ``(L, ...)`` per-layer weights, ``L % S == 0``;
+      stage ``s`` runs layers ``[s*L/S, (s+1)*L/S)`` via
+      ``stage_fn(stage_params, x)``.
+    * ``microbatches``: ``(M, mb, d)``; the batch dim is sharded over any
+      non-stage mesh axes.
+    """
+    s_total = mesh.shape["stage"]
+    data_axes = tuple(a for a in mesh.axis_names if a != "stage")
+
+    def inner(w, xs):
+        sidx = lax.axis_index("stage")
+        m = xs.shape[0]
+        ticks = m + s_total - 1
+        bubble = jnp.zeros((s_total - 1,) + xs.shape[1:], xs.dtype)
+        feed = jnp.concatenate([xs, bubble], axis=0)  # (ticks, mb, d)
+
+        def tick(carry, x_t):
+            # stage 0 consumes the feed; later stages consume the handoff
+            x_in = jnp.where(sidx == 0, x_t, carry)
+            y = stage_fn(w, x_in)
+            handoff = lax.ppermute(
+                y, "stage", [(i, i + 1) for i in range(s_total - 1)]
+            )
+            return handoff, y
+
+        _, outs = lax.scan(tick, jnp.zeros(xs.shape[1:], xs.dtype), feed)
+        # the last stage emits microbatch t-(S-1) at tick t; other stages'
+        # outputs are intermediate activations — zero them and share the
+        # final ones to every stage so the result is replicated over stage.
+        res = outs[s_total - 1:]
+        res = jnp.where(sidx == s_total - 1, res, jnp.zeros_like(res))
+        return lax.psum(res, "stage")
+
+    batch_spec = P(None, data_axes if len(data_axes) != 1 else data_axes[0]) \
+        if data_axes else P()
+    shard_fn = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(P("stage"), batch_spec),
+        out_specs=batch_spec,
+        check_vma=False,
+    )
+
+    def apply(stacked, mbs):
+        assert stacked.shape[0] % s_total == 0, (stacked.shape, s_total)
+        return shard_fn(stacked, mbs)
+
+    return apply

@@ -1,0 +1,163 @@
+"""Logical-axis sharding: PD descriptors + mesh rules (DESIGN.md §7).
+
+Parameters, optimizer states, inputs and caches are all declared as pytrees
+of :class:`PD` — shape plus *logical* axis names ("embed", "heads", "ff",
+"vocab", "batch", ...).  A :class:`MeshRules` maps logical names onto
+physical mesh axes:
+
+* ``batch``  -> the data-parallel axes (``data``, plus ``pod`` when present)
+* ``heads`` / ``kv_heads`` / ``ff`` / ``vocab`` / ``experts`` / ``d_inner``
+  -> the tensor-parallel ``model`` axis
+* ``embed``  -> the data axes again when FSDP is on (ZeRO-3), else replicated
+* anything else (``layers``, ``None``) -> replicated
+
+``tree_structs`` / ``tree_pspecs`` apply the rules with a divisibility
+fallback: a dimension that does not divide evenly over its mesh axes is
+left replicated (e.g. 2 kv-heads on a 4-way model axis), which is what lets
+every architecture cell build on every mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical-name -> rule-field routing
+_BATCH_LOGICAL = ("batch",)
+_MODEL_LOGICAL = ("heads", "kv_heads", "ff", "vocab", "experts", "d_inner")
+_FSDP_LOGICAL = ("embed",)
+
+
+@dataclasses.dataclass(frozen=True)
+class PD:
+    """Parameter/input descriptor: shape + logical axes + init + dtype.
+
+    ``logical[i]`` names dimension ``i``; ``init`` is one of ``zeros`` /
+    ``ones`` / ``normal`` (fixed 0.02 std) / ``scaled`` (fan-in scaled);
+    ``dtype`` overrides the tree-wide default when set (e.g. int32 tokens,
+    float32 router logits).
+    """
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "zeros"
+    dtype: Optional[str] = None
+
+
+def _is_pd(x) -> bool:
+    return isinstance(x, PD)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Physical axes for each logical role (empty tuple = replicated)."""
+
+    batch: Tuple[str, ...] = ()
+    model: Tuple[str, ...] = ()
+    fsdp: Tuple[str, ...] = ()
+
+    def axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical in _BATCH_LOGICAL:
+            return self.batch
+        if logical in _MODEL_LOGICAL:
+            return self.model
+        if logical in _FSDP_LOGICAL:
+            return self.fsdp
+        return ()
+
+
+def rules_for_mesh(mesh: jax.sharding.Mesh, fsdp: bool = False) -> MeshRules:
+    """Derive MeshRules from a mesh's axis names.
+
+    ``data`` / ``pod`` / ``batch`` axes carry the batch; a ``model`` axis
+    carries tensor parallelism; with ``fsdp`` the embed dimension is
+    additionally sharded over the batch axes (ZeRO-3).
+    """
+    names = tuple(mesh.axis_names)
+    batch = tuple(a for a in names if a in ("pod", "data", "batch"))
+    model = tuple(a for a in names if a == "model")
+    return MeshRules(batch=batch, model=model, fsdp=batch if fsdp else ())
+
+
+def _axes_size(mesh: jax.sharding.Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(pd: PD, rules: MeshRules, mesh: jax.sharding.Mesh) -> P:
+    """PartitionSpec for one PD, with the divisibility fallback."""
+    entries = []
+    for dim, logical in zip(pd.shape, pd.logical):
+        axes = rules.axes_for(logical)
+        if axes and dim % _axes_size(mesh, axes) == 0:
+            entries.append(axes[0] if len(axes) == 1 else tuple(axes))
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()  # trailing Nones are implicit
+    return P(*entries)
+
+
+def _resolve_dtype(pd: PD, default) -> jnp.dtype:
+    return jnp.dtype(pd.dtype if pd.dtype is not None else default)
+
+
+def tree_pspecs(defs, rules: MeshRules, mesh: jax.sharding.Mesh):
+    """PD tree -> PartitionSpec tree (same structure)."""
+    return jax.tree.map(lambda pd: spec_for(pd, rules, mesh), defs,
+                        is_leaf=_is_pd)
+
+
+def tree_structs(defs, default_dtype, rules: MeshRules,
+                 mesh: jax.sharding.Mesh):
+    """PD tree -> sharded ShapeDtypeStruct tree (dry-run building block)."""
+
+    def leaf(pd: PD):
+        return jax.ShapeDtypeStruct(
+            pd.shape,
+            _resolve_dtype(pd, default_dtype),
+            sharding=NamedSharding(mesh, spec_for(pd, rules, mesh)),
+        )
+
+    return jax.tree.map(leaf, defs, is_leaf=_is_pd)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _init_leaf(pd: PD, key: jax.Array, default_dtype) -> jax.Array:
+    dtype = _resolve_dtype(pd, default_dtype)
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, dtype)
+    if pd.init == "normal":
+        std = 0.02
+    elif pd.init == "scaled":
+        # fan-in scaled: all leading dims feed the last (output) dim
+        fan_in = max(1, int(np.prod(pd.shape[:-1]))) if len(pd.shape) >= 2 else 1
+        std = float(fan_in) ** -0.5
+    else:
+        raise ValueError(f"unknown init {pd.init!r}")
+    return (std * jax.random.normal(key, pd.shape, jnp.float32)).astype(dtype)
+
+
+def tree_init(defs, rng: jax.Array, default_dtype="float32"):
+    """Deterministic parameter init: every leaf's key is ``fold_in(rng,
+    crc32(path))`` so the result is independent of tree iteration order."""
+    flat, treedef = jax.tree.flatten_with_path(defs, is_leaf=_is_pd)
+    leaves = []
+    for path, pd in flat:
+        salt = zlib.crc32(jax.tree_util.keystr(path).encode()) & 0x7FFFFFFF
+        leaves.append(_init_leaf(pd, jax.random.fold_in(rng, salt), default_dtype))
+    return jax.tree.unflatten(treedef, leaves)

@@ -23,7 +23,14 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--fanout", type=int, default=4)
     ap.add_argument("--sync", default="butterfly",
-                    choices=["butterfly", "all_to_all", "xla"])
+                    choices=["butterfly", "sparse", "adaptive", "rabenseifner",
+                             "all_to_all", "xla"])
+    ap.add_argument("--sparse-capacity", type=int, default=0,
+                    help="first-round (word,idx)-pair capacity of the sparse "
+                         "sync; 0 = auto (n_words//64)")
+    ap.add_argument("--density-threshold", type=float, default=0.02,
+                    help="adaptive sync: go sparse while max popcount <= "
+                         "threshold * bitmap bits")
     ap.add_argument("--mode", default="top_down",
                     choices=["top_down", "bottom_up", "direction_optimizing"])
     ap.add_argument("--roots", type=int, default=16)
@@ -56,7 +63,8 @@ def main(argv=None) -> int:
                          axis_types=(jax.sharding.AxisType.Auto,))
     cfg = bfs.BFSConfig(
         axes=("data",), fanout=args.fanout, sync=args.sync, mode=args.mode,
-        use_pallas=args.pallas,
+        use_pallas=args.pallas, sparse_capacity=args.sparse_capacity,
+        density_threshold=args.density_threshold,
     )
     rng = np.random.default_rng(args.seed)
     roots = [csr.largest_component_root(g, rng) for _ in range(args.roots)]

@@ -38,7 +38,11 @@ _COLLECTIVES = (
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _DEF_RE = re.compile(r"^\s*(%[\w.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
 _DOT_RE = re.compile(
-    r"=\s*[a-z0-9]+\[([0-9,]*)\][^ ]*\s+dot\((%[\w.\-]+), (%[\w.\-]+)\)"
+    # operands may carry an inline `f32[..]{..}` type prefix (XLA version
+    # dependent) — skip it and capture the operand names.
+    r"=\s*[a-z0-9]+\[([0-9,]*)\][^ ]*\s+dot\("
+    r"(?:[a-z0-9]+\[[0-9,]*\]\{[^}]*\}\s+)?(%[\w.\-]+), "
+    r"(?:[a-z0-9]+\[[0-9,]*\]\{[^}]*\}\s+)?(%[\w.\-]+)\)"
 )
 _LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _OP_RE = re.compile(
@@ -97,6 +101,61 @@ def dot_flops(hlo_text: str) -> float:
 _PAIRS_RE = re.compile(r"source_target_pairs=\{\{([0-9]+),")
 
 
+def _empty_stats() -> Dict[str, Dict[str, float]]:
+    return {
+        k: {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0}
+        for k in _COLLECTIVES
+    }
+
+
+def _accumulate_lines(lines) -> Dict[str, Dict[str, float]]:
+    stats = _empty_stats()
+    for line in lines:
+        parsed = _collective_line_stats(line)
+        if parsed is None:
+            continue
+        kind, obytes, wire = parsed
+        stats[kind]["count"] += 1
+        stats[kind]["operand_bytes"] += obytes
+        stats[kind]["wire_bytes"] += wire
+    return stats
+
+
+def _collective_line_stats(line: str):
+    """Parse one HLO line; returns ``(kind, operand_bytes, wire_bytes)`` for
+    collective ops, else None.  Shared by the whole-module and
+    per-computation accounting."""
+    m = _OP_RE.search(line)
+    if not m:
+        return None
+    kind = m.group(1)
+    if f"{kind}-done(" in line:  # async pair: count only the -start
+        return None
+    rm = _SHAPE_RE.search(line)
+    if not rm:
+        return None
+    rbytes = _shape_bytes(rm.group(1), rm.group(2))
+    gm = _GROUPS_RE.search(line)
+    gsize = len(gm.group(1).split(",")) if gm else 1
+    gsize = max(gsize, 1)
+    if kind == "all-gather":
+        obytes = rbytes / gsize
+        full = float(rbytes)
+    elif kind == "reduce-scatter":
+        obytes = rbytes * gsize
+        full = float(obytes)
+    else:
+        obytes = float(rbytes)
+        full = float(rbytes)
+    if kind == "all-reduce":
+        wire = 2.0 * full * (gsize - 1) / gsize
+    elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        wire = full * (gsize - 1) / gsize
+    else:  # collective-permute: operand goes out once
+        wire = float(obytes)
+    return kind, float(obytes), wire
+
+
 def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
     """Per collective-op-kind: count, operand bytes, wire-bytes estimate.
 
@@ -108,44 +167,110 @@ def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
     all-reduce 2·N·(P-1)/P, all-gather & reduce-scatter N·(P-1)/P of the
     FULL buffer, all-to-all N·(P-1)/P, permute N.
     """
-    stats = {
-        k: {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0}
-        for k in _COLLECTIVES
-    }
+    return _accumulate_lines(hlo_text.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# Branch-attributed collective accounting (for adaptive/conditional programs)
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _segment_computations(hlo_text: str):
+    """Split HLO module text into named computations.
+
+    Returns ``(lines_by_comp, callees_by_comp)`` where callees include
+    computations referenced via ``calls=`` / ``body=`` / ``condition=`` /
+    ``to_apply=`` / ``branch_computations=`` (for transitive aggregation).
+    """
+    lines: Dict[str, list] = {}
+    callees: Dict[str, list] = {}
+    current = None
     for line in hlo_text.splitlines():
-        m = _OP_RE.search(line)
-        if not m:
+        hm = _COMP_HEADER_RE.match(line)
+        if hm:
+            current = hm.group(1)
+            lines.setdefault(current, [])
+            callees.setdefault(current, [])
             continue
-        kind = m.group(1)
-        if f"{kind}-done(" in line:  # async pair: count only the -start
+        if current is None:
             continue
-        rm = _SHAPE_RE.search(line)
-        if not rm:
+        if line.startswith("}"):
+            current = None
             continue
-        rbytes = _shape_bytes(rm.group(1), rm.group(2))
-        gm = _GROUPS_RE.search(line)
-        gsize = len(gm.group(1).split(",")) if gm else 1
-        gsize = max(gsize, 1)
-        if kind == "all-gather":
-            obytes = rbytes / gsize
-            full = float(rbytes)
-        elif kind == "reduce-scatter":
-            obytes = rbytes * gsize
-            full = float(obytes)
-        else:
-            obytes = float(rbytes)
-            full = float(rbytes)
-        if kind == "all-reduce":
-            wire = 2.0 * full * (gsize - 1) / gsize
-        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
-            wire = full * (gsize - 1) / gsize
-        else:  # collective-permute: operand goes out once
-            wire = float(obytes)
-        st = stats[kind]
-        st["count"] += 1
-        st["operand_bytes"] += float(obytes)
-        st["wire_bytes"] += wire
-    return stats
+        lines[current].append(line)
+        callees[current].extend(_CALLS_RE.findall(line))
+        bm = _BRANCHES_RE.search(line)
+        if bm:
+            callees[current].extend(
+                n.strip().lstrip("%") for n in bm.group(1).split(",")
+            )
+    return lines, callees
+
+
+def computation_collective_stats(
+    hlo_text: str, *, transitive: bool = True
+) -> Dict[str, Dict[str, Dict[str, float]]]:
+    """Per-HLO-computation collective stats (same shape as
+    :func:`collective_stats`).  With ``transitive=True`` each computation
+    also absorbs the stats of everything it calls — so a ``lax.cond``
+    branch's total includes collectives hidden in fusions/loops it invokes.
+    """
+    lines, callees = _segment_computations(hlo_text)
+    direct = {name: _accumulate_lines(ls) for name, ls in lines.items()}
+    if not transitive:
+        return direct
+
+    memo: Dict[str, Dict] = {}
+
+    def total(name: str, seen) -> Dict:
+        if name in memo:
+            return memo[name]
+        if name in seen or name not in direct:
+            return _empty_stats()
+        seen = seen | {name}
+        agg = {k: dict(v) for k, v in direct[name].items()}
+        for callee in callees.get(name, []):
+            sub = total(callee, seen)
+            for k in _COLLECTIVES:
+                for field in ("count", "operand_bytes", "wire_bytes"):
+                    agg[k][field] += sub[k][field]
+        memo[name] = agg
+        return agg
+
+    return {name: total(name, frozenset()) for name in direct}
+
+
+def conditional_branch_stats(hlo_text: str):
+    """Collective stats per ``lax.cond`` branch of the compiled program.
+
+    ``collective_stats`` sums BOTH branches of a conditional — static HLO
+    has no notion of which branch runs — which misreports adaptive
+    collectives.  This walks every ``conditional(...)`` op and returns, in
+    program order, a list of per-branch stats lists: one entry per
+    conditional, each a list (branch order preserved: branch 0 = the
+    ``lax.cond`` False path) of ``(computation_name, stats)`` tuples.
+    """
+    comp_stats = computation_collective_stats(hlo_text)
+    out = []
+    for line in hlo_text.splitlines():
+        if " conditional(" not in line and "conditional-start" not in line:
+            continue
+        bm = _BRANCHES_RE.search(line)
+        if not bm:
+            continue
+        names = [n.strip().lstrip("%") for n in bm.group(1).split(",")]
+        for n in names:
+            if n not in comp_stats:
+                raise ValueError(
+                    f"conditional references computation {n!r} that the "
+                    "parser did not segment — HLO header format change?"
+                )
+        out.append([(n, comp_stats[n]) for n in names])
+    return out
 
 
 @dataclasses.dataclass
@@ -176,6 +301,8 @@ class Roofline:
 
 def roofline_from(compiled, hlo_text: Optional[str] = None) -> Roofline:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jaxlib: one dict per device
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     byt = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

@@ -1,0 +1,166 @@
+"""Hypothesis property tests (graph ETL, butterfly schedules, BFS, and the
+density-adaptive sparse frontier exchange).
+
+``pytest.importorskip`` guards the whole module: where hypothesis is not
+installed the suite degrades gracefully to the deterministic slices kept in
+test_graph.py / test_butterfly.py / test_kernels.py / test_sparse_frontier.py.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import bfs, butterfly as bf, frontier as fr  # noqa: E402
+from repro.graph import csr, partition  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+INF32 = np.iinfo(np.int32).max
+
+
+def _norm(d):
+    return np.where(d >= INF32, -1, d)
+
+
+# --- graph ETL ---------------------------------------------------------------
+
+
+@given(
+    n=st.integers(2, 200),
+    m=st.integers(0, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_etl_properties(n, m, seed):
+    rng = np.random.default_rng(seed)
+    g = csr.from_edges(
+        rng.integers(0, n, size=m), rng.integers(0, n, size=m), n
+    )
+    g.validate()  # symmetry, sortedness, offsets
+    assert g.n % 32 == 0
+
+
+# --- butterfly schedule ------------------------------------------------------
+
+
+@given(
+    p=st.integers(min_value=1, max_value=64),
+    fanout=st.integers(min_value=1, max_value=8),
+)
+@settings(max_examples=60, deadline=None)
+def test_or_merge_reaches_everyone(p, fanout):
+    """Every rank's contribution reaches every rank (the BFS requirement:
+    after phase 2 each node knows the FULL frontier)."""
+    vals = [np.uint32(1 << (i % 32)) * np.ones(1, np.uint32) for i in range(p)]
+    out = bf.simulate_allreduce(vals, fanout, op=np.bitwise_or)
+    want = np.bitwise_or.reduce(np.stack(vals))
+    for o in out:
+        assert np.array_equal(o, want)
+
+
+# --- kernels -----------------------------------------------------------------
+
+
+@given(
+    k=st.integers(1, 6),
+    w_blocks=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_bitmap_or_reduce_property(k, w_blocks, seed):
+    rng = np.random.default_rng(seed)
+    w = 128 * w_blocks
+    stack = rng.integers(0, 2**32, size=(k, w), dtype=np.uint32)
+    got = np.asarray(ops.bitmap_or_reduce(jnp.asarray(stack), block=128))
+    assert np.array_equal(got, np.bitwise_or.reduce(stack, axis=0))
+
+
+# --- distributed BFS ---------------------------------------------------------
+
+
+@given(
+    n=st.integers(min_value=2, max_value=120),
+    m=st.integers(min_value=1, max_value=400),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_bfs_properties_random_graphs(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    g = csr.from_edges(src, dst, n)
+    root = int(rng.integers(0, n))
+    mesh = jax.make_mesh((4,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    pg = partition.partition_1d(g, 4)
+    cfg = bfs.BFSConfig(axes=("data",), fanout=int(rng.integers(1, 5)))
+    d, _, _ = bfs.distributed_bfs(pg, mesh, root, cfg)
+    ref = bfs.bfs_reference(g, root)
+    np.testing.assert_array_equal(_norm(d), _norm(ref))
+    # triangle inequality over every edge: |d[u] - d[v]| <= 1 for reached
+    du, dv = d[g.src], d[g.dst]
+    both = (du < INF32) & (dv < INF32)
+    assert np.all(np.abs(du[both].astype(np.int64) - dv[both]) <= 1)
+    # an edge never connects reached to unreached (undirected closure)
+    assert not np.any((du < INF32) ^ (dv < INF32))
+
+
+# --- sparse frontier exchange (DESIGN.md §12) -------------------------------
+
+
+@given(
+    p=st.sampled_from([2, 4, 8]),
+    fanout=st.sampled_from([1, 2, 4]),
+    n_words=st.sampled_from([64, 256, 1024]),
+    active=st.integers(min_value=0, max_value=64),
+    capacity=st.sampled_from([4, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_sparse_oracle_matches_dense_or(p, fanout, n_words, active, capacity,
+                                        seed):
+    """The host sparse simulator == dense OR reduction for every density
+    (below AND above capacity: the overflow path must reroute to dense)."""
+    rng = np.random.default_rng(seed)
+    bitmaps = []
+    for _ in range(p):
+        b = np.zeros(n_words, np.uint32)
+        k = int(rng.integers(0, active + 1))
+        ii = rng.choice(n_words, size=min(k, n_words), replace=False)
+        b[ii] = rng.integers(1, 2**32, size=ii.size, dtype=np.uint32)
+        bitmaps.append(b)
+    want = np.bitwise_or.reduce(np.stack(bitmaps), axis=0)
+    out, stats = bf.simulate_or_sparse(bitmaps, fanout, capacity)
+    for o in out:
+        assert np.array_equal(o, want), stats
+    # mode choice mirrors the JAX guard exactly
+    max_count = max(int(np.count_nonzero(b)) for b in bitmaps)
+    want_mode = "sparse" if max_count <= min(capacity, n_words) else "dense"
+    assert stats["mode"] == want_mode
+
+
+@given(
+    n_words=st.sampled_from([32, 128, 512]),
+    active=st.integers(min_value=0, max_value=40),
+    capacity=st.sampled_from([8, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_compact_expand_roundtrip(n_words, active, capacity, seed):
+    """compact_words ∘ expand_words == identity whenever the count fits, and
+    the overflow flag fires exactly when it does not."""
+    rng = np.random.default_rng(seed)
+    b = np.zeros(n_words, np.uint32)
+    ii = rng.choice(n_words, size=min(active, n_words), replace=False)
+    b[ii] = rng.integers(1, 2**32, size=ii.size, dtype=np.uint32)
+    idx, vals, count, overflow = jax.jit(
+        lambda w: fr.compact_words(w, capacity))(jnp.asarray(b))
+    assert int(count) == int(np.count_nonzero(b))
+    assert bool(overflow) == (int(count) > capacity)
+    if not overflow:
+        back = fr.expand_words(n_words, idx, vals)
+        assert np.array_equal(np.asarray(back), b)

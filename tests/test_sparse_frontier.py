@@ -1,0 +1,231 @@
+"""Density-adaptive sparse frontier exchange (DESIGN.md §12), deterministic
+coverage: JAX lowering vs the host oracle, BFS end-to-end vs the sequential
+reference, analytic byte model vs compiled HLO.  The randomized hypothesis
+sweeps live in tests/test_properties.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bfs, butterfly, collectives as coll, frontier as fr
+from repro.graph import csr, generators, partition
+from repro.launch import hlo_stats
+
+INF32 = np.iinfo(np.int32).max
+NW = 256
+CAPACITY = 16
+THRESHOLD = 0.02  # popcount <= 2% of bits -> sparse
+
+
+def _norm(d):
+    return np.where(d >= INF32, -1, d)
+
+
+def _mesh(p):
+    return jax.make_mesh((p,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _bitmaps(p, active_words, seed=0):
+    """Per-rank bitmaps with exactly ``active_words`` nonzero words each."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((p, NW), np.uint32)
+    for r in range(p):
+        ii = rng.choice(NW, size=active_words, replace=False)
+        x[r, ii] = rng.integers(1, 2**32, size=active_words, dtype=np.uint32)
+    return x
+
+
+def _run_collective(fn, p, x):
+    sm = jax.shard_map(
+        lambda v: fn(v[0])[None], mesh=_mesh(p),
+        in_specs=P("data"), out_specs=P("data"), check_vma=False,
+    )
+    return np.asarray(jax.jit(sm)(x))
+
+
+# --- collective level --------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("fanout", [1, 2, 4])
+@pytest.mark.parametrize("active", [3, 40])  # below / above CAPACITY
+def test_sparse_collective_matches_oracle_and_dense(p, fanout, active):
+    """butterfly_or_sparse == host oracle == dense OR, on both sides of the
+    capacity (above it the lax.cond fallback must reroute to dense)."""
+    x = _bitmaps(p, active, seed=p * 10 + fanout)
+    want = np.bitwise_or.reduce(x, axis=0)
+    got = _run_collective(
+        lambda v: coll.butterfly_or_sparse(v, "data", fanout=fanout,
+                                           capacity=CAPACITY), p, x)
+    sim, stats = butterfly.simulate_or_sparse(list(x), fanout, CAPACITY)
+    assert stats["mode"] == ("sparse" if active <= CAPACITY else "dense")
+    for r in range(p):
+        assert np.array_equal(got[r], want)
+        assert np.array_equal(sim[r], want)
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+@pytest.mark.parametrize("fanout", [1, 2, 4])
+@pytest.mark.parametrize("active", [2, 60])  # density across the threshold
+def test_adaptive_collective_correct_both_sides_of_threshold(p, fanout, active):
+    x = _bitmaps(p, active, seed=p + fanout)
+    want = np.bitwise_or.reduce(x, axis=0)
+    got = _run_collective(
+        lambda v: coll.butterfly_or_adaptive(
+            v, "data", fanout=fanout, capacity=CAPACITY,
+            density_threshold=THRESHOLD), p, x)
+    for r in range(p):
+        assert np.array_equal(got[r], want)
+
+
+def test_sparse_uneven_ranks_trigger_fallback():
+    """One overflowing rank must flip EVERY rank to the dense path (the
+    pmax guard is global); the merge stays correct."""
+    p = 4
+    x = _bitmaps(p, 2, seed=7)
+    rng = np.random.default_rng(8)
+    ii = rng.choice(NW, size=CAPACITY + 20, replace=False)
+    x[2, ii] = rng.integers(1, 2**32, size=ii.size, dtype=np.uint32)
+    want = np.bitwise_or.reduce(x, axis=0)
+    got = _run_collective(
+        lambda v: coll.butterfly_or_sparse(v, "data", fanout=2,
+                                           capacity=CAPACITY), p, x)
+    sim, stats = butterfly.simulate_or_sparse(list(x), 2, CAPACITY)
+    assert stats["mode"] == "dense"
+    for r in range(p):
+        assert np.array_equal(got[r], want)
+        assert np.array_equal(sim[r], want)
+
+
+def test_compact_words_deterministic():
+    w = np.zeros(64, np.uint32)
+    w[[3, 17, 40]] = [0xdead, 0xbeef, 0x1]
+    idx, vals, count, overflow = fr.compact_words(jnp.asarray(w), 8)
+    assert int(count) == 3 and not bool(overflow)
+    assert list(np.asarray(idx[:3])) == [3, 17, 40]
+    assert list(np.asarray(vals[:3])) == [0xdead, 0xbeef, 0x1]
+    assert np.all(np.asarray(vals[3:]) == 0)  # padding is (0, 0)
+    back = fr.expand_words(64, idx, vals)
+    assert np.array_equal(np.asarray(back), w)
+    # overflow: truncated but flagged
+    _, _, count, overflow = fr.compact_words(jnp.asarray(w), 2)
+    assert int(count) == 3 and bool(overflow)
+
+
+# --- analytic byte model -----------------------------------------------------
+
+
+def test_sparse_byte_model_matches_hlo():
+    """bytes_per_node_sparse == collective-permute bytes of the compiled
+    conditional-free sparse lowering (paper Sec. 3 model, machine-checked)."""
+    p, fanout, cap, nw = 8, 2, 32, 1 << 12
+    sm = jax.shard_map(
+        lambda v: coll.butterfly_or_sparse(
+            v[0], "data", fanout=fanout, capacity=cap, fallback=False)[None],
+        mesh=_mesh(p), in_specs=P("data"), out_specs=P("data"),
+        check_vma=False,
+    )
+    txt = jax.jit(sm).lower(
+        jax.ShapeDtypeStruct((p, nw), jnp.uint32)).compile().as_text()
+    st = hlo_stats.collective_stats(txt)
+    want = butterfly.bytes_per_node_sparse(p, fanout, cap, nw)
+    assert st["collective-permute"]["wire_bytes"] == want
+
+
+def test_adaptive_branch_bytes_sparse_below_dense():
+    """In the compiled adaptive HLO, the sparse branch's permute bytes are
+    <= 10% of the dense branch's at 1% capacity (the ISSUE acceptance
+    regime, asserted at a smaller size for test speed)."""
+    p, nw = 8, 1 << 14
+    cap = max(64, nw // 100)
+    sm = jax.shard_map(
+        lambda v: coll.butterfly_or_adaptive(
+            v[0], "data", fanout=2, capacity=cap, density_threshold=0.01)[None],
+        mesh=_mesh(p), in_specs=P("data"), out_specs=P("data"),
+        check_vma=False,
+    )
+    txt = jax.jit(sm).lower(
+        jax.ShapeDtypeStruct((p, nw), jnp.uint32)).compile().as_text()
+    branches = hlo_stats.conditional_branch_stats(txt)
+    assert len(branches) == 1
+    (_, dense_st), (_, sparse_st) = branches[0]
+    dense = dense_st["collective-permute"]["wire_bytes"]
+    sparse = sparse_st["collective-permute"]["wire_bytes"]
+    assert dense == butterfly.bytes_per_node_allreduce(p, 2, nw * 4)
+    assert sparse == butterfly.bytes_per_node_sparse(p, 2, cap, nw)
+    assert sparse <= 0.10 * dense, (sparse, dense)
+
+
+def test_expected_bytes_adaptive_model():
+    nw = 1 << 16
+    cap = nw // 100
+    lo = butterfly.expected_bytes_per_node_adaptive(8, 2, nw, 0.001, cap)
+    hi = butterfly.expected_bytes_per_node_adaptive(8, 2, nw, 0.5, cap)
+    assert lo == butterfly.bytes_per_node_sparse(8, 2, cap, nw)
+    assert hi == butterfly.bytes_per_node_allreduce(8, 2, nw * 4)
+    assert lo < 0.10 * hi
+    # the popcount guard can force dense even when the capacity fits: at
+    # fully-populated words the popcount fraction equals the word density,
+    # so density 0.5% > threshold 0.2% -> dense despite 327 <= cap=655
+    guarded = butterfly.expected_bytes_per_node_adaptive(
+        8, 2, nw, 0.005, cap, density_threshold=0.002)
+    assert guarded == butterfly.bytes_per_node_allreduce(8, 2, nw * 4)
+    # ...but at 1 bit per active word the popcount fraction is density/32
+    one_bit = butterfly.expected_bytes_per_node_adaptive(
+        8, 2, nw, 0.005, cap, density_threshold=0.002, mean_bits_per_word=1.0)
+    assert one_bit == butterfly.bytes_per_node_sparse(8, 2, cap, nw)
+
+
+# --- BFS end to end ----------------------------------------------------------
+
+
+GRAPHS = {
+    "kron10": lambda: generators.kronecker(10, 8, seed=1),
+    "torus20": lambda: generators.torus_2d(20),
+    "path1k": lambda: generators.path_graph(1000),
+    "star": lambda: generators.star_graph(500),
+}
+
+
+@pytest.mark.parametrize("name", list(GRAPHS))
+@pytest.mark.parametrize("sync", ["sparse", "adaptive"])
+def test_bfs_sparse_sync_matches_reference(mesh8, name, sync):
+    g = GRAPHS[name]()
+    pg = partition.partition_1d(g, 8)
+    ref = bfs.bfs_reference(g, 3)
+    cfg = bfs.BFSConfig(axes=("data",), sync=sync, fanout=2)
+    d, _, _ = bfs.distributed_bfs(pg, mesh8, 3, cfg)
+    np.testing.assert_array_equal(_norm(d), _norm(ref))
+
+
+@pytest.mark.parametrize("name,gen", [
+    ("torus64", lambda: generators.torus_2d(64)),
+    ("path8k", lambda: generators.path_graph(8192)),
+])
+def test_bfs_adaptive_bench_pathologies(mesh8, name, gen):
+    """The ISSUE acceptance regime: the high-diameter bench families where
+    every level is sparse — adaptive sync must match the reference exactly
+    while riding the compact wire format at (almost) every level."""
+    g = gen()
+    pg = partition.partition_1d(g, 8)
+    root = int(csr.largest_component_root(g, np.random.default_rng(0)))
+    ref = bfs.bfs_reference(g, root)
+    cfg = bfs.BFSConfig(axes=("data",), sync="adaptive", fanout=2)
+    d, levels, _ = bfs.distributed_bfs(pg, mesh8, root, cfg)
+    np.testing.assert_array_equal(_norm(d), _norm(ref))
+    assert levels > 60  # genuinely high-diameter
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_bfs_adaptive_partition_invariance(p):
+    g = GRAPHS["kron10"]()
+    ref = bfs.bfs_reference(g, 11)
+    pg = partition.partition_1d(g, p)
+    cfg = bfs.BFSConfig(axes=("data",), sync="adaptive", fanout=4,
+                        sparse_capacity=64)
+    d, _, _ = bfs.distributed_bfs(pg, _mesh(p), 11, cfg)
+    np.testing.assert_array_equal(_norm(d), _norm(ref), err_msg=f"P={p}")
