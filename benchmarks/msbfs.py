@@ -1,0 +1,82 @@
+"""Multi-source vs single-source traversal rate (DESIGN.md §13).
+
+The claim under test: the phase-2 butterfly sync's round count is
+independent of how many searches share the frontier words, so a 32-lane
+MS-BFS wave answers 32 root queries at far more than 32/x the single-source
+rate — the ISSUE-2 acceptance bar is aggregate multi-source GTEP/s >= 8x
+single-source on the scale-13 Kronecker graph at P=8.
+
+Reported per sync mode: single-source and wave ms, aggregate MTEP/s,
+searches/s, and the aggregate-rate speedup.  ``run.py`` lifts the rows into
+``BENCH_bfs.json`` (``msbfs_per_sync``) so the trajectory is recorded.
+"""
+
+from benchmarks.common import Report, mesh8, timeit
+
+import numpy as np
+
+SYNCS = ("butterfly", "sparse", "adaptive")
+
+
+def run(scale: int = 13, lanes: int = 32, single_roots: int = 4,
+        smoke: bool = False) -> Report:
+    from repro.analytics import engine as aengine
+    from repro.core import bfs
+    from repro.graph import csr, generators, partition
+
+    if smoke:
+        scale, single_roots = 11, 2
+    g = generators.kronecker(scale, 8, seed=0)
+    pg = partition.partition_1d(g, 8)
+    mesh = mesh8()
+    rng = np.random.default_rng(0)
+    roots = np.array(
+        [csr.largest_component_root(g, rng) for _ in range(lanes)], np.int32
+    )
+    rep = Report(
+        f"msbfs (kron{scale}_ef8, {lanes} lanes, P=8)",
+        ["sync", "single ms", "wave ms", "ms/search", "agg MTEP/s",
+         "searches/s", "agg speedup"],
+    )
+    for sync in SYNCS:
+        cfg = bfs.BFSConfig(axes=("data",), fanout=4, sync=sync)
+        arrays = bfs.place_arrays(pg, mesh, cfg.axes)
+
+        # single-source baseline: mean over a few roots
+        sfn = bfs.build_bfs_fn(pg, mesh, cfg)
+        st, ss = [], []
+        for r in roots[:single_roots]:
+            st.append(timeit(lambda rr=r: sfn(arrays, np.int32(rr)), iters=2))
+            _, _, sc = sfn(arrays, np.int32(r))
+            ss.append(float(sc[0]))
+        single_ms = float(np.mean(st)) * 1e3
+        single_rate = float(np.mean(ss)) / np.mean(st)  # edges/s
+        single_sps = 1.0 / np.mean(st)  # searches/s
+
+        # one wave answers all `lanes` roots (scanned is lane-aggregate)
+        wfn = aengine.compiled_wave_fn(pg, mesh, cfg, lanes)
+        wt = timeit(lambda: wfn(arrays, roots), iters=2)
+        _, _, wsc = wfn(arrays, roots)
+        wave_ms = wt * 1e3
+        agg_rate = float(wsc[0]) / wt
+        searches_ps = lanes / wt
+        speedup = agg_rate / single_rate
+
+        rep.add(sync, single_ms, wave_ms, wave_ms / lanes, agg_rate / 1e6,
+                searches_ps, speedup)
+        rep.extra.setdefault("msbfs", {})[sync] = {
+            "graph": f"kron{scale}_ef8",
+            "lanes": lanes,
+            "single_ms": single_ms,
+            "wave_ms": wave_ms,
+            "single_mteps": single_rate / 1e6,
+            "agg_mteps": agg_rate / 1e6,
+            "single_searches_per_s": single_sps,
+            "searches_per_s": searches_ps,
+            "agg_speedup_vs_single": speedup,
+        }
+    return rep
+
+
+if __name__ == "__main__":
+    print(run().render())

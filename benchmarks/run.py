@@ -3,40 +3,56 @@
 One benchmark per paper table/figure (+ the LM-integration study):
 
   bfs_gteps        — Table 1 (graphs × time × honest TEPS)
+  msbfs            — DESIGN §13 (32-lane multi-source vs single-source)
   scaling          — Fig. 3  (strong scaling × fanout)
   fanout           — Fig. 2 / §3 (fanout trade-offs)
   collective_bytes — §3 message/byte analysis vs compiled HLO
   direction        — §2/§4 (top-down / bottom-up / direction-optimizing)
   grad_sync        — DESIGN §7 (butterfly gradient sync for LM training)
 
-Writes ``benchmarks/results.json``.
+Writes ``benchmarks/results.json`` and the machine-readable
+``BENCH_bfs.json`` at the repo root (CI uploads it as an artifact).
+``--smoke`` runs a reduced subset (BFS + MS-BFS at small scale) for the
+non-blocking tier-2 CI job.
 """
 
 from benchmarks import common  # noqa: F401  (sets XLA_FLAGS before jax)
 
+import argparse
 import json
 import os
 import sys
 import time
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scales/iterations for CI smoke runs")
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         bfs_gteps,
         collective_bytes,
         direction,
         fanout,
         grad_sync,
+        msbfs,
         scaling,
     )
 
-    mods = [bfs_gteps, scaling, fanout, collective_bytes, direction, grad_sync]
+    if args.smoke:
+        runs = [(bfs_gteps, {"scale": 11, "roots": 2, "smoke": True}),
+                (msbfs, {"smoke": True})]
+    else:
+        runs = [(bfs_gteps, {}), (msbfs, {}), (scaling, {}), (fanout, {}),
+                (collective_bytes, {}), (direction, {}), (grad_sync, {})]
     results = []
     extras = {}
     t_all = time.time()
-    for mod in mods:
+    for mod, kw in runs:
         t0 = time.time()
-        rep = mod.run()
+        rep = mod.run(**kw)
         print(rep.render())
         print(f"   [{mod.__name__} took {time.time()-t0:.1f}s]\n")
         results.append(rep.to_dict())
@@ -44,11 +60,12 @@ def main() -> int:
     out = os.path.join(os.path.dirname(__file__), "results.json")
     with open(out, "w") as f:
         json.dump(results, f, indent=1)
-    # machine-readable BFS perf trajectory: TEPS + wire bytes per sync mode
-    # (tracked across PRs; see ROADMAP.md)
+    # machine-readable BFS perf trajectory: TEPS + wire bytes per sync mode,
+    # plus the multi-source aggregate rates (tracked across PRs; ROADMAP.md)
     bench = {
         "teps_per_sync": extras.get("bfs", {}),
         "wire_per_sync": extras.get("bfs_wire", {}),
+        "msbfs_per_sync": extras.get("msbfs", {}),
     }
     bench_out = os.path.join(os.path.dirname(__file__), "..", "BENCH_bfs.json")
     bench_out = os.path.abspath(bench_out)

@@ -1,0 +1,18 @@
+"""Graph-analytics subsystem on the butterfly sync (DESIGN.md §13).
+
+* :mod:`repro.analytics.msbfs` — bit-parallel multi-source BFS: B searches
+  per wave, one bit-lane per root, phase 2 reuses the butterfly collectives
+  unchanged.
+* :mod:`repro.analytics.measures` — closeness centrality, reachability
+  counts, connected components, all driven by MS-BFS waves.
+* :mod:`repro.analytics.engine` — batched query engine: packs root streams
+  into fixed-width waves against a cached compiled program.
+"""
+
+from repro.analytics.msbfs import build_msbfs_fn, multi_source_bfs  # noqa: F401
+from repro.analytics.measures import (  # noqa: F401
+    closeness_centrality,
+    connected_components,
+    reachability_counts,
+)
+from repro.analytics.engine import BFSQueryEngine  # noqa: F401

@@ -65,6 +65,10 @@ def bfs_reference(g: Graph, root: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+MODES = ("top_down", "bottom_up", "direction_optimizing")
+SYNCS = ("butterfly", "sparse", "adaptive", "rabenseifner", "all_to_all", "xla")
+
+
 @dataclasses.dataclass(frozen=True)
 class BFSConfig:
     """Algorithm knobs (paper Sec. 3/4)."""
@@ -86,6 +90,18 @@ class BFSConfig:
     # under this fraction of the bitmap bits (and its word count fits the
     # capacity).
     density_threshold: float = 0.02
+
+    def __post_init__(self):
+        # Fail at construction, not at trace time: an unknown mode used to
+        # fall through to direction_optimizing silently.
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown BFS mode {self.mode!r}; expected one of {MODES}"
+            )
+        if self.sync not in SYNCS:
+            raise ValueError(
+                f"unknown frontier sync {self.sync!r}; expected one of {SYNCS}"
+            )
 
     def resolved_capacity(self, n_words: int) -> int:
         cap = self.sparse_capacity or max(64, n_words // 64)
@@ -121,28 +137,51 @@ def _sync_frontier(words: jax.Array, cfg: BFSConfig) -> jax.Array:
     raise ValueError(f"unknown sync {cfg.sync!r}")
 
 
-def _expand_push(arrays, frontier_words, n_words, use_pallas, meta=None):
+def _expand_push(arrays, frontier_words, n_words, use_pallas, meta=None, *,
+                 lanes=False):
     """Top-down: scatter frontier bits along owned out-edges (paper Alg. 2
-    phase 1).  Returns the node's 'global queue' bitmap."""
+    phase 1).  Returns the node's 'global queue' bitmap.
+
+    ``lanes=False``: vertex-packed ``uint32[n_words]`` (single-source).
+    ``lanes=True``: lane-packed ``uint32[n_words, B/32]`` rows — the same
+    traversal bit-parallel over B concurrent searches (``analytics.msbfs``),
+    where ``n_words`` counts vertex ROWS and merge is a per-row lane-mask OR.
+    """
     if use_pallas:
+        if lanes:
+            raise NotImplementedError("Pallas frontier kernels are "
+                                      "single-source (vertex-packed) only")
         from repro.kernels import ops as kops
 
         return kops.expand_push_pallas(frontier_words, arrays, meta, n_words)
     src, dst = arrays["edge_src"], arrays["edge_dst"]
     mask = jnp.arange(src.shape[0], dtype=jnp.int32) < arrays["edge_count"]
+    if lanes:
+        active = jnp.where(mask[:, None], frontier_words[src], jnp.uint32(0))
+        return fr.scatter_or_lanes(n_words, dst, active)
     active = fr.get_bits(frontier_words, src) & mask
     return fr.scatter_or(n_words, dst, active)
 
 
-def _expand_pull(arrays, frontier_words, visited_words, n_words, use_pallas, meta=None):
+def _expand_pull(arrays, frontier_words, visited_words, n_words, use_pallas,
+                 meta=None, *, lanes=False):
     """Bottom-up: every unvisited owned vertex probes its in-edges for a
-    parent in the frontier (Beamer; paper Sec. 3 'Parallelization Schemes')."""
+    parent in the frontier (Beamer; paper Sec. 3 'Parallelization Schemes').
+    ``lanes=True`` runs the probe per search lane: a vertex can be settled
+    in one search and still pulling in another, all in one bitwise op."""
     if use_pallas:
+        if lanes:
+            raise NotImplementedError("Pallas frontier kernels are "
+                                      "single-source (vertex-packed) only")
         from repro.kernels import ops as kops
 
         return kops.expand_pull_pallas(frontier_words, visited_words, arrays, meta, n_words)
     src, dst = arrays["in_src"], arrays["in_dst"]
     mask = jnp.arange(src.shape[0], dtype=jnp.int32) < arrays["in_count"]
+    if lanes:
+        parent = jnp.where(mask[:, None], frontier_words[src], jnp.uint32(0))
+        found = parent & ~visited_words[dst]
+        return fr.scatter_or_lanes(n_words, dst, found)
     parent_in_frontier = fr.get_bits(frontier_words, src) & mask
     unvisited = ~fr.get_bits(visited_words, dst)
     found = parent_in_frontier & unvisited

@@ -4,6 +4,14 @@ The paper's per-node vertex queues become packed uint32 bitmaps: the global
 queue is ``uint32[n_words]`` covering every vertex; merge == bitwise OR
 (idempotent — replaces the paper's atomic enqueue-if-new); the wire format
 of the butterfly exchange is the bitmap itself.
+
+Two packings share these primitives (DESIGN.md §3/§13):
+
+* **vertex-packed** (single-source BFS): bit ``v & 31`` of word ``v >> 5``
+  is vertex ``v`` — one bitmap covers all vertices.
+* **lane-packed** (multi-source BFS): row ``v`` of ``uint32[n, B/32]`` is
+  vertex ``v``; bit ``b & 31`` of lane-word ``b >> 5`` is search lane ``b``
+  — one row holds the lane mask of every concurrent search at ``v``.
 """
 
 from __future__ import annotations
@@ -16,20 +24,35 @@ WORD_BITS = 32
 _U32 = jnp.uint32
 
 
+def lane_pack(bits: jax.Array) -> jax.Array:
+    """bool[..., k*32] -> uint32[..., k]: pack the LAST axis, bit ``b & 31``
+    of word ``b >> 5`` <- position ``b`` (the lane-mask wire layout)."""
+    nb = bits.shape[-1]
+    assert nb % WORD_BITS == 0, nb
+    lanes = bits.reshape(*bits.shape[:-1], nb // WORD_BITS, WORD_BITS)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=_U32)).astype(_U32)
+    return (lanes.astype(_U32) * weights).sum(axis=-1, dtype=_U32)
+
+
+def lane_unpack(words: jax.Array) -> jax.Array:
+    """uint32[..., k] -> bool[..., k*32]: inverse of :func:`lane_pack`."""
+    shifts = jnp.arange(WORD_BITS, dtype=_U32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS).astype(
+        jnp.bool_
+    )
+
+
 def pack(bits: jax.Array) -> jax.Array:
     """bool[n] -> uint32[n/32] (n must be a multiple of 32)."""
-    n = bits.shape[0]
-    assert n % WORD_BITS == 0, n
-    lanes = bits.reshape(n // WORD_BITS, WORD_BITS).astype(_U32)
-    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=_U32)).astype(_U32)
-    return (lanes * weights).sum(axis=1, dtype=_U32)
+    assert bits.ndim == 1
+    return lane_pack(bits)
 
 
 def unpack(words: jax.Array) -> jax.Array:
     """uint32[w] -> bool[w*32]."""
-    shifts = jnp.arange(WORD_BITS, dtype=_U32)
-    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
-    return bits.reshape(-1).astype(jnp.bool_)
+    assert words.ndim == 1
+    return lane_unpack(words)
 
 
 def get_bits(words: jax.Array, idx: jax.Array) -> jax.Array:
@@ -50,6 +73,17 @@ def set_bit(words: jax.Array, idx) -> jax.Array:
 def popcount(words: jax.Array) -> jax.Array:
     """Total set bits (int32)."""
     return lax.population_count(words).astype(jnp.int32).sum()
+
+
+def popcount_lanes(words: jax.Array) -> jax.Array:
+    """Per-lane set bits of a lane-packed buffer.
+
+    ``uint32[..., k] -> int32[k*32]``: entry ``b`` counts, over every leading
+    position (vertex row), how often lane bit ``b`` is set — i.e. per-search
+    frontier/visited sizes of a multi-source wave.
+    """
+    bits = lane_unpack(words)
+    return bits.reshape(-1, bits.shape[-1]).sum(axis=0, dtype=jnp.int32)
 
 
 def compact_words(words: jax.Array, capacity: int):
@@ -84,6 +118,17 @@ def scatter_or_words(words: jax.Array, idx: jax.Array, vals: jax.Array) -> jax.A
     """OR compact ``(idx, vals)`` pairs into an existing bitmap (the receive
     side of the sparse exchange)."""
     return words | expand_words(words.shape[0], idx, vals)
+
+
+def scatter_or_lanes(n_rows: int, idx: jax.Array, masks: jax.Array) -> jax.Array:
+    """Build a lane-packed buffer ``uint32[n_rows, k]`` by OR-ing lane mask
+    ``masks[i]`` into row ``idx[i]`` (duplicates OR together; out-of-range
+    rows are dropped).  The multi-source analogue of :func:`scatter_or`:
+    scatter-max over unpacked lane bits == scatter-OR on the packed words.
+    """
+    dense = jnp.zeros((n_rows, masks.shape[-1] * WORD_BITS), jnp.bool_)
+    dense = dense.at[idx].max(lane_unpack(masks), mode="drop")
+    return lane_pack(dense)
 
 
 def scatter_or(n_words: int, idx: jax.Array, active: jax.Array) -> jax.Array:

@@ -15,6 +15,23 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tier2: slower sweeps (MS-BFS cross-product, benchmark smoke) — "
+        "skipped unless RUN_TIER2=1; CI runs them in a non-blocking job",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if os.environ.get("RUN_TIER2"):
+        return
+    skip = pytest.mark.skip(reason="tier-2 (set RUN_TIER2=1 to run)")
+    for item in items:
+        if "tier2" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture(scope="session")
 def mesh8():
     return jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))

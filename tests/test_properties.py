@@ -109,6 +109,54 @@ def test_bfs_properties_random_graphs(n, m, seed):
     assert not np.any((du < INF32) ^ (dv < INF32))
 
 
+# --- lane-packed frontiers (multi-source BFS, DESIGN.md §13) ----------------
+
+
+@given(
+    rows=st.integers(min_value=1, max_value=64),
+    lane_words=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_lane_pack_unpack_roundtrip(rows, lane_words, seed):
+    """lane_unpack ∘ lane_pack == id on bits; lane_pack ∘ lane_unpack == id
+    on words (the MS-BFS wave layout loses nothing either way)."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(rows, lane_words * 32)).astype(bool)
+    words = np.asarray(fr.lane_pack(jnp.asarray(bits)))
+    assert words.shape == (rows, lane_words) and words.dtype == np.uint32
+    assert np.array_equal(np.asarray(fr.lane_unpack(jnp.asarray(words))), bits)
+    w = rng.integers(0, 2**32, size=(rows, lane_words), dtype=np.uint32)
+    assert np.array_equal(
+        np.asarray(fr.lane_pack(fr.lane_unpack(jnp.asarray(w)))), w
+    )
+    # 1-D pack/unpack are the single-axis special case of the lane ops
+    flat = bits[0]
+    assert np.array_equal(
+        np.asarray(fr.pack(jnp.asarray(flat))),
+        np.asarray(fr.lane_pack(jnp.asarray(flat))),
+    )
+
+
+@given(
+    rows=st.integers(min_value=1, max_value=64),
+    lane_words=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_popcount_lanes_property(rows, lane_words, seed):
+    """Per-lane popcount == column sums of the unpacked bit matrix, and the
+    lane totals add up to the scalar popcount."""
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, 2**32, size=(rows, lane_words), dtype=np.uint32)
+    got = np.asarray(fr.popcount_lanes(jnp.asarray(w)))
+    bits = np.unpackbits(
+        w.view(np.uint8).reshape(rows, lane_words, 4), axis=-1, bitorder="little"
+    ).reshape(rows, lane_words * 32)
+    assert np.array_equal(got, bits.sum(axis=0))
+    assert got.sum() == int(fr.popcount(jnp.asarray(w)))
+
+
 # --- sparse frontier exchange (DESIGN.md §12) -------------------------------
 
 
