@@ -4,6 +4,7 @@ One benchmark per paper table/figure (+ the LM-integration study):
 
   bfs_gteps        — Table 1 (graphs × time × honest TEPS)
   msbfs            — DESIGN §13 (32-lane multi-source vs single-source)
+  sssp             — DESIGN §14 (weighted SSSP on the butterfly MIN-monoid)
   scaling          — Fig. 3  (strong scaling × fanout)
   fanout           — Fig. 2 / §3 (fanout trade-offs)
   collective_bytes — §3 message/byte analysis vs compiled HLO
@@ -39,14 +40,17 @@ def main(argv=None) -> int:
         grad_sync,
         msbfs,
         scaling,
+        sssp,
     )
 
     if args.smoke:
         runs = [(bfs_gteps, {"scale": 11, "roots": 2, "smoke": True}),
-                (msbfs, {"smoke": True})]
+                (msbfs, {"smoke": True}),
+                (sssp, {"smoke": True})]
     else:
-        runs = [(bfs_gteps, {}), (msbfs, {}), (scaling, {}), (fanout, {}),
-                (collective_bytes, {}), (direction, {}), (grad_sync, {})]
+        runs = [(bfs_gteps, {}), (msbfs, {}), (sssp, {}), (scaling, {}),
+                (fanout, {}), (collective_bytes, {}), (direction, {}),
+                (grad_sync, {})]
     results = []
     extras = {}
     t_all = time.time()
@@ -66,6 +70,7 @@ def main(argv=None) -> int:
         "teps_per_sync": extras.get("bfs", {}),
         "wire_per_sync": extras.get("bfs_wire", {}),
         "msbfs_per_sync": extras.get("msbfs", {}),
+        "sssp_per_sync": extras.get("sssp", {}),
     }
     bench_out = os.path.join(os.path.dirname(__file__), "..", "BENCH_bfs.json")
     bench_out = os.path.abspath(bench_out)

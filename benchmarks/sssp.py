@@ -1,0 +1,119 @@
+"""Weighted SSSP on the butterfly MIN-monoid (DESIGN.md §14).
+
+Per sync mode (dense butterfly / sparse changed-word / adaptive): time,
+relaxation rate, iterations, and the analytic per-sync wire bytes.  The
+sparse-vs-dense byte claim is machine-checked on the COMPILED program: the
+adaptive SSSP lowering keeps both paths under one ``lax.cond``, so the
+branch-attributed HLO accounting (``hlo_stats.conditional_branch_stats``,
+PR 1) reads each branch's collective-permute bytes straight from the XLA
+module — the sparse branch must ship measurably fewer bytes than the dense
+branch at low change density.  ``run.py`` lifts the rows into
+``BENCH_bfs.json`` (``sssp_per_sync``).
+"""
+
+from benchmarks.common import Report, mesh8, timeit
+
+import numpy as np
+
+SYNCS = ("butterfly", "sparse", "adaptive")
+
+
+def run(scale: int = 13, roots: int = 4, smoke: bool = False) -> Report:
+    import jax
+
+    from repro.core import butterfly
+    from repro.graph import csr, generators, partition
+    from repro.launch import hlo_stats
+    from repro.traversal import sssp
+    from repro.core.bfs import place_arrays
+
+    if smoke:
+        scale, roots = 11, 2
+    graphs = {
+        f"kron{scale}w": generators.kronecker(scale, 8, seed=0, max_weight=64),
+        "torus64w": generators.torus_2d(64, max_weight=64),
+    }
+    mesh = mesh8()
+    rng = np.random.default_rng(0)
+    rep = Report(
+        "sssp (butterfly min-reduce, per sync mode)",
+        ["graph", "V", "E", "sync", "iters", "ms", "MRelax/s",
+         "wire KiB/node/iter"],
+    )
+    for name, g in graphs.items():
+        pg = partition.partition_1d(g, 8)
+        n_rows = sssp.dist_rows(pg)
+        rs = [csr.largest_component_root(g, rng) for _ in range(roots)]
+        rep.extra.setdefault("sssp", {})[name] = {}
+        for sync in SYNCS:
+            cfg = sssp.SSSPConfig(axes=("data",), fanout=4, sync=sync)
+            arrays = place_arrays(pg, mesh, cfg.axes)
+            fn = sssp.build_sssp_fn(pg, mesh, cfg)
+            times, relaxeds, iters = [], [], 0
+            for r in rs:
+                t = timeit(lambda rr=r: fn(arrays, np.int32(rr)), iters=2)
+                _, it, rx = fn(arrays, np.int32(r))
+                times.append(t)
+                relaxeds.append(float(rx[0]))
+                iters = max(iters, int(np.max(it)))
+            ms = float(np.mean(times)) * 1e3
+            mrelax = float(np.mean(relaxeds)) / np.mean(times) / 1e6
+            cap = cfg.resolved_capacity(n_rows)
+            if sync == "butterfly":
+                wire = butterfly.bytes_per_node_allreduce(
+                    pg.p, cfg.fanout, n_rows * 4
+                )
+            else:
+                wire = butterfly.bytes_per_node_sparse(
+                    pg.p, cfg.fanout, cap, n_rows
+                )
+            rep.add(name, g.n_real, g.n_edges, sync, iters, ms, mrelax,
+                    wire / 1024)
+            rep.extra["sssp"][name][sync] = {
+                "ms": ms,
+                "mrelax_per_s": mrelax,
+                "iters": iters,
+                "wire_kib_per_node_iter": wire / 1024,
+            }
+
+    # --- sparse vs dense wire bytes on the COMPILED adaptive program ------
+    # Both branches of the per-iteration lax.cond live in the HLO; attribute
+    # collective-permute bytes per branch (branch 0 = dense, 1 = sparse).
+    name, g = next(iter(graphs.items()))
+    pg = partition.partition_1d(g, 8)
+    n_rows = sssp.dist_rows(pg)
+    cfg = sssp.SSSPConfig(axes=("data",), fanout=4, sync="adaptive")
+    arrays = place_arrays(pg, mesh, cfg.axes)
+    fn = sssp.build_sssp_fn(pg, mesh, cfg)
+    txt = fn.lower(arrays, np.int32(0)).compile().as_text()
+    branches = hlo_stats.conditional_branch_stats(txt)
+    assert branches, "adaptive SSSP lowering lost its lax.cond"
+    (_, dense_st), (_, sparse_st) = branches[0]
+    dense_wire = dense_st["collective-permute"]["wire_bytes"]
+    sparse_wire = sparse_st["collective-permute"]["wire_bytes"]
+    ratio = sparse_wire / max(dense_wire, 1.0)
+    cap = cfg.resolved_capacity(n_rows)
+    rep.add(name, "-", "-", "adaptive:dense branch", "-", "-", "-",
+            dense_wire / 1024)
+    rep.add(name, "-", "-", "adaptive:sparse branch", "-", "-", "-",
+            sparse_wire / 1024)
+    rep.add(name, "-", "-", "sparse/dense wire ratio", "-", "-", "-", ratio)
+    rep.extra["sssp"]["wire_hlo"] = {
+        "graph": name,
+        "n_rows": n_rows,
+        "sparse_capacity": cap,
+        "dense_branch_wire_bytes_per_node": dense_wire,
+        "sparse_branch_wire_bytes_per_node": sparse_wire,
+        "sparse_over_dense_ratio": ratio,
+        "analytic_sparse_bytes": butterfly.bytes_per_node_sparse(
+            pg.p, cfg.fanout, cap, n_rows
+        ),
+        "analytic_dense_bytes": butterfly.bytes_per_node_allreduce(
+            pg.p, cfg.fanout, n_rows * 4
+        ),
+    }
+    return rep
+
+
+if __name__ == "__main__":
+    print(run().render())

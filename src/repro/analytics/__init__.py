@@ -6,7 +6,9 @@
 * :mod:`repro.analytics.measures` — closeness centrality, reachability
   counts, connected components, all driven by MS-BFS waves.
 * :mod:`repro.analytics.engine` — batched query engine: packs root streams
-  into fixed-width waves against a cached compiled program.
+  into fixed-width waves against a cached compiled program; also serves
+  the §14 weighted traversals (``sssp``, ``betweenness``) from the same
+  placed arrays and program cache.
 """
 
 from repro.analytics.msbfs import build_msbfs_fn, multi_source_bfs  # noqa: F401

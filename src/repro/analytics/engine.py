@@ -1,19 +1,27 @@
-"""Batched multi-source BFS query engine (DESIGN.md §13).
+"""Batched traversal query engine (DESIGN.md §13/§14).
 
 The serving philosophy of ``serve/engine.py`` applied to traversal: all
 allocation and compilation happen ONCE, up front — graph arrays are placed
-on the mesh at construction, and one MS-BFS program per
-``(graph, BFSConfig, lanes)`` is compiled and cached module-wide.  Query
+on the mesh at construction, and one compiled program per
+``(graph, mesh, algo, config, lanes)`` is cached module-wide.  Query
 streams are then packed into fixed-width waves (pad lanes carry root ``-1``
 and cost nothing: their bit-lanes never activate), so every wave reuses the
 same compiled program with the same static shapes — no recompiles, no
 dynamic allocation on the query path.
+
+Three query families share the placed arrays and the cache:
+
+* ``query``       — BFS distances, B bit-lanes per wave (§13),
+* ``sssp``        — weighted distances, one butterfly-min program reused
+                    across the root stream (§14),
+* ``betweenness`` — Brandes dependency waves, B lanes per wave,
+                    accumulated across waves (§14).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -22,28 +30,60 @@ import jax.numpy as jnp
 from repro.analytics import msbfs
 from repro.core.bfs import BFSConfig, place_arrays
 from repro.graph.partition import PartitionedGraph
+from repro.traversal import bc as bc_mod
+from repro.traversal import sssp as sssp_mod
+from repro.traversal.sssp import SSSPConfig
 
-# Compiled-program cache: (graph identity, mesh identity, cfg, lanes) -> fn.
-# BFSConfig is a frozen dataclass, so it hashes by value; graphs and meshes
-# hash by identity (re-partitioning a graph is a new program).  Bounded
-# FIFO: id-keyed entries are unreachable once the caller drops the graph,
-# so an unbounded dict would pin dead graphs + executables forever.
-_PROGRAM_CACHE: Dict[Tuple, object] = {}
+# Compiled-program cache: (graph identity, mesh identity, algo, cfg, lanes)
+# -> (fn, pg, mesh).  Configs are frozen dataclasses, so they hash by value;
+# graphs and meshes hash by identity (re-partitioning a graph is a new
+# program).  Each entry keeps a STRONG reference to its graph and mesh so a
+# live key's id() can never be recycled onto a different object (id-reuse
+# after GC would otherwise alias a stale program).  Bounded FIFO so dead
+# graphs + executables don't accumulate forever.
+_PROGRAM_CACHE: Dict[Tuple, Tuple] = {}
 _PROGRAM_CACHE_MAX = 32
+
+
+def _cached(pg, mesh, key: Tuple, build: Callable[[], object]):
+    entry = _PROGRAM_CACHE.get(key)
+    if entry is not None and entry[1] is pg and entry[2] is mesh:
+        return entry[0]
+    fn = build()
+    while len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_MAX:
+        _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
+    _PROGRAM_CACHE[key] = (fn, pg, mesh)
+    return fn
 
 
 def compiled_wave_fn(
     pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: BFSConfig, lanes: int
 ):
     """The cached ``jit(shard_map(...))`` MS-BFS program for this key."""
-    key = (id(pg), id(mesh), cfg, lanes)
-    fn = _PROGRAM_CACHE.get(key)
-    if fn is None:
-        fn = msbfs.build_msbfs_fn(pg, mesh, cfg, lanes)
-        while len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_MAX:
-            _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
-        _PROGRAM_CACHE[key] = fn
-    return fn
+    return _cached(
+        pg, mesh, (id(pg), id(mesh), "bfs", cfg, lanes),
+        lambda: msbfs.build_msbfs_fn(pg, mesh, cfg, lanes),
+    )
+
+
+def compiled_sssp_fn(
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: SSSPConfig
+):
+    """The cached distributed-SSSP program for this key."""
+    return _cached(
+        pg, mesh, (id(pg), id(mesh), "sssp", cfg),
+        lambda: sssp_mod.build_sssp_fn(pg, mesh, cfg),
+    )
+
+
+def compiled_bc_fn(
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: BFSConfig, lanes: int
+):
+    """The cached betweenness-centrality wave program for this key."""
+    return _cached(
+        pg, mesh, (id(pg), id(mesh), "bc", cfg, lanes),
+        lambda: bc_mod.build_bc_fn(pg, mesh, cfg, lanes),
+    )
 
 
 @dataclasses.dataclass
@@ -52,6 +92,9 @@ class EngineStats:
     waves: int = 0
     scanned_edges: float = 0.0  # aggregate over lanes, honest TEPS numerator
     max_levels: int = 0
+    sssp_queries: int = 0
+    relaxed_edges: float = 0.0  # SSSP relaxation analogue of scanned_edges
+    bc_sources: int = 0
 
 
 class BFSQueryEngine:
@@ -90,14 +133,21 @@ class BFSQueryEngine:
         dist = msbfs.assemble_distances(self.pg, d_owned, self.lanes)
         return dist[: roots.size]
 
+    def _checked_ids(self, ids: Sequence[int], what: str) -> np.ndarray:
+        """Shared query-path validation: non-empty 1-D int32 vertex ids in
+        ``[0, n)`` (pad lanes are an engine-internal detail — callers never
+        pass ``-1``)."""
+        ids = np.asarray(ids, dtype=np.int32)
+        if ids.ndim != 1 or ids.size == 0:
+            raise ValueError(f"{what}s must be a non-empty 1-D sequence")
+        if np.any((ids < 0) | (ids >= self.pg.n)):
+            raise ValueError(f"{what} out of range [0, {self.pg.n}): {ids}")
+        return ids
+
     def query(self, roots: Sequence[int]) -> np.ndarray:
         """Distances for every root: ``int64[len(roots), n]`` (INT32_MAX for
         unreached), in query order."""
-        roots = np.asarray(roots, dtype=np.int32)
-        if roots.ndim != 1 or roots.size == 0:
-            raise ValueError("roots must be a non-empty 1-D sequence")
-        if np.any((roots < 0) | (roots >= self.pg.n)):
-            raise ValueError(f"root out of range [0, {self.pg.n}): {roots}")
+        roots = self._checked_ids(roots, "root")
         out: List[np.ndarray] = []
         for lo in range(0, roots.size, self.lanes):
             out.append(self._run_wave(roots[lo : lo + self.lanes]))
@@ -107,3 +157,63 @@ class BFSQueryEngine:
     def query_one(self, root: int) -> np.ndarray:
         """Single-root convenience: ``int64[n]`` distances."""
         return self.query([root])[0]
+
+    # --- weighted traversals (DESIGN.md §14) ------------------------------
+
+    def _sssp_cfg(self, cfg: Optional[SSSPConfig]) -> SSSPConfig:
+        if cfg is not None:
+            return cfg
+        if self.cfg.sync not in sssp_mod.SYNCS:
+            # never silently coerce (PR 2 killed that class of fallbacks):
+            # a 'rabenseifner' engine would otherwise measure 'butterfly'
+            raise ValueError(
+                f"engine sync {self.cfg.sync!r} has no SSSP equivalent "
+                f"(expected one of {sssp_mod.SYNCS}); pass an explicit "
+                "SSSPConfig"
+            )
+        return SSSPConfig(
+            axes=self.cfg.axes, fanout=self.cfg.fanout, sync=self.cfg.sync,
+            sparse_capacity=self.cfg.sparse_capacity,
+            density_threshold=self.cfg.density_threshold,
+        )
+
+    def sssp(
+        self, roots: Sequence[int], cfg: Optional[SSSPConfig] = None
+    ) -> np.ndarray:
+        """Weighted distances for every root: ``int64[len(roots), n]``
+        (:data:`repro.traversal.sssp.UNREACHED` for unreachable), in query
+        order.  One compiled butterfly-min program serves the whole stream;
+        ``cfg`` defaults to the engine's BFS knobs lifted to
+        :class:`SSSPConfig`."""
+        roots = self._checked_ids(roots, "root")
+        cfg = self._sssp_cfg(cfg)
+        fn = compiled_sssp_fn(self.pg, self.mesh, cfg)
+        out = np.empty((roots.size, self.pg.n), dtype=np.int64)
+        for i, r in enumerate(roots):
+            d_owned, _, relaxed = fn(self._arrays, jnp.int32(r))
+            out[i] = sssp_mod.assemble_distances(self.pg, d_owned)
+            self.stats.relaxed_edges += float(np.asarray(relaxed)[0])
+        self.stats.sssp_queries += int(roots.size)
+        return out
+
+    def betweenness(self, sources: Sequence[int]) -> np.ndarray:
+        """Betweenness centrality accumulated over ``sources``:
+        ``float64[n]``.  Sources pack into ``lanes``-wide Brandes waves
+        (pad lanes carry ``-1``); one compiled program serves every wave.
+        """
+        sources = self._checked_ids(sources, "source")
+        fn = compiled_bc_fn(self.pg, self.mesh, self.cfg, self.lanes)
+        bc = np.zeros(self.pg.n, dtype=np.float64)
+        for lo in range(0, sources.size, self.lanes):
+            chunk = sources[lo : lo + self.lanes]
+            padded = np.full(self.lanes, -1, dtype=np.int32)
+            padded[: chunk.size] = chunk
+            bc_owned, depth, scanned = fn(self._arrays, jnp.asarray(padded))
+            bc += bc_mod.assemble_bc(self.pg, bc_owned)
+            self.stats.waves += 1
+            self.stats.scanned_edges += float(np.asarray(scanned)[0])
+            self.stats.max_levels = max(
+                self.stats.max_levels, int(np.max(depth))
+            )
+        self.stats.bc_sources += int(sources.size)
+        return bc

@@ -34,10 +34,10 @@ from repro.core import frontier as fr
 from repro.core.bfs import (
     INF,
     BFSConfig,
-    _ARRAY_KEYS,
     _expand_pull,
     _expand_push,
     _sync_frontier,
+    graph_array_keys,
     place_arrays,
 )
 from repro.graph.partition import PartitionedGraph
@@ -207,7 +207,7 @@ def build_msbfs_fn(
     shard_fn = jax.shard_map(
         body,
         mesh=mesh,
-        in_specs=({k: spec for k in _ARRAY_KEYS}, P()),
+        in_specs=({k: spec for k in graph_array_keys(pg)}, P()),
         out_specs=(spec, spec, spec),
         check_vma=False,
     )

@@ -207,7 +207,7 @@ def build_bfs_fn(
     if cfg.use_pallas and layout is None:
         raise ValueError("use_pallas=True requires a BFSPallasLayout")
     meta = layout.meta if layout is not None else None
-    array_keys = _ARRAY_KEYS + (
+    array_keys = graph_array_keys(pg) + (
         tuple(sorted(layout.arrays)) if layout is not None else ()
     )
 
@@ -344,6 +344,15 @@ _ARRAY_KEYS = (
     "in_count",
     "deg_out",
 )
+
+
+def graph_array_keys(pg) -> Tuple[str, ...]:
+    """Keys of the placed graph pytree: the base BFS arrays plus, for
+    weighted partitions, the edge-weight planes (every traversal driver's
+    ``in_specs`` must mirror what :func:`place_arrays` ships)."""
+    if getattr(pg, "edge_weight", None) is not None:
+        return _ARRAY_KEYS + ("edge_weight", "in_weight")
+    return _ARRAY_KEYS
 
 
 def place_arrays(

@@ -53,6 +53,7 @@ __all__ = [
     "simulate_allreduce",
     "simulate_reduce_scatter_allgather",
     "simulate_or_sparse",
+    "simulate_reduce_sparse",
     "peak_buffer_elems",
 ]
 
@@ -354,6 +355,67 @@ def simulate_or_sparse(
             for src, dst in enumerate(perm):
                 idx, vals = compacts[src]
                 state[dst][idx] |= vals
+    return state, {
+        "mode": "sparse",
+        "bytes_per_node": bytes_per_node_sparse(p, fanout, capacity, n_words),
+    }
+
+
+def simulate_reduce_sparse(
+    buffers: Sequence[np.ndarray],
+    fanout: int,
+    capacity: int,
+    *,
+    combine: Callable[[np.ndarray, np.ndarray], np.ndarray],
+    identity,
+    ref: np.ndarray | None = None,
+    fallback: bool = True,
+):
+    """Host oracle for ``collectives.butterfly_reduce_sparse`` — the monoid
+    generalization of :func:`simulate_or_sparse` (DESIGN.md §14).
+
+    Per round every rank compacts the words of its CURRENT accumulator that
+    differ from ``ref`` (ascending index, truncating past the round
+    capacity), ships ``(idx, vals)`` along the schedule's permutations, and
+    combines what it receives.  ``ref`` defaults to the all-identity buffer
+    (for OR that makes "changed" == "nonzero", recovering the PR 1 oracle).
+    With ``fallback=True`` an initial changed count over ``capacity`` on
+    ANY rank reroutes to the dense full-buffer butterfly, exactly like the
+    ``lax.cond`` guard.  Inputs must satisfy the monotonicity contract of
+    ``collectives.butterfly_reduce_sparse``: every change is a
+    combine-improvement over the shared ``ref``.
+
+    Returns ``(per_rank_buffers, stats)``; ``stats`` records the mode taken
+    and the analytic wire bytes per node for that mode.
+    """
+    p = len(buffers)
+    n_words = int(buffers[0].size)
+    state = [np.array(b) for b in buffers]
+    if ref is None:
+        ref = np.full(n_words, identity, dtype=state[0].dtype)
+    cap0 = min(capacity, n_words)
+    overflow = any(int(np.count_nonzero(b != ref)) > cap0 for b in state)
+    if fallback and overflow:
+        merged = simulate_allreduce(state, fanout, op=combine)
+        return merged, {
+            "mode": "dense",
+            "bytes_per_node": bytes_per_node_allreduce(
+                p, fanout, n_words * state[0].itemsize
+            ),
+        }
+
+    sched = build_schedule(p, fanout)
+    caps = sparse_round_capacities(p, fanout, capacity, n_words)
+    for rnd, cap in zip(sched.rounds, caps):
+        # compact once per rank against the pre-round accumulator
+        compacts = []
+        for g in range(p):
+            idx = np.flatnonzero(state[g] != ref)[:cap]
+            compacts.append((idx, state[g][idx]))
+        for perm in rnd.perms:
+            for src, dst in enumerate(perm):
+                idx, vals = compacts[src]
+                state[dst][idx] = combine(state[dst][idx], vals)
     return state, {
         "mode": "sparse",
         "bytes_per_node": bytes_per_node_sparse(p, fanout, capacity, n_words),

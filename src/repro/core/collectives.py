@@ -35,6 +35,8 @@ from jax import lax
 
 from repro.core import butterfly
 from repro.core import frontier as fr
+from repro.core import monoid as mono
+from repro.core.monoid import Monoid
 
 Axes = Union[str, Sequence[str]]
 
@@ -91,9 +93,21 @@ def butterfly_merge(
     return x
 
 
+def butterfly_reduce(
+    x: jax.Array, axes: Axes, monoid: Monoid, *, fanout: int = 2
+) -> jax.Array:
+    """All-reduce ``x`` over an explicit :class:`~repro.core.monoid.Monoid`
+    with the paper's full-buffer butterfly (DESIGN.md §14).
+
+    Subsumes :func:`butterfly_or` (OR monoid over frontier bitmaps) — the
+    same ``ppermute`` wiring carries min-distance relaxation (SSSP) and
+    path-count accumulation (betweenness centrality)."""
+    return butterfly_merge(x, axes, fanout=fanout, op=monoid.combine)
+
+
 def butterfly_or(x: jax.Array, axes: Axes, *, fanout: int = 2) -> jax.Array:
     """Bitmap frontier synchronization (BFS phase 2): bitwise-OR merge."""
-    return butterfly_merge(x, axes, fanout=fanout, op="or")
+    return butterfly_reduce(x, axes, mono.OR_U32, fanout=fanout)
 
 
 def butterfly_allreduce(
@@ -108,37 +122,61 @@ def butterfly_allreduce(
 # ---------------------------------------------------------------------------
 
 
-def butterfly_or_sparse(
+def butterfly_reduce_sparse(
     x: jax.Array,
     axes: Axes,
+    monoid: Monoid,
     *,
     fanout: int = 2,
     capacity: int = 256,
+    ref: jax.Array | None = None,
     fallback: bool = True,
 ) -> jax.Array:
-    """Bitmap OR-merge shipping COMPACT ``(word_index, word)`` pairs.
+    """Monoid all-reduce shipping COMPACT ``(word_index, word)`` pairs.
 
-    Same :class:`butterfly.Schedule` wiring as :func:`butterfly_or`, but each
-    round ppermutes a fixed-capacity compaction of the accumulator instead of
-    the full ``O(V/32)`` bitmap.  The per-round send capacity multiplies by
-    the round's digit (clamped at the dense size): after merging a round the
-    accumulator is a union of ``prod(digits so far)`` initial frontiers, so
-    its nonzero-word count is bounded by ``capacity x prod`` whenever every
-    rank's INITIAL count fits ``capacity``.  That makes the initial count the
-    only overflow condition.
+    Same :class:`butterfly.Schedule` wiring as :func:`butterfly_reduce`, but
+    each round ppermutes a fixed-capacity compaction of the words CHANGED
+    since the last sync (``x != ref``; ``ref`` defaults to the all-identity
+    buffer, which for the OR monoid makes "changed" == "nonzero") instead of
+    the full buffer, padded with the monoid identity so pads are no-ops on
+    the receive side.  Requires an IDEMPOTENT monoid: a changed word can be
+    re-delivered across rounds, and only idempotence makes re-combining it
+    harmless.
 
+    Contract (monotonicity): every rank's input must satisfy
+    ``x == combine(x, ref)`` — each change is a combine-IMPROVEMENT over
+    the shared reference (BFS frontiers only gain bits over the zero
+    reference; SSSP relaxation only lowers distances below the post-last-
+    sync buffer).  Unchanged words are not shipped, so a rank holding the
+    reference value must already be correct for them — which is exactly
+    what monotonicity guarantees.  ``ref`` must be replicated-consistent
+    across the reducing ranks.
+
+    The per-round send capacity multiplies by the round's digit (clamped at
+    the dense size): after merging a round the accumulator differs from
+    ``ref`` in at most the union of ``prod(digits so far)`` initial changed
+    sets, so the INITIAL changed count is the only overflow condition.
     ``fallback=True`` guards exactly that condition with a scalar ``pmax``
-    and a ``lax.cond`` to the dense :func:`butterfly_or` — truncation can
-    never corrupt the frontier.  ``fallback=False`` skips the guard (callers
-    that pre-checked the count, e.g. the adaptive dispatcher, and the HLO
-    byte-accounting benchmarks that need a conditional-free lowering).
+    and a ``lax.cond`` to the dense :func:`butterfly_reduce` — truncation
+    can never corrupt the result.  ``fallback=False`` skips the guard
+    (callers that pre-checked the count, e.g. the adaptive dispatcher, and
+    the HLO byte-accounting benchmarks that need a conditional-free
+    lowering).
 
-    Wire bytes per message: ``8 * cap_r`` (int32 index + uint32 word) vs the
-    dense ``4 * n_words`` — the paper Sec. 3 byte model's decisive lever on
-    high-diameter graphs where frontiers hold a handful of vertices.
+    Wire bytes per message: ``8 * cap_r`` (int32 index + 4-byte word) vs
+    the dense ``4 * n_words`` — the paper Sec. 3 byte model's decisive
+    lever at low change density: a BFS frontier of a handful of vertices,
+    or an SSSP relaxation wave touching a handful of distances.
     """
+    if not monoid.idempotent:
+        raise ValueError(
+            f"sparse butterfly requires an idempotent monoid, got "
+            f"{monoid.name!r} (re-delivered words must re-combine harmlessly)"
+        )
     axes = _as_axes(axes)
     n_words = x.shape[0]
+    if ref is None:
+        ref = monoid.full(x.shape, x.dtype)
 
     def sparse(words):
         cap = capacity
@@ -149,26 +187,85 @@ def butterfly_or_sparse(
             sched = butterfly.build_schedule(p, fanout)
             for rnd in sched.rounds:
                 c = min(cap, n_words)
-                idx, vals, _, _ = fr.compact_words(words, c)
+                idx, vals, _, _ = fr.compact_changed(words, ref, c, monoid)
                 for perm in rnd.perms:
                     pairs = list(enumerate(perm))
                     ridx = lax.ppermute(idx, axis, pairs)
                     rvals = lax.ppermute(vals, axis, pairs)
-                    words = fr.scatter_or_words(words, ridx, rvals)
+                    words = fr.scatter_combine(words, ridx, rvals, monoid)
                 cap *= rnd.digit
         return words
 
     if not fallback:
         return sparse(x)
 
-    count = jnp.count_nonzero(x).astype(jnp.int32)
+    count = fr.changed_count(x, ref)
     for a in axes:
         count = lax.pmax(count, a)
     return lax.cond(
         count <= min(capacity, n_words),
         sparse,
-        lambda w: butterfly_or(w, axes, fanout=fanout),
+        lambda w: butterfly_reduce(w, axes, monoid, fanout=fanout),
         x,
+    )
+
+
+def butterfly_reduce_adaptive(
+    x: jax.Array,
+    axes: Axes,
+    monoid: Monoid,
+    *,
+    fanout: int = 2,
+    capacity: int = 256,
+    density_threshold: float = 0.02,
+    ref: jax.Array | None = None,
+) -> jax.Array:
+    """Per-call dense/sparse dispatch keyed on the CHANGED-WORD density.
+
+    The monoid generalization of :func:`butterfly_or_adaptive` (which keeps
+    its bitmap-specific popcount policy): sparse when the busiest rank's
+    changed-since-``ref`` word count stays under ``density_threshold`` of
+    ``n_words`` AND fits ``capacity`` (the sparse path's no-overflow
+    precondition — so the sparse branch needs no inner fallback), dense
+    otherwise.  One scalar ``pmax`` rides the wire; both branches live in
+    the compiled HLO and ``lax.cond`` picks one per call at run time.
+    """
+    axes = _as_axes(axes)
+    n_words = x.shape[0]
+    cap = min(capacity, n_words)
+    if ref is None:
+        ref = monoid.full(x.shape, x.dtype)
+
+    changed = fr.changed_count(x, ref)
+    for a in axes:
+        changed = lax.pmax(changed, a)
+    words_limit = jnp.int32(density_threshold * n_words)
+    go_sparse = (changed <= words_limit) & (changed <= cap)
+    return lax.cond(
+        go_sparse,
+        lambda w: butterfly_reduce_sparse(
+            w, axes, monoid, fanout=fanout, capacity=cap, ref=ref,
+            fallback=False,
+        ),
+        lambda w: butterfly_reduce(w, axes, monoid, fanout=fanout),
+        x,
+    )
+
+
+def butterfly_or_sparse(
+    x: jax.Array,
+    axes: Axes,
+    *,
+    fanout: int = 2,
+    capacity: int = 256,
+    fallback: bool = True,
+) -> jax.Array:
+    """Bitmap OR-merge shipping compact pairs: the OR-monoid instance of
+    :func:`butterfly_reduce_sparse` (reference = all-zeros, so "changed"
+    degenerates to "nonzero" and identity padding to zero padding)."""
+    return butterfly_reduce_sparse(
+        x, axes, mono.OR_U32, fanout=fanout, capacity=capacity,
+        fallback=fallback,
     )
 
 

@@ -98,6 +98,9 @@ def compact_words(words: jax.Array, capacity: int):
     overflow→dense fallback.  When ``count > capacity`` the tail words are
     silently truncated; callers MUST consult ``overflow`` (or pre-check the
     count) before trusting the pairs.
+
+    The OR-monoid special case of :func:`compact_changed` (reference =
+    all-zeros, identity padding = 0).
     """
     count = jnp.count_nonzero(words).astype(jnp.int32)
     (idx,) = jnp.nonzero(words, size=capacity, fill_value=0)
@@ -105,6 +108,43 @@ def compact_words(words: jax.Array, capacity: int):
     slot = jnp.arange(capacity, dtype=jnp.int32)
     vals = jnp.where(slot < count, words[idx], jnp.uint32(0))
     return idx, vals, count, count > capacity
+
+
+def changed_count(words: jax.Array, ref: jax.Array) -> jax.Array:
+    """Words differing from the reference buffer (int32 scalar) — the sparse
+    exchange's overflow / density statistic, generalized from popcount-of-
+    nonzero to changed-since-last-sync (DESIGN.md §14)."""
+    return jnp.count_nonzero(words != ref).astype(jnp.int32)
+
+
+def compact_changed(words: jax.Array, ref: jax.Array, capacity: int, monoid):
+    """Monoid generalization of :func:`compact_words`: the first
+    ``capacity`` words DIFFERING from ``ref`` (the post-last-sync buffer,
+    replicated-consistent across ranks), padded with the monoid identity.
+
+    Padding slots are ``(0, identity)`` — combining the identity into any
+    word is a no-op, so the pairs travel without a count, exactly like the
+    OR path's ``(0, 0)`` pads.  Returns ``(idx, vals, count, overflow)``
+    with the same truncation contract as :func:`compact_words`.
+    """
+    diff = words != ref
+    count = jnp.count_nonzero(diff).astype(jnp.int32)
+    (idx,) = jnp.nonzero(diff, size=capacity, fill_value=0)
+    idx = idx.astype(jnp.int32)
+    slot = jnp.arange(capacity, dtype=jnp.int32)
+    vals = jnp.where(slot < count, words[idx], monoid.identity_like(words))
+    return idx, vals, count, count > capacity
+
+
+def scatter_combine(words: jax.Array, idx: jax.Array, vals: jax.Array, monoid):
+    """Monoid generalization of :func:`scatter_or_words` (the receive side
+    of the sparse exchange): combine the compact ``(idx, vals)`` pairs into
+    ``words``.  Duplicate indices combine through the monoid's scatter op;
+    identity pads are no-ops."""
+    expanded = monoid.scatter_into(
+        monoid.full(words.shape, words.dtype), idx, vals
+    )
+    return monoid.combine(words, expanded)
 
 
 def expand_words(n_words: int, idx: jax.Array, vals: jax.Array) -> jax.Array:

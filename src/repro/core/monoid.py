@@ -1,0 +1,89 @@
+"""Explicit merge monoids for the butterfly exchange (DESIGN.md §14).
+
+The paper's phase-2 synchronization is "merge my buffer with every
+partner's" — the merge op only has to be associative and commutative for
+the butterfly to be exact, and IDEMPOTENT for the sparse changed-word wire
+format to be exact (duplicate delivery of a word across rounds must be a
+no-op).  PR 1/2 hardwired the OR monoid over frontier bitmaps; factoring
+the monoid out turns the same communication pattern into the carrier for
+weighted traversals:
+
+* ``OR_U32``  — reachability bitmaps (BFS / MS-BFS): identity ``0``.
+* ``MIN_U32`` — tentative distances (SSSP relaxation): identity
+  ``0xFFFFFFFF`` (the unreached sentinel IS the identity, so identity
+  padding of sparse messages is free).
+* ``MAX_U32`` — e.g. label propagation toward the largest label.
+* ``ADD_F32`` / ``ADD_U32`` — path-count / dependency accumulation
+  (betweenness centrality).  NOT idempotent: the dense butterfly and
+  Rabenseifner paths carry it; the sparse path rejects it at build time.
+
+A :class:`Monoid` is pure data + two callables, so host oracles
+(:mod:`repro.core.butterfly`) and the JAX lowering
+(:mod:`repro.core.collectives`) share one definition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Monoid",
+    "OR_U32",
+    "MIN_U32",
+    "MAX_U32",
+    "ADD_F32",
+    "ADD_U32",
+    "by_name",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """A commutative merge monoid the butterfly can reduce over.
+
+    ``combine`` must be associative + commutative with ``identity`` as unit.
+    ``scatter`` names the ``jnp.ndarray.at[...]`` method that implements a
+    duplicate-combining scatter of values into an identity-filled buffer
+    (``"max"`` doubles for OR because indices are unique within one sparse
+    compaction and the identity is 0).  ``idempotent`` gates the sparse
+    changed-word wire format: ``combine(x, x) == x`` means re-delivery of a
+    word across butterfly rounds cannot corrupt the accumulator.
+    """
+
+    name: str
+    identity: int | float
+    combine: Callable[[jax.Array, jax.Array], jax.Array]
+    scatter: str  # "min" | "max" | "add"
+    idempotent: bool
+
+    def identity_like(self, x: jax.Array) -> jax.Array:
+        return jnp.asarray(self.identity, x.dtype)
+
+    def full(self, shape, dtype) -> jax.Array:
+        return jnp.full(shape, self.identity, dtype)
+
+    def scatter_into(self, buf: jax.Array, idx: jax.Array, vals: jax.Array):
+        """Combine ``vals`` into ``buf`` at ``idx`` (duplicates combine)."""
+        return getattr(buf.at[idx], self.scatter)(vals.astype(buf.dtype))
+
+
+OR_U32 = Monoid("or", 0, jnp.bitwise_or, "max", idempotent=True)
+MIN_U32 = Monoid("min", 0xFFFFFFFF, jnp.minimum, "min", idempotent=True)
+MAX_U32 = Monoid("max", 0, jnp.maximum, "max", idempotent=True)
+ADD_F32 = Monoid("add", 0.0, jnp.add, "add", idempotent=False)
+ADD_U32 = Monoid("add_u32", 0, jnp.add, "add", idempotent=False)
+
+_REGISTRY = {m.name: m for m in (OR_U32, MIN_U32, MAX_U32, ADD_F32, ADD_U32)}
+
+
+def by_name(name: str) -> Monoid:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown monoid {name!r}; expected one of {sorted(_REGISTRY)}"
+        ) from None

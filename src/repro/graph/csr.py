@@ -4,25 +4,41 @@ The paper's ETL: directed inputs are symmetrized, duplicate edges and
 self-loops removed.  We reproduce that pipeline in vectorized NumPy.
 Vertex counts are padded to a multiple of 32 so frontier bitmaps pack into
 whole uint32 words and 1D partition boundaries can sit on word boundaries.
+
+Edges optionally carry ``uint32`` weights (DESIGN.md §14): symmetrization
+mirrors the weight to both directions and deduplication keeps the MINIMUM
+over duplicates (the shortest-path-preserving choice), so a weighted
+symmetric graph always satisfies ``w(u, v) == w(v, u)``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
-WORD_BITS = 32
+from repro.core.frontier import WORD_BITS
 
 
 def _pad32(n: int) -> int:
     return (n + WORD_BITS - 1) // WORD_BITS * WORD_BITS
 
 
+class GraphValidationError(ValueError):
+    """A :class:`Graph` violated a structural invariant."""
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise GraphValidationError(msg)
+
+
 @dataclasses.dataclass
 class Graph:
     """CSR graph.  ``src``/``dst`` are the COO view sorted by (src, dst);
-    ``row_offsets`` indexes it as CSR.  Always deduplicated, no self-loops."""
+    ``row_offsets`` indexes it as CSR.  Always deduplicated, no self-loops.
+    ``weights`` (optional) is ``uint32[E]`` aligned with ``src``/``dst``."""
 
     n: int  # padded to a multiple of 32; trailing vertices are isolated
     n_real: int
@@ -30,10 +46,21 @@ class Graph:
     dst: np.ndarray  # int32[E]
     row_offsets: np.ndarray  # int64[n + 1]
     symmetric: bool = True
+    weights: Optional[np.ndarray] = None  # uint32[E] or None (unweighted)
+    # set by a successful validate(); lets the partitioner skip re-checking
+    # a graph the ETL already validated (the symmetry checks are O(E log E)).
+    # init=False so dataclasses.replace()-patched graphs start unvalidated.
+    _validated: bool = dataclasses.field(
+        default=False, init=False, repr=False, compare=False
+    )
 
     @property
     def n_edges(self) -> int:
         return int(self.src.shape[0])
+
+    @property
+    def weighted(self) -> bool:
+        return self.weights is not None
 
     @property
     def out_degree(self) -> np.ndarray:
@@ -46,19 +73,57 @@ class Graph:
     def neighbors(self, v: int) -> np.ndarray:
         return self.dst[self.row_offsets[v] : self.row_offsets[v + 1]]
 
+    def neighbor_weights(self, v: int) -> np.ndarray:
+        if self.weights is None:
+            raise ValueError("graph is unweighted")
+        return self.weights[self.row_offsets[v] : self.row_offsets[v + 1]]
+
     def validate(self) -> None:
-        assert self.n % WORD_BITS == 0
-        assert self.row_offsets.shape == (self.n + 1,)
-        assert self.row_offsets[-1] == self.n_edges
-        assert np.all(np.diff(self.row_offsets) >= 0)
+        """Raise :class:`GraphValidationError` on any broken invariant.
+
+        Called on every construction path (ETL, generators, partitioner) so
+        corrupt graphs fail loudly at the host boundary rather than as
+        silent wrong traversals on device.
+        """
+        _check(self.n % WORD_BITS == 0,
+               f"n={self.n} is not a multiple of {WORD_BITS}")
+        _check(self.n_real <= self.n,
+               f"n_real={self.n_real} exceeds padded n={self.n}")
+        _check(self.row_offsets.shape == (self.n + 1,),
+               f"row_offsets shape {self.row_offsets.shape} != ({self.n + 1},)")
+        _check(int(self.row_offsets[0]) == 0, "row_offsets must start at 0")
+        _check(int(self.row_offsets[-1]) == self.n_edges,
+               "row_offsets[-1] must equal the edge count")
+        _check(bool(np.all(np.diff(self.row_offsets) >= 0)),
+               "row_offsets must be nondecreasing")
         if self.n_edges:
-            assert self.src.min() >= 0 and self.src.max() < self.n
-            assert self.dst.min() >= 0 and self.dst.max() < self.n
-            assert np.all(self.src != self.dst), "self-loops survived ETL"
+            _check(self.src.min() >= 0 and self.src.max() < self.n,
+                   "src vertex id out of range")
+            _check(self.dst.min() >= 0 and self.dst.max() < self.n,
+                   "dst vertex id out of range")
+            _check(bool(np.all(self.src != self.dst)),
+                   "self-loops survived ETL")
+            key = (self.src.astype(np.int64) << 32) | self.dst.astype(np.int64)
+            _check(bool(np.all(np.diff(key) > 0)),
+                   "COO must be strictly (src, dst)-sorted and deduplicated")
+        if self.weights is not None:
+            _check(self.weights.shape == self.src.shape,
+                   f"weights shape {self.weights.shape} != edge count "
+                   f"({self.src.shape})")
+            _check(self.weights.dtype == np.uint32,
+                   f"weights must be uint32, got {self.weights.dtype}")
         if self.symmetric and self.n_edges:
             fwd = (self.src.astype(np.int64) << 32) | self.dst.astype(np.int64)
             rev = (self.dst.astype(np.int64) << 32) | self.src.astype(np.int64)
-            assert np.array_equal(np.sort(fwd), np.sort(rev)), "not symmetric"
+            _check(np.array_equal(np.sort(fwd), np.sort(rev)), "not symmetric")
+            if self.weights is not None:
+                # w(u,v) == w(v,u): look up each reversed edge's weight
+                order = np.argsort(rev)
+                _check(np.array_equal(fwd, rev[order]),
+                       "not symmetric")  # defensive; implied by the above
+                _check(np.array_equal(self.weights, self.weights[order]),
+                       "weights are not symmetric: w(u,v) != w(v,u)")
+        self._validated = True
 
 
 def from_edges(
@@ -67,17 +132,44 @@ def from_edges(
     n: int,
     *,
     symmetrize: bool = True,
+    weights: Optional[np.ndarray] = None,
 ) -> Graph:
-    """ETL: (optionally) symmetrize, drop self-loops, dedup, sort, build CSR."""
+    """ETL: (optionally) symmetrize, drop self-loops, dedup, sort, build CSR.
+
+    ``weights`` (any integer dtype, cast to uint32) ride along: symmetrize
+    mirrors them, dedup keeps the minimum over duplicate edges.
+    """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
+    if weights is not None:
+        weights = np.asarray(weights, dtype=np.uint32)
+        if weights.shape != src.shape:
+            raise ValueError(
+                f"weights shape {weights.shape} != edges shape {src.shape}"
+            )
     if symmetrize:
         src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        if weights is not None:
+            weights = np.concatenate([weights, weights])
     keep = src != dst
     src, dst = src[keep], dst[keep]
+    if weights is not None:
+        weights = weights[keep]
     n_pad = max(_pad32(n), WORD_BITS)
     key = (src << 32) | dst
-    key = np.unique(key)
+    if weights is None:
+        key = np.unique(key)
+    else:
+        order = np.argsort(key, kind="stable")
+        key_sorted = key[order]
+        w_sorted = weights[order]
+        key, starts = np.unique(key_sorted, return_index=True)
+        # min over each duplicate run (shortest-path-preserving dedup)
+        weights = (
+            np.minimum.reduceat(w_sorted, starts)
+            if key.size
+            else w_sorted[:0]
+        )
     src = (key >> 32).astype(np.int32)
     dst = (key & 0xFFFFFFFF).astype(np.int32)
     row_offsets = np.zeros(n_pad + 1, dtype=np.int64)
@@ -90,21 +182,24 @@ def from_edges(
         dst=dst,
         row_offsets=row_offsets,
         symmetric=symmetrize,
+        weights=weights,
     )
     g.validate()
     return g
 
 
 def in_csr(g: Graph):
-    """(in_offsets, in_src) — the CSC view (edges grouped by destination).
-    For symmetric graphs this equals the CSR with endpoints swapped."""
+    """(in_offsets, in_src, in_dst, in_weights) — the CSC view (edges grouped
+    by destination).  For symmetric graphs this equals the CSR with endpoints
+    swapped.  ``in_weights`` is None for unweighted graphs."""
     order = np.lexsort((g.src, g.dst))
     in_src = g.src[order]
     by_dst = g.dst[order]
+    in_w = g.weights[order] if g.weights is not None else None
     counts = np.bincount(by_dst, minlength=g.n)
     in_offsets = np.zeros(g.n + 1, dtype=np.int64)
     in_offsets[1:] = np.cumsum(counts)
-    return in_offsets, in_src, by_dst
+    return in_offsets, in_src, by_dst, in_w
 
 
 def largest_component_root(g: Graph, rng: np.random.Generator) -> int:

@@ -20,13 +20,12 @@ see DESIGN.md Sec. 3).
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
+from repro.core.frontier import WORD_BITS
 from repro.graph import csr
-
-WORD_BITS = 32
 
 
 @dataclasses.dataclass
@@ -54,13 +53,22 @@ class PartitionedGraph:
     in_dst: np.ndarray  # int32[P, emax]
     in_count: np.ndarray  # int32[P]
     deg_out: np.ndarray  # int32[P, vmax]  out-degree of owned vertices
+    # uint32[P, emax] edge weights, partitioned alongside dst (out view) and
+    # src (in view); None for unweighted graphs (DESIGN.md §14).
+    edge_weight: Optional[np.ndarray] = None
+    in_weight: Optional[np.ndarray] = None
+
+    @property
+    def weighted(self) -> bool:
+        return self.edge_weight is not None
 
     def owner_of(self, v: int) -> int:
         return int(np.searchsorted(self.v_start, v, side="right") - 1)
 
     def arrays(self) -> dict:
-        """The pytree handed to the distributed BFS step."""
-        return dict(
+        """The pytree handed to the distributed traversal step.  Weighted
+        partitions add ``edge_weight``/``in_weight``."""
+        out = dict(
             v_start=self.v_start,
             v_count=self.v_count,
             word_start=self.word_start,
@@ -72,6 +80,10 @@ class PartitionedGraph:
             in_count=self.in_count,
             deg_out=self.deg_out,
         )
+        if self.edge_weight is not None:
+            out["edge_weight"] = self.edge_weight
+            out["in_weight"] = self.in_weight
+        return out
 
 
 def _round32(x: int) -> int:
@@ -130,6 +142,8 @@ def synthetic_shapes(n: int, m_directed: int, p: int, *, lane_pad: int = 128,
 
 def partition_1d(g: csr.Graph, p: int, *, lane_pad: int = 128) -> PartitionedGraph:
     """Split vertices into ``p`` contiguous ranges with near-equal edges."""
+    if not g._validated:  # corrupt inputs fail here, not as wrong traversals
+        g.validate()
     cum = g.row_offsets  # int64[n+1], cumulative out-degree
     bounds: List[int] = [0]
     for i in range(1, p):
@@ -148,7 +162,7 @@ def partition_1d(g: csr.Graph, p: int, *, lane_pad: int = 128) -> PartitionedGra
     edge_count = (e_hi - e_lo).astype(np.int32)
 
     # --- in-edges per device (CSC view, grouped by destination)
-    in_offsets, in_src_all, in_dst_all = csr.in_csr(g)
+    in_offsets, in_src_all, in_dst_all, in_w_all = csr.in_csr(g)
     ie_lo = in_offsets[v_start]
     ie_hi = in_offsets[v_end]
     in_count = (ie_hi - ie_lo).astype(np.int32)
@@ -164,14 +178,20 @@ def partition_1d(g: csr.Graph, p: int, *, lane_pad: int = 128) -> PartitionedGra
     in_src = np.zeros((p, emax), dtype=np.int32)
     in_dst = np.zeros((p, emax), dtype=np.int32)
     deg_out = np.zeros((p, vmax), dtype=np.int32)
+    edge_weight = np.zeros((p, emax), dtype=np.uint32) if g.weighted else None
+    in_weight = np.zeros((p, emax), dtype=np.uint32) if g.weighted else None
     degrees = g.out_degree
     for i in range(p):
         s, e = int(e_lo[i]), int(e_hi[i])
         edge_src[i, : e - s] = g.src[s:e]
         edge_dst[i, : e - s] = g.dst[s:e]
+        if g.weighted:
+            edge_weight[i, : e - s] = g.weights[s:e]
         s, e = int(ie_lo[i]), int(ie_hi[i])
         in_src[i, : e - s] = in_src_all[s:e]
         in_dst[i, : e - s] = in_dst_all[s:e]
+        if g.weighted:
+            in_weight[i, : e - s] = in_w_all[s:e]
         deg_out[i, : v_count[i]] = degrees[v_start[i] : v_end[i]]
 
     # Exchanged bitmap length: whole graph + one device window of slack so
@@ -198,4 +218,6 @@ def partition_1d(g: csr.Graph, p: int, *, lane_pad: int = 128) -> PartitionedGra
         in_dst=in_dst,
         in_count=in_count,
         deg_out=deg_out,
+        edge_weight=edge_weight,
+        in_weight=in_weight,
     )

@@ -13,7 +13,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-WORD_BITS = 32
+from repro.core.frontier import WORD_BITS
 
 
 def _ceil_pow2(x: int) -> int:

@@ -9,6 +9,11 @@ runs BFS from random roots with the paper's benchmarking protocol
 ``--num-sources B`` (B > 1) switches to the bit-parallel multi-source
 engine (DESIGN.md §13): the ``--roots`` queries are packed into B-lane
 waves and the report adds aggregate searches/s.
+
+``--algo sssp`` runs weighted single-source shortest paths (butterfly
+min-reduce; requires ``--max-weight``, defaulted when omitted) and
+``--algo bc`` runs Brandes betweenness centrality waves over the root
+queries (DESIGN.md §14).
 """
 
 from __future__ import annotations
@@ -37,6 +42,15 @@ def main(argv=None) -> int:
                          "threshold * bitmap bits")
     ap.add_argument("--mode", default="top_down",
                     choices=["top_down", "bottom_up", "direction_optimizing"])
+    ap.add_argument("--algo", default="bfs", choices=["bfs", "sssp", "bc"],
+                    help="traversal workload: unweighted BFS, weighted "
+                         "shortest paths, or betweenness centrality")
+    ap.add_argument("--max-weight", type=int, default=0,
+                    help="uint32 edge weights in [1, max-weight]; 0 = "
+                         "unweighted (sssp defaults to 64)")
+    ap.add_argument("--delta", type=int, default=0,
+                    help="sssp bucket width (delta-stepping-style); 0 = "
+                         "level-synchronous relaxation")
     ap.add_argument("--roots", type=int, default=16,
                     help="number of root queries to run")
     ap.add_argument("--num-sources", type=int, default=1,
@@ -58,15 +72,22 @@ def main(argv=None) -> int:
     from repro.core import bfs
     from repro.graph import csr, generators, partition
 
+    max_weight = args.max_weight
+    if args.algo == "sssp" and not max_weight:
+        max_weight = 64
     if args.graph == "kronecker":
-        g = generators.kronecker(args.scale, args.edge_factor, seed=args.seed)
+        g = generators.kronecker(args.scale, args.edge_factor, seed=args.seed,
+                                 max_weight=max_weight)
     elif args.graph == "urand":
         g = generators.uniform_random(
-            1 << args.scale, (1 << args.scale) * args.edge_factor, seed=args.seed
+            1 << args.scale, (1 << args.scale) * args.edge_factor,
+            seed=args.seed, max_weight=max_weight,
         )
     else:
-        g = generators.torus_2d(1 << (args.scale // 2))
-    print(f"graph: n={g.n:,} m={g.n_edges:,} (directed, symmetrized)")
+        g = generators.torus_2d(1 << (args.scale // 2), max_weight=max_weight,
+                                seed=args.seed)
+    print(f"graph: n={g.n:,} m={g.n_edges:,} (directed, symmetrized"
+          f"{', weighted' if g.weighted else ''})")
     pg = partition.partition_1d(g, args.devices)
     mesh = jax.make_mesh((args.devices,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
@@ -77,6 +98,56 @@ def main(argv=None) -> int:
     )
     rng = np.random.default_rng(args.seed)
     roots = [csr.largest_component_root(g, rng) for _ in range(args.roots)]
+
+    if args.algo == "sssp":
+        from repro.traversal import sssp as sssp_mod
+
+        if args.sync not in sssp_mod.SYNCS:
+            ap.error(f"--algo sssp supports --sync {sssp_mod.SYNCS}, "
+                     f"got {args.sync!r}")
+        scfg = sssp_mod.SSSPConfig(
+            axes=("data",), fanout=args.fanout, sync=args.sync,
+            delta=args.delta, sparse_capacity=args.sparse_capacity,
+            density_threshold=args.density_threshold,
+        )
+        arrays = bfs.place_arrays(pg, mesh, scfg.axes)
+        fn = sssp_mod.build_sssp_fn(pg, mesh, scfg)
+        d, it, relaxed = fn(arrays, np.int32(roots[0]))  # warmup / compile
+        jax.block_until_ready(d)
+        times, rates = [], []
+        for r in roots:
+            t0 = time.time()
+            d, it, relaxed = fn(arrays, np.int32(r))
+            jax.block_until_ready(d)
+            dt = time.time() - t0
+            times.append(dt)
+            rates.append(float(relaxed[0]) / dt / 1e9)
+        t = np.array(times)
+        print(
+            f"SSSP {scfg.sync} fanout={args.fanout} delta={args.delta} "
+            f"devices={args.devices}: time {t.mean()*1e3:.1f}ms  "
+            f"GRelax/s {np.mean(rates):.4f} (host-simulated devices)"
+        )
+        return 0
+
+    if args.algo == "bc":
+        from repro.analytics.engine import BFSQueryEngine
+
+        lanes = max(args.num_sources, 1)
+        eng = BFSQueryEngine(pg, mesh, cfg, lanes=lanes)
+        eng.betweenness(roots[:lanes])  # warmup / compile
+        t0 = time.time()
+        bc_scores = eng.betweenness(np.asarray(roots, np.int32))
+        dt = time.time() - t0
+        top = np.argsort(bc_scores)[::-1][:5]
+        print(
+            f"BC {args.sync} fanout={args.fanout} devices={args.devices} "
+            f"lanes={lanes}: {args.roots} sources in {dt*1e3:.1f}ms "
+            f"({args.roots/dt:.1f} sources/s; host-simulated devices)"
+        )
+        print("top-5 central vertices:",
+              ", ".join(f"{v}={bc_scores[v]:.1f}" for v in top))
+        return 0
 
     if args.num_sources > 1:
         from repro.analytics.engine import BFSQueryEngine, EngineStats

@@ -1,0 +1,30 @@
+"""Weighted traversals on the monoid-generalized butterfly (DESIGN.md §14).
+
+The butterfly frontier exchange factored over an explicit
+:class:`repro.core.monoid.Monoid` carries more than reachability:
+
+* :mod:`repro.traversal.sssp` — single-source shortest paths: level-
+  synchronous relaxation with delta-stepping-style bucket frontiers,
+  distances synchronized by a butterfly MIN-reduce (dense, sparse
+  changed-word, or density-adaptive wire format).
+* :mod:`repro.traversal.bc` — Brandes betweenness centrality riding the
+  MS-BFS bit-lanes: the forward wave counts shortest paths with a
+  butterfly ADD-reduce on ``sigma``; the backward pass replays levels in
+  reverse accumulating dependencies with the same exchange.
+
+Both compile to ONE XLA program each — ``jit(shard_map(lax.while_loop))``
+— exactly like the BFS driver they generalize.
+"""
+
+from repro.traversal.sssp import (  # noqa: F401
+    SSSPConfig,
+    UNREACHED,
+    build_sssp_fn,
+    distributed_sssp,
+    sssp_reference,
+)
+from repro.traversal.bc import (  # noqa: F401
+    bc_reference,
+    betweenness_centrality,
+    build_bc_fn,
+)

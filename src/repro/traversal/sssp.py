@@ -1,0 +1,266 @@
+"""Distributed single-source shortest paths on the butterfly MIN-monoid.
+
+The BFS recipe (paper Alg. 2) generalized from reachability to weighted
+distances (DESIGN.md §14):
+
+* **Phase 1 — relaxation** (per device): every owned out-edge ``(u, v, w)``
+  whose source is in the active frontier proposes ``dist[u] + w`` for
+  ``v``; proposals land with a scatter-MIN (the idempotent analogue of the
+  BFS scatter-OR).
+* **Phase 2 — butterfly distance synchronization**: the per-rank tentative
+  distance buffer ``uint32[n_rows]`` is merged across ranks with
+  ``butterfly_reduce(MIN_U32)`` — dense full-buffer, sparse changed-word
+  (compact ``(vertex, dist)`` pairs vs the post-last-sync reference, padded
+  with the ``0xFFFFFFFF`` identity), or density-adaptive dispatch between
+  the two.  The unreached sentinel IS the monoid identity, so sparse
+  padding is free exactly like the OR path's zero words.
+
+The frontier of CHANGED vertices is a packed bitmap reusing the §3
+machinery; with ``delta > 0`` only changed vertices with
+``dist < (bucket + 1) * delta`` are expanded per iteration
+(delta-stepping-style bucket frontiers — improved vertices re-enter the
+frontier, so convergence is Bellman-Ford's).  The whole traversal is ONE
+XLA program: ``jit(shard_map(lax.while_loop))``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives
+from repro.core import frontier as fr
+from repro.core import monoid as mono
+from repro.core.bfs import graph_array_keys, place_arrays
+from repro.graph.csr import Graph
+from repro.graph.partition import PartitionedGraph
+
+#: Unreached sentinel == the MIN monoid identity (uint32 max).
+UNREACHED = 0xFFFFFFFF
+
+SYNCS = ("butterfly", "sparse", "adaptive", "all_to_all", "xla")
+
+
+# ---------------------------------------------------------------------------
+# Host oracle (Dijkstra)
+# ---------------------------------------------------------------------------
+
+
+def sssp_reference(g: Graph, root: int) -> np.ndarray:
+    """Host Dijkstra — ground truth for every SSSP test.  Returns
+    ``int64[n]`` distances with :data:`UNREACHED` for unreachable."""
+    if g.weights is None:
+        raise ValueError("sssp_reference requires a weighted graph")
+    d = np.full(g.n, UNREACHED, dtype=np.int64)
+    d[root] = 0
+    heap = [(0, int(root))]
+    offs, dst, w = g.row_offsets, g.dst, g.weights
+    while heap:
+        du, u = heapq.heappop(heap)
+        if du > d[u]:
+            continue
+        for v, wv in zip(
+            dst[offs[u] : offs[u + 1]], w[offs[u] : offs[u + 1]]
+        ):
+            nd = du + int(wv)
+            if nd < d[v]:
+                d[v] = nd
+                heapq.heappush(heap, (nd, int(v)))
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Distributed SSSP
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SSSPConfig:
+    """Algorithm knobs, mirroring :class:`repro.core.bfs.BFSConfig`."""
+
+    axes: Tuple[str, ...] = ("data",)
+    fanout: int = 2
+    # butterfly | sparse | adaptive | all_to_all | xla
+    sync: str = "butterfly"
+    # bucket width of the delta-stepping-style frontier; 0 = plain
+    # level-synchronous relaxation (every changed vertex expands each round)
+    delta: int = 0
+    max_iters: Optional[int] = None
+    # --- sparse/adaptive sync knobs (shared semantics with BFSConfig) -----
+    sparse_capacity: int = 0  # 0 -> auto-size to n_rows // 64 (>= 64)
+    density_threshold: float = 0.02
+
+    def __post_init__(self):
+        if self.sync not in SYNCS:
+            raise ValueError(
+                f"unknown distance sync {self.sync!r}; expected one of {SYNCS}"
+            )
+        if self.delta < 0:
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
+
+    def resolved_capacity(self, n_rows: int) -> int:
+        cap = self.sparse_capacity or max(64, n_rows // 64)
+        return min(cap, n_rows)
+
+
+def dist_rows(pg: PartitionedGraph, *, lane_pad: int = 128) -> int:
+    """Length of the exchanged distance buffer: the whole graph plus one
+    device window of slack (every device dynamic-slices its owned
+    ``[v_start, v_start + vmax)`` range without clamping), lane-padded —
+    the per-vertex analogue of the §3 bitmap sizing."""
+    rows = pg.n + pg.vmax
+    return (rows + lane_pad - 1) // lane_pad * lane_pad
+
+
+def _sync_dist(
+    new: jax.Array, prev: jax.Array, cfg: SSSPConfig, capacity: int
+) -> jax.Array:
+    """Phase-2 MIN-merge of tentative distances; ``prev`` is the
+    replicated-consistent post-last-sync buffer (the sparse reference)."""
+    if cfg.sync == "butterfly":
+        return collectives.butterfly_reduce(
+            new, cfg.axes, mono.MIN_U32, fanout=cfg.fanout
+        )
+    if cfg.sync == "sparse":
+        return collectives.butterfly_reduce_sparse(
+            new, cfg.axes, mono.MIN_U32, fanout=cfg.fanout,
+            capacity=capacity, ref=prev,
+        )
+    if cfg.sync == "adaptive":
+        return collectives.butterfly_reduce_adaptive(
+            new, cfg.axes, mono.MIN_U32, fanout=cfg.fanout,
+            capacity=capacity, density_threshold=cfg.density_threshold,
+            ref=prev,
+        )
+    if cfg.sync == "all_to_all":
+        return collectives.all_to_all_merge(new, cfg.axes, op=jnp.minimum)
+    if cfg.sync == "xla":
+        out = new
+        for a in cfg.axes:
+            out = lax.pmin(out, a)
+        return out
+    raise ValueError(f"unknown sync {cfg.sync!r}")
+
+
+def build_sssp_fn(
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: SSSPConfig
+):
+    """Compile-ready distributed SSSP.
+
+    Returns ``run(arrays, root)`` where ``arrays`` is the placed WEIGHTED
+    graph pytree and ``root`` a replicated int32 scalar.  Output: per-device
+    owned distances ``uint32[P, vmax]`` (:data:`UNREACHED` sentinel),
+    iterations executed, and edges relaxed (the honest-TEPS analogue).
+    """
+    if pg.edge_weight is None:
+        raise ValueError(
+            "SSSP requires a weighted partition — generate the graph with "
+            "max_weight > 0 (graph.generators) or pass weights to from_edges"
+        )
+    n_rows = dist_rows(pg)
+    nw = n_rows // fr.WORD_BITS
+    vmax = pg.vmax
+    capacity = cfg.resolved_capacity(n_rows)
+    # Bucket advances consume iterations without relaxing; bound generously.
+    max_iters = cfg.max_iters if cfg.max_iters is not None else (1 << 30)
+    spec = P(cfg.axes if len(cfg.axes) > 1 else cfg.axes[0])
+    inf = jnp.uint32(UNREACHED)
+
+    def body(arrays, root):
+        arrays = jax.tree.map(lambda a: a[0], arrays)
+        v_start = arrays["v_start"]
+        src, dst = arrays["edge_src"], arrays["edge_dst"]
+        w = arrays["edge_weight"].astype(jnp.uint32)
+        emask = jnp.arange(src.shape[0], dtype=jnp.int32) < arrays["edge_count"]
+
+        dist = jnp.full((n_rows,), inf, jnp.uint32).at[root].set(0)
+        changed = fr.set_bit(jnp.zeros((nw,), jnp.uint32), root)
+
+        def cond(state):
+            dist, changed, bucket, it, relaxed = state
+            return (fr.popcount(changed) > 0) & (it < max_iters)
+
+        def step(state):
+            dist, changed, bucket, it, relaxed = state
+
+            # -- bucket frontier selection (delta-stepping-style) ---------
+            if cfg.delta:
+                limit = (bucket + 1) * jnp.uint32(cfg.delta)
+                active = fr.pack(fr.unpack(changed) & (dist < limit))
+                # nothing below the bucket limit: advance the bucket and
+                # run an (empty) round — dist/changed are untouched.
+                bucket = jnp.where(fr.popcount(active) > 0, bucket, bucket + 1)
+            else:
+                active = changed
+
+            # -- Phase 1: relax owned out-edges of active sources ---------
+            src_active = fr.get_bits(active, src) & emask
+            ds = dist[src]
+            nd = ds + w  # uint32; nd < ds detects wraparound -> saturate
+            cand = jnp.where(src_active & (ds != inf) & (nd >= ds), nd, inf)
+            relaxed_local = dist.at[dst].min(cand)
+
+            # -- Phase 2: butterfly MIN synchronization -------------------
+            synced = _sync_dist(relaxed_local, dist, cfg, capacity)
+
+            # -- changed-vertex frontier update ---------------------------
+            improved = fr.pack(synced < dist)
+            changed = (changed & ~active) | improved
+
+            return (
+                synced,
+                changed,
+                bucket,
+                it + 1,
+                relaxed + src_active.sum(dtype=jnp.float32),
+            )
+
+        init = (dist, changed, jnp.uint32(0), jnp.int32(0), jnp.float32(0))
+        dist, changed, _, it, relaxed = lax.while_loop(cond, step, init)
+        total_relaxed = lax.psum(relaxed, cfg.axes)
+        d_owned = lax.dynamic_slice(dist, (v_start,), (vmax,))
+        return d_owned[None], it[None], total_relaxed[None]
+
+    shard_fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=({k: spec for k in graph_array_keys(pg)}, P()),
+        out_specs=(spec, spec, spec),
+        check_vma=False,
+    )
+    return jax.jit(shard_fn)
+
+
+def assemble_distances(pg: PartitionedGraph, d_owned: np.ndarray) -> np.ndarray:
+    """``d_owned [P, vmax]`` -> global ``int64[n]`` (:data:`UNREACHED`
+    sentinel preserved)."""
+    d_owned = np.asarray(d_owned)
+    dist = np.full(pg.n, UNREACHED, dtype=np.int64)
+    for i in range(pg.p):
+        s, c = int(pg.v_start[i]), int(pg.v_count[i])
+        dist[s : s + c] = d_owned[i, :c]
+    return dist
+
+
+def distributed_sssp(
+    pg: PartitionedGraph,
+    mesh: jax.sharding.Mesh,
+    root: int,
+    cfg: SSSPConfig = SSSPConfig(),
+) -> Tuple[np.ndarray, int, float]:
+    """End-to-end helper: place arrays, run, assemble global distances."""
+    arrays = place_arrays(pg, mesh, cfg.axes)
+    fn = build_sssp_fn(pg, mesh, cfg)
+    d_owned, iters, relaxed = fn(arrays, jnp.int32(root))
+    return (
+        assemble_distances(pg, d_owned),
+        int(np.max(iters)),
+        float(np.asarray(relaxed)[0]),
+    )

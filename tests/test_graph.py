@@ -70,6 +70,112 @@ def test_kronecker_degree_skew():
     assert deg.max() > 20 * max(1, np.median(deg))  # heavy tail exists
 
 
+def test_validate_rejects_corrupt_graphs():
+    """validate() is wired into every host construction path: corrupt
+    graphs must raise, not traverse wrongly on device."""
+    g = csr.from_edges(np.array([0, 1, 2]), np.array([1, 2, 3]), 4)
+
+    # n not a multiple of 32
+    import dataclasses
+
+    bad = dataclasses.replace(g, n=33)
+    with pytest.raises(csr.GraphValidationError, match="multiple"):
+        bad.validate()
+
+    # self-loop
+    bad = dataclasses.replace(
+        g, src=g.src.copy(), dst=g.src.copy()
+    )
+    with pytest.raises(csr.GraphValidationError):
+        bad.validate()
+
+    # unsorted COO (swap first two edges)
+    src, dst = g.src.copy(), g.dst.copy()
+    src[[0, 1]], dst[[0, 1]] = src[[1, 0]], dst[[1, 0]]
+    bad = dataclasses.replace(g, src=src, dst=dst)
+    with pytest.raises(csr.GraphValidationError, match="sorted"):
+        bad.validate()
+
+    # the partitioner rejects the same corruption on its host path
+    with pytest.raises(csr.GraphValidationError):
+        partition.partition_1d(bad, 2)
+
+    # broken offsets
+    ro = g.row_offsets.copy()
+    ro[-1] += 1
+    bad = dataclasses.replace(g, row_offsets=ro)
+    with pytest.raises(csr.GraphValidationError, match="edge count"):
+        bad.validate()
+
+
+def test_validate_rejects_bad_weights():
+    import dataclasses
+
+    g = csr.from_edges(
+        np.array([0, 1]), np.array([1, 2]), 3,
+        weights=np.array([4, 9], np.uint32),
+    )
+    # wrong length
+    bad = dataclasses.replace(g, weights=np.array([1], np.uint32))
+    with pytest.raises(csr.GraphValidationError, match="weights shape"):
+        bad.validate()
+    # wrong dtype
+    bad = dataclasses.replace(
+        g, weights=g.weights.astype(np.int64)
+    )
+    with pytest.raises(csr.GraphValidationError, match="uint32"):
+        bad.validate()
+    # asymmetric: bump one direction only
+    w = g.weights.copy()
+    w[0] += 1
+    bad = dataclasses.replace(g, weights=w)
+    with pytest.raises(csr.GraphValidationError, match="symmetric"):
+        bad.validate()
+
+
+def test_weighted_etl_dedup_keeps_min_and_symmetrizes():
+    src = np.array([0, 0, 2, 1])
+    dst = np.array([1, 1, 3, 0])
+    w = np.array([7, 3, 5, 9], np.uint32)
+    g = csr.from_edges(src, dst, 4, weights=w)
+    g.validate()
+    assert g.n_edges == 4  # {0-1, 1-0, 2-3, 3-2}
+
+    def wt(u, v):
+        sl = slice(g.row_offsets[u], g.row_offsets[u + 1])
+        return int(g.weights[sl][np.flatnonzero(g.dst[sl] == v)[0]])
+
+    # min over dup (0,1):7, (0,1):3 and the mirrored (1,0):9
+    assert wt(0, 1) == 3 and wt(1, 0) == 3
+    assert wt(2, 3) == 5 and wt(3, 2) == 5
+
+
+def test_generator_weights_symmetric_and_partitioned():
+    g = generators.kronecker(9, 8, seed=0, max_weight=16)
+    g.validate()
+    assert g.weighted and g.weights.min() >= 1 and g.weights.max() <= 16
+    # unweighted by default, identical topology
+    g0 = generators.kronecker(9, 8, seed=0)
+    assert not g0.weighted
+    np.testing.assert_array_equal(g.src, g0.src)
+
+    pg = partition.partition_1d(g, 4)
+    assert pg.weighted
+    keys = pg.arrays().keys()
+    assert "edge_weight" in keys and "in_weight" in keys
+    # out-view weights line up with the global CSR slices per device
+    cum = g.row_offsets
+    for i in range(4):
+        lo, hi = int(cum[pg.v_start[i]]), int(cum[pg.v_start[i]
+                                                  + pg.v_count[i]])
+        c = int(pg.edge_count[i])
+        assert hi - lo == c
+        np.testing.assert_array_equal(pg.edge_weight[i, :c], g.weights[lo:hi])
+    # in-view weights: each (dst-grouped) edge carries its CSR weight
+    pg0 = partition.partition_1d(generators.kronecker(9, 8, seed=0), 4)
+    assert not pg0.weighted and "edge_weight" not in pg0.arrays()
+
+
 def test_synthetic_shapes_match_real_partition():
     """Dry-run sizing must upper-bound a real partition of the same graph."""
     g = generators.kronecker(12, 8, seed=2)

@@ -1,0 +1,319 @@
+"""Monoid-generalized butterfly: laws, sparse wire format, WORD_BITS dedup
+(DESIGN.md §14).
+
+Hypothesis properties check that ``butterfly_reduce`` matches a host fold
+for OR/min/max/add across P in {1, 2, 4, 8} and fanouts, and that the
+sparse changed-word compaction with identity padding is exact for
+idempotent monoids.  Where hypothesis is absent the module degrades to the
+deterministic slices below (repo convention, see tests/test_properties.py);
+the hypothesis sweeps run in CI.
+"""
+
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import butterfly as bf, collectives as coll, frontier as fr
+from repro.core import monoid as mono
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # deterministic slices below still run
+    HAS_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAS_HYPOTHESIS, reason="hypothesis not installed"
+)
+
+NW = 64
+
+_HOST_OPS = {
+    "or": (mono.OR_U32, np.bitwise_or),
+    "min": (mono.MIN_U32, np.minimum),
+    "max": (mono.MAX_U32, np.maximum),
+    "add": (mono.ADD_U32, np.add),
+}
+_IDEMPOTENT = ("or", "min", "max")
+
+
+def _mesh(p):
+    return jax.make_mesh((p,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _run(p, fn, x):
+    sm = jax.shard_map(fn, mesh=_mesh(p), in_specs=P("data"),
+                       out_specs=P("data"), check_vma=False)
+    return np.asarray(jax.jit(sm)(x))
+
+
+def _rand_bufs(p, seed, hi=2**32):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, hi, size=(p, NW), dtype=np.uint64).astype(np.uint32)
+
+
+# --- monoid laws (pure, no devices) -----------------------------------------
+
+
+def _check_laws(name, seed):
+    m, _ = _HOST_OPS[name]
+    rng = np.random.default_rng(seed)
+    a, b, c = (
+        jnp.asarray(rng.integers(0, 2**32, size=8, dtype=np.uint64)
+                    .astype(np.uint32))
+        for _ in range(3)
+    )
+    ab_c = np.asarray(m.combine(m.combine(a, b), c))
+    a_bc = np.asarray(m.combine(a, m.combine(b, c)))
+    np.testing.assert_array_equal(ab_c, a_bc)  # associativity
+    np.testing.assert_array_equal(  # commutativity
+        np.asarray(m.combine(a, b)), np.asarray(m.combine(b, a))
+    )
+    e = m.full(a.shape, a.dtype)
+    np.testing.assert_array_equal(  # identity is a unit
+        np.asarray(m.combine(a, e)), np.asarray(a)
+    )
+    if m.idempotent:
+        np.testing.assert_array_equal(
+            np.asarray(m.combine(a, a)), np.asarray(a)
+        )
+
+
+@pytest.mark.parametrize("name", sorted(_HOST_OPS))
+@pytest.mark.parametrize("seed", [0, 7])
+def test_monoid_laws(name, seed):
+    _check_laws(name, seed)
+
+
+if HAS_HYPOTHESIS:
+
+    @needs_hypothesis
+    @given(
+        name=st.sampled_from(sorted(_HOST_OPS)),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_monoid_laws_property(name, seed):
+        _check_laws(name, seed)
+
+
+# --- butterfly_reduce == host fold over P and fanout -------------------------
+
+
+def _check_reduce_matches_fold(name, p, fanout, seed):
+    m, host_op = _HOST_OPS[name]
+    x = _rand_bufs(p, seed, hi=2**20)  # headroom: add must not wrap
+    got = _run(
+        p, lambda v: coll.butterfly_reduce(v, "data", m, fanout=fanout), x
+    )
+    want = host_op.reduce(x.astype(np.uint64), axis=0).astype(np.uint32)
+    for r in range(p):
+        np.testing.assert_array_equal(got[r], want, err_msg=f"{name} rank {r}")
+
+
+@pytest.mark.parametrize("name", sorted(_HOST_OPS))
+@pytest.mark.parametrize("p,fanout", [(1, 2), (2, 1), (4, 4), (8, 2), (8, 4)])
+def test_butterfly_reduce_matches_host_fold(name, p, fanout):
+    _check_reduce_matches_fold(name, p, fanout, seed=p * 31 + fanout)
+
+
+if HAS_HYPOTHESIS:
+
+    @needs_hypothesis
+    @given(
+        name=st.sampled_from(sorted(_HOST_OPS)),
+        p=st.sampled_from([1, 2, 4, 8]),
+        fanout=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_butterfly_reduce_matches_host_fold_property(name, p, fanout, seed):
+        _check_reduce_matches_fold(name, p, fanout, seed)
+
+
+# --- sparse changed-word exchange -------------------------------------------
+
+
+def _check_sparse_matches_dense(name, p, fanout, n_changed, seed):
+    """Sparse changed-word wire format == dense fold, below capacity, for
+    every idempotent monoid, from a shared non-identity reference.
+
+    Changes honor the wire format's monotonicity contract: each changed
+    word is a combine-IMPROVEMENT over the reference (``x = combine(x,
+    ref)``), the invariant BFS frontiers / SSSP relaxation guarantee.
+    """
+    m, host_op = _HOST_OPS[name]
+    rng = np.random.default_rng(seed)
+    ref = rng.integers(0, 2**32, size=NW, dtype=np.uint64).astype(np.uint32)
+    x = np.tile(ref, (p, 1))
+    for r in range(p):
+        ii = rng.choice(NW, size=n_changed, replace=False)
+        raw = rng.integers(0, 2**32, size=n_changed, dtype=np.uint64).astype(
+            np.uint32
+        )
+        x[r, ii] = host_op(raw, ref[ii])  # improvement over ref
+    refj = jnp.asarray(ref)
+    got = _run(
+        p,
+        lambda v: coll.butterfly_reduce_sparse(
+            v[0], "data", m, fanout=fanout, capacity=16, ref=refj
+        )[None],
+        x,
+    )
+    want = host_op.reduce(x, axis=0)
+    for r in range(p):
+        np.testing.assert_array_equal(got[r], want, err_msg=f"rank {r}")
+    # host simulator agrees
+    sim, stats = bf.simulate_reduce_sparse(
+        list(x), fanout, 16, combine=host_op, identity=m.identity, ref=ref
+    )
+    assert stats["mode"] == ("sparse" if n_changed <= 16 else "dense")
+    for r in range(p):
+        np.testing.assert_array_equal(sim[r], want)
+
+
+@pytest.mark.parametrize("name", _IDEMPOTENT)
+@pytest.mark.parametrize("p,fanout,n_changed", [(2, 1, 3), (4, 4, 12),
+                                                (8, 2, 5), (8, 4, 0)])
+def test_sparse_reduce_matches_dense_for_idempotent(name, p, fanout, n_changed):
+    _check_sparse_matches_dense(name, p, fanout, n_changed,
+                                seed=p * 17 + fanout)
+
+
+if HAS_HYPOTHESIS:
+
+    @needs_hypothesis
+    @given(
+        name=st.sampled_from(_IDEMPOTENT),
+        p=st.sampled_from([2, 4, 8]),
+        fanout=st.integers(1, 4),
+        n_changed=st.integers(0, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_sparse_reduce_matches_dense_property(
+        name, p, fanout, n_changed, seed
+    ):
+        _check_sparse_matches_dense(name, p, fanout, n_changed, seed)
+
+
+def _check_identity_padding_noop(name, capacity, seed):
+    """compact_changed -> scatter_combine round-trips: an UNCHANGED buffer
+    produces only identity pads, and re-combining any compaction into the
+    buffer it came from is a no-op (idempotence)."""
+    m, _ = _HOST_OPS[name]
+    rng = np.random.default_rng(seed)
+    words = jnp.asarray(
+        rng.integers(0, 2**32, size=NW, dtype=np.uint64).astype(np.uint32)
+    )
+    # unchanged vs itself: all slots are identity pads at index 0
+    idx, vals, count, overflow = fr.compact_changed(words, words, capacity, m)
+    assert int(count) == 0 and not bool(overflow)
+    np.testing.assert_array_equal(
+        np.asarray(vals), np.full(capacity, m.identity, np.uint32)
+    )
+    out = fr.scatter_combine(words, idx, vals, m)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(words))
+    # self-application of a real compaction is also a no-op
+    ref = m.full(words.shape, words.dtype)
+    idx, vals, _, _ = fr.compact_changed(words, ref, NW, m)
+    out = fr.scatter_combine(words, idx, vals, m)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(words))
+
+
+@pytest.mark.parametrize("name", _IDEMPOTENT)
+@pytest.mark.parametrize("capacity", [1, 16, NW])
+def test_identity_padding_is_noop(name, capacity):
+    _check_identity_padding_noop(name, capacity, seed=capacity)
+
+
+if HAS_HYPOTHESIS:
+
+    @needs_hypothesis
+    @given(
+        name=st.sampled_from(_IDEMPOTENT),
+        capacity=st.integers(1, NW),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_identity_padding_is_noop_property(name, capacity, seed):
+        _check_identity_padding_noop(name, capacity, seed)
+
+
+def test_sparse_rejects_non_idempotent_monoid():
+    x = jnp.zeros(8, jnp.float32)
+    with pytest.raises(ValueError, match="idempotent"):
+        coll.butterfly_reduce_sparse(x, "data", mono.ADD_F32)
+
+
+def test_monoid_registry():
+    assert mono.by_name("min") is mono.MIN_U32
+    with pytest.raises(ValueError, match="unknown monoid"):
+        mono.by_name("xor")
+
+
+def test_sparse_min_overflow_falls_back_dense():
+    """Above-capacity changed counts reroute through the lax.cond to the
+    dense butterfly — min over distances stays exact."""
+    p = 4
+    rng = np.random.default_rng(0)
+    x = rng.integers(1, 2**31, size=(p, NW), dtype=np.uint64).astype(np.uint32)
+    got = _run(
+        p,
+        lambda v: coll.butterfly_reduce_sparse(
+            v[0], "data", mono.MIN_U32, capacity=4
+        )[None],
+        x,
+    )  # every word differs from the all-identity ref -> overflow on all ranks
+    want = np.minimum.reduce(x, axis=0)
+    for r in range(p):
+        np.testing.assert_array_equal(got[r], want)
+
+
+def test_adaptive_reduce_dispatches_both_ways():
+    p = 4
+    inf = np.uint32(0xFFFFFFFF)
+    # low density: 2 changed words per rank
+    lo = np.full((p, NW), inf, np.uint32)
+    for r in range(p):
+        lo[r, 2 * r] = r + 1
+        lo[r, 2 * r + 1] = r + 7
+    # high density: everything changed
+    hi = np.arange(p * NW, dtype=np.uint32).reshape(p, NW)
+    for x in (lo, hi):
+        got = _run(
+            p,
+            lambda v: coll.butterfly_reduce_adaptive(
+                v[0], "data", mono.MIN_U32, capacity=8,
+                density_threshold=0.25,
+            )[None],
+            x,
+        )
+        want = np.minimum.reduce(x, axis=0)
+        for r in range(p):
+            np.testing.assert_array_equal(got[r], want)
+
+
+# --- WORD_BITS single definition (satellite) --------------------------------
+
+
+def test_word_bits_has_single_definition():
+    """Exactly one literal ``WORD_BITS = <int>`` under src/, in
+    repro/core/frontier.py — every other module must import it."""
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    pattern = re.compile(r"^WORD_BITS\s*=\s*\d+", re.M)
+    hits = sorted(
+        str(p.relative_to(src))
+        for p in src.rglob("*.py")
+        if pattern.search(p.read_text())
+    )
+    assert hits == ["repro/core/frontier.py"], hits
+    assert fr.WORD_BITS == 32

@@ -1,0 +1,240 @@
+"""Weighted traversals vs host oracles (DESIGN.md §14).
+
+SSSP against Dijkstra, betweenness centrality against Brandes — every
+graph family, P in {1, 2, 8}, every sync mode.  Tier-1 keeps a
+deterministic slice covering each axis; the full cross-product runs under
+the ``tier2`` marker (non-blocking CI job, ``RUN_TIER2=1``).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.analytics import engine as aengine
+from repro.core import bfs
+from repro.graph import csr, generators, partition
+from repro.traversal import bc, sssp
+
+W = 16  # max edge weight for every test family
+
+GRAPHS = {
+    "kron": lambda: generators.kronecker(9, 8, seed=1, max_weight=W),
+    "urand": lambda: generators.uniform_random(
+        600, 3000, seed=2, max_weight=W
+    ),
+    "torus": lambda: generators.torus_2d(16, max_weight=W, seed=3),
+    "path": lambda: generators.path_graph(96, max_weight=W, seed=4),
+    "star": lambda: generators.star_graph(64, max_weight=W, seed=5),
+}
+
+SSSP_SYNCS = ("butterfly", "sparse", "adaptive")
+PS = (1, 2, 8)
+
+
+def _mesh(p):
+    return jax.make_mesh((p,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _roots(g, k, seed=0):
+    """k roots inside the largest component (traversals do real work)."""
+    rng = np.random.default_rng(seed)
+    return np.array(
+        [csr.largest_component_root(g, rng) for _ in range(k)], np.int32
+    )
+
+
+def _check_sssp(g, p, **kw):
+    pg = partition.partition_1d(g, p)
+    cfg = sssp.SSSPConfig(axes=("data",), fanout=4, **kw)
+    root = int(_roots(g, 1)[0])
+    d, iters, relaxed = sssp.distributed_sssp(pg, _mesh(p), root, cfg)
+    np.testing.assert_array_equal(
+        d, sssp.sssp_reference(g, root), err_msg=f"P={p} {kw}"
+    )
+    assert relaxed >= 0
+
+
+def _check_bc(g, p, n_sources=5, **kw):
+    pg = partition.partition_1d(g, p)
+    cfg = bfs.BFSConfig(axes=("data",), fanout=4, **kw)
+    sources = _roots(g, n_sources, seed=7)
+    got, depth, scanned = bc.betweenness_centrality(pg, _mesh(p), sources, cfg)
+    want = bc.bc_reference(g, sources)
+    np.testing.assert_allclose(
+        got, want, rtol=1e-4, atol=1e-4, err_msg=f"P={p} {kw}"
+    )
+    assert scanned >= 0
+
+
+# --- tier-1 slice: every family at P=8, adaptive sync ------------------------
+
+
+@pytest.mark.parametrize("name", list(GRAPHS))
+def test_sssp_matches_dijkstra_per_family(name):
+    _check_sssp(GRAPHS[name](), 8, sync="adaptive")
+
+
+@pytest.mark.parametrize("name", list(GRAPHS))
+def test_bc_matches_brandes_per_family(name):
+    _check_bc(GRAPHS[name](), 8, sync="adaptive")
+
+
+# --- tier-1 slice: every sync mode, every partition count --------------------
+
+
+@pytest.mark.parametrize("sync", ("butterfly", "sparse", "all_to_all", "xla"))
+def test_sssp_sync_modes(sync):
+    _check_sssp(GRAPHS["kron"](), 8, sync=sync)
+
+
+@pytest.mark.parametrize("sync", ("butterfly", "sparse"))
+def test_bc_sync_modes(sync):
+    _check_bc(GRAPHS["torus"](), 8, sync=sync)
+
+
+@pytest.mark.parametrize("p", (1, 2))
+def test_sssp_partition_count_invariance(p):
+    _check_sssp(GRAPHS["kron"](), p, sync="butterfly")
+
+
+@pytest.mark.parametrize("p", (1, 2))
+def test_bc_partition_count_invariance(p):
+    _check_bc(GRAPHS["kron"](), p, sync="butterfly")
+
+
+def test_sssp_delta_buckets():
+    """delta-stepping-style buckets converge to the same distances."""
+    _check_sssp(GRAPHS["torus"](), 8, sync="adaptive", delta=8)
+
+
+def test_sssp_unweighted_graph_rejected(mesh8):
+    g = generators.kronecker(9, 8, seed=1)  # no weights
+    pg = partition.partition_1d(g, 8)
+    with pytest.raises(ValueError, match="weighted"):
+        sssp.build_sssp_fn(pg, mesh8, sssp.SSSPConfig())
+
+
+def test_sssp_config_validation():
+    with pytest.raises(ValueError, match="unknown distance sync"):
+        sssp.SSSPConfig(sync="rabenseifner")
+    with pytest.raises(ValueError, match="delta"):
+        sssp.SSSPConfig(delta=-1)
+
+
+def test_bc_rejects_bad_modes_and_sources(mesh8):
+    g = GRAPHS["kron"]()
+    pg = partition.partition_1d(g, 8)
+    with pytest.raises(NotImplementedError):
+        bc.build_bc_fn(pg, mesh8, bfs.BFSConfig(mode="bottom_up"), 4)
+    with pytest.raises(ValueError):
+        bc.build_bc_fn(pg, mesh8, bfs.BFSConfig(), 0)
+    with pytest.raises(ValueError):
+        bc.betweenness_centrality(pg, mesh8, [pg.n + 1], bfs.BFSConfig())
+
+
+def test_bc_duplicate_and_inactive_lanes(mesh8):
+    """Duplicate sources double-count (Brandes sums per source); -1 lanes
+    contribute nothing."""
+    g = GRAPHS["kron"]()
+    pg = partition.partition_1d(g, 8)
+    cfg = bfs.BFSConfig(axes=("data",), fanout=4)
+    got, _, _ = bc.betweenness_centrality(
+        pg, mesh8, np.array([5, 5, -1, 9], np.int32), cfg
+    )
+    want = bc.bc_reference(g, [5, 5, 9])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --- engine batching (DESIGN.md §14) ----------------------------------------
+
+
+def test_engine_sssp_stream(mesh8):
+    g = GRAPHS["kron"]()
+    pg = partition.partition_1d(g, 8)
+    eng = aengine.BFSQueryEngine(
+        pg, mesh8, bfs.BFSConfig(axes=("data",), fanout=4, sync="adaptive"),
+        lanes=4,
+    )
+    roots = _roots(g, 3, seed=11)
+    dist = eng.sssp(roots)
+    assert dist.shape == (3, pg.n)
+    for i, r in enumerate(roots):
+        np.testing.assert_array_equal(dist[i], sssp.sssp_reference(g, int(r)))
+    assert eng.stats.sssp_queries == 3
+    assert eng.stats.relaxed_edges > 0
+    with pytest.raises(ValueError):
+        eng.sssp([])
+    with pytest.raises(ValueError):
+        eng.sssp([-1])
+    # engine syncs without an SSSP equivalent are never silently coerced
+    eng_rab = aengine.BFSQueryEngine(
+        pg, mesh8, bfs.BFSConfig(axes=("data",), sync="rabenseifner"),
+        lanes=4,
+    )
+    with pytest.raises(ValueError, match="no SSSP equivalent"):
+        eng_rab.sssp(roots[:1])
+
+
+def test_engine_betweenness_waves(mesh8):
+    g = GRAPHS["kron"]()
+    pg = partition.partition_1d(g, 8)
+    eng = aengine.BFSQueryEngine(
+        pg, mesh8, bfs.BFSConfig(axes=("data",), fanout=4), lanes=4
+    )
+    sources = _roots(g, 6, seed=13)  # 2 waves of 4 lanes
+    waves_before = eng.stats.waves
+    got = eng.betweenness(sources)
+    np.testing.assert_allclose(
+        got, bc.bc_reference(g, sources), rtol=1e-4, atol=1e-4
+    )
+    assert eng.stats.waves - waves_before == 2
+    assert eng.stats.bc_sources == 6
+    with pytest.raises(ValueError):
+        eng.betweenness([pg.n])
+
+
+def test_engine_program_cache_spans_algos(mesh8):
+    g = GRAPHS["kron"]()
+    pg = partition.partition_1d(g, 8)
+    cfg = bfs.BFSConfig(axes=("data",), fanout=4)
+    scfg = sssp.SSSPConfig(axes=("data",), fanout=4)
+    a = aengine.compiled_sssp_fn(pg, mesh8, scfg)
+    b = aengine.compiled_sssp_fn(pg, mesh8, scfg)
+    assert a is b
+    c = aengine.compiled_bc_fn(pg, mesh8, cfg, 4)
+    d = aengine.compiled_bc_fn(pg, mesh8, cfg, 4)
+    assert c is d
+    assert aengine.compiled_bc_fn(pg, mesh8, cfg, 8) is not c
+
+
+# --- tier-2: the full family x sync x P cross-product ------------------------
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("name", list(GRAPHS))
+@pytest.mark.parametrize("sync", SSSP_SYNCS)
+@pytest.mark.parametrize("p", PS)
+def test_sssp_full_sweep(name, sync, p):
+    _check_sssp(GRAPHS[name](), p, sync=sync)
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("name", list(GRAPHS))
+@pytest.mark.parametrize("sync", SSSP_SYNCS)
+@pytest.mark.parametrize("p", PS)
+def test_bc_full_sweep(name, sync, p):
+    _check_bc(GRAPHS[name](), p, sync=sync)
+
+
+@pytest.mark.tier2
+@pytest.mark.parametrize("delta", (1, 4, 32))
+def test_sssp_delta_sweep(delta):
+    _check_sssp(GRAPHS["kron"](), 8, sync="sparse", delta=delta)
+
+
+@pytest.mark.tier2
+def test_bc_multiword_lanes(mesh8):
+    """B > 32 spills into a second lane-word per row."""
+    _check_bc(GRAPHS["kron"](), 8, n_sources=40)
