@@ -45,7 +45,7 @@ def run(scale: int = 13, roots: int = 4, smoke: bool = False) -> Report:
     rng = np.random.default_rng(0)
     for name, g in graphs.items():
         pg = partition.partition_1d(g, 8)
-        rs = [csr.largest_component_root(g, rng) for _ in range(roots)]
+        rs = csr.largest_component_roots(g, roots, rng).tolist()
         rep.extra.setdefault("bfs", {})[name] = {}
         for sync in SYNCS:
             cfg = bfs.BFSConfig(axes=("data",), fanout=4, sync=sync)

@@ -30,9 +30,7 @@ def run(scale: int = 13, lanes: int = 32, single_roots: int = 4,
     pg = partition.partition_1d(g, 8)
     mesh = mesh8()
     rng = np.random.default_rng(0)
-    roots = np.array(
-        [csr.largest_component_root(g, rng) for _ in range(lanes)], np.int32
-    )
+    roots = csr.largest_component_roots(g, lanes, rng).astype(np.int32)
     rep = Report(
         f"msbfs (kron{scale}_ef8, {lanes} lanes, P=8)",
         ["sync", "single ms", "wave ms", "ms/search", "agg MTEP/s",

@@ -5,6 +5,7 @@ One benchmark per paper table/figure (+ the LM-integration study):
   bfs_gteps        — Table 1 (graphs × time × honest TEPS)
   msbfs            — DESIGN §13 (32-lane multi-source vs single-source)
   sssp             — DESIGN §14 (weighted SSSP on the butterfly MIN-monoid)
+  service          — DESIGN §15 (serving QPS/latency: coalesced vs per-wave)
   scaling          — Fig. 3  (strong scaling × fanout)
   fanout           — Fig. 2 / §3 (fanout trade-offs)
   collective_bytes — §3 message/byte analysis vs compiled HLO
@@ -40,17 +41,20 @@ def main(argv=None) -> int:
         grad_sync,
         msbfs,
         scaling,
+        service,
         sssp,
     )
 
     if args.smoke:
+        # the service load generator has its own CI smoke step
+        # (``python -m benchmarks.service --smoke`` appends its rows)
         runs = [(bfs_gteps, {"scale": 11, "roots": 2, "smoke": True}),
                 (msbfs, {"smoke": True}),
                 (sssp, {"smoke": True})]
     else:
-        runs = [(bfs_gteps, {}), (msbfs, {}), (sssp, {}), (scaling, {}),
-                (fanout, {}), (collective_bytes, {}), (direction, {}),
-                (grad_sync, {})]
+        runs = [(bfs_gteps, {}), (msbfs, {}), (sssp, {}), (service, {}),
+                (scaling, {}), (fanout, {}), (collective_bytes, {}),
+                (direction, {}), (grad_sync, {})]
     results = []
     extras = {}
     t_all = time.time()
@@ -71,9 +75,27 @@ def main(argv=None) -> int:
         "wire_per_sync": extras.get("bfs_wire", {}),
         "msbfs_per_sync": extras.get("msbfs", {}),
         "sssp_per_sync": extras.get("sssp", {}),
+        "service_latency": extras.get("service_latency", {}),
     }
     bench_out = os.path.join(os.path.dirname(__file__), "..", "BENCH_bfs.json")
     bench_out = os.path.abspath(bench_out)
+    # merge into the existing trajectory file PER ROW: benchmarks that did
+    # not run this invocation keep their recorded rows, and ones that did
+    # only replace the sub-keys they emitted — so --smoke (reduced graphs,
+    # no service load generator) never erases full-run rows for other
+    # graphs/cells
+    if os.path.exists(bench_out):
+        try:
+            with open(bench_out) as f:
+                prior = json.load(f)
+        except (OSError, ValueError):
+            prior = {}
+        bench = {
+            k: ({**prior[k], **v}
+                if isinstance(v, dict) and isinstance(prior.get(k), dict)
+                else (v if v else prior.get(k, v)))
+            for k, v in bench.items()
+        }
     with open(bench_out, "w") as f:
         json.dump(bench, f, indent=1)
     print(f"all benchmarks done in {time.time()-t_all:.1f}s -> {out}")

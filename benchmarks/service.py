@@ -1,0 +1,243 @@
+"""Service load generator: latency vs offered QPS (DESIGN.md §15).
+
+The claim under test: §13 lane packing makes wave cost nearly independent
+of occupancy, so COALESCED wave scheduling (distinct pending roots share
+one compiled wave) sustains a multiple of the QPS of one-request-per-wave
+dispatch — the ISSUE-4 acceptance bar is >= 5x at P=8 on kron13, at
+equal-or-better p99 latency.  Also measured: a 100%-duplicate-root
+workload, where the epoch-keyed result cache must serve >= 90% of requests
+without an engine dispatch.
+
+Three phases per (P, sync) cell, all against `GraphQueryService`:
+
+* closed loop (fixed concurrency, caching DISABLED so every request costs
+  a wave) for coalesced and per-request dispatch — sustained QPS + p50/p99;
+* open loop (timed Poisson-free arrivals at fractions of the measured
+  coalesced capacity, caching disabled) — latency percentiles vs offered
+  QPS, the serving-latency curve;
+* duplicate-root closed loop (caching ON) — cache hit rate.
+
+``run.py`` lifts the rows into ``BENCH_bfs.json`` (``service_latency``);
+``python -m benchmarks.service --smoke`` appends them standalone (the
+tier-2 CI step).
+"""
+
+from benchmarks.common import Report, timeit  # noqa: F401  (sets XLA_FLAGS)
+
+import argparse
+import itertools
+import json
+import os
+import sys
+import threading
+import time
+from concurrent.futures import wait as futures_wait
+
+import numpy as np
+
+
+def _mesh(p):
+    import jax
+
+    return jax.make_mesh((p,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _percentiles_ms(lats):
+    from repro.service.telemetry import percentiles
+
+    return {k: v * 1e3 for k, v in percentiles(lats).items()}
+
+
+def _component_roots(g, count, seed=0):
+    """``count`` DISTINCT largest-component vertices (isolated roots would
+    finish in one level and flatter the rates)."""
+    from repro.graph import csr
+
+    return csr.largest_component_roots(g, count, np.random.default_rng(seed))
+
+
+def _closed_loop(svc, roots, n_requests, concurrency, timeout_s=600.0):
+    """Fixed-concurrency workers submitting back to back; returns
+    ``(qps, latency percentiles ms)``."""
+    lats = []
+    counter = itertools.count()
+
+    def worker():
+        while True:
+            i = next(counter)  # atomic under the GIL
+            if i >= n_requests:
+                return
+            t0 = time.perf_counter()
+            svc.submit("bfs", int(roots[i % len(roots)])).result(timeout_s)
+            lats.append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(concurrency)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    return n_requests / elapsed, _percentiles_ms(lats)
+
+
+def _open_loop(svc, roots, offered_qps, duration_s, timeout_s=600.0):
+    """Paced arrivals at ``offered_qps`` regardless of completions (the
+    open-loop contract); admission rejections are counted, not retried."""
+    from repro.service import AdmissionError
+
+    n = max(int(offered_qps * duration_s), 1)
+    lats, futs, rejected = [], [], 0
+    t0 = time.perf_counter()
+    for i in range(n):
+        target = t0 + i / offered_qps
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        s = time.perf_counter()
+        try:
+            f = svc.submit("bfs", int(roots[i % len(roots)]))
+        except AdmissionError:
+            rejected += 1
+            continue
+        f.add_done_callback(
+            lambda fut, s=s: lats.append(time.perf_counter() - s)
+        )
+        futs.append(f)
+    futures_wait(futs, timeout=timeout_s)
+    elapsed = time.perf_counter() - t0
+    ok = sum(1 for f in futs if f.done() and f.exception() is None)
+    return {
+        "offered_qps": offered_qps,
+        "achieved_qps": ok / elapsed,
+        "rejected": rejected,
+        **_percentiles_ms(lats),
+    }
+
+
+def _dup_workload(svc, root, n_requests, timeout_s=600.0):
+    """100%-duplicate-root sequential closed loop; returns the cache hit
+    rate over the run."""
+    for _ in range(n_requests):
+        svc.submit("bfs", int(root)).result(timeout_s)
+    snap = svc.cache.snapshot()
+    return snap["hit_rate"]
+
+
+def run(scale: int = 13, lanes: int = 32, ps=(1, 8),
+        syncs=("butterfly", "sparse", "adaptive"), smoke: bool = False,
+        linger_s: float = 0.01) -> Report:
+    from repro.core import bfs
+    from repro.graph import generators, partition
+    from repro.service import GraphQueryService
+
+    if smoke:
+        scale, syncs = 10, ("butterfly",)
+    g = generators.kronecker(scale, 8, seed=0)
+    n_closed = 4 * lanes if not smoke else 2 * lanes
+    n_single = max(lanes // 2, 8) if not smoke else 8
+    roots = _component_roots(g, n_closed)
+
+    rep = Report(
+        f"service (kron{scale}_ef8, {lanes} lanes)",
+        ["P", "sync", "qps coalesced", "qps per-req", "speedup",
+         "p99 ms coal", "p99 ms per-req", "occupancy", "dup hit rate"],
+    )
+    for p in ps:
+        pg = partition.partition_1d(g, p)
+        mesh = _mesh(p)
+        for sync in syncs:
+            cfg = bfs.BFSConfig(axes=("data",), fanout=4, sync=sync)
+
+            # -- closed loop, coalesced (cache off: every request = work) --
+            svc = GraphQueryService(
+                pg, mesh, cfg, lanes=lanes, n_real=g.n_real,
+                cache_capacity=0, max_linger_s=linger_s,
+                max_pending=8 * lanes,
+            )
+            svc.query("bfs", int(roots[0]))  # warmup / compile
+            qps_c, lat_c = _closed_loop(svc, roots, n_closed, lanes)
+            occupancy = svc.snapshot()["wave_occupancy"]
+
+            # -- open loop at fractions of the measured capacity ----------
+            fracs = (0.25,) if smoke else (0.5, 0.8)
+            duration = 2.0 if smoke else 3.0
+            open_rows = [
+                _open_loop(svc, roots, max(frac * qps_c, 1.0), duration)
+                for frac in fracs
+            ]
+            svc.stop()
+
+            # -- closed loop, one-request-per-wave baseline ---------------
+            # same compiled program (shared engine cache), coalescing off
+            svc1 = GraphQueryService(
+                pg, mesh, cfg, lanes=lanes, n_real=g.n_real,
+                cache_capacity=0, max_linger_s=linger_s, coalesce=False,
+                max_pending=8 * lanes,
+            )
+            svc1.query("bfs", int(roots[0]))  # warm (program is cached)
+            qps_s, lat_s = _closed_loop(svc1, roots, n_single, n_single)
+            svc1.stop()
+
+            # -- duplicate-root workload, cache ON ------------------------
+            svc2 = GraphQueryService(
+                pg, mesh, cfg, lanes=lanes, n_real=g.n_real,
+                max_linger_s=linger_s,
+            )
+            dup_hit_rate = _dup_workload(
+                svc2, roots[0], 40 if smoke else 100
+            )
+            svc2.stop()
+
+            speedup = qps_c / qps_s
+            rep.add(p, sync, qps_c, qps_s, speedup, lat_c["p99"],
+                    lat_s["p99"], occupancy, dup_hit_rate)
+            rep.extra.setdefault("service_latency", {})[
+                f"kron{scale}_P{p}_{sync}"
+            ] = {
+                "graph": f"kron{scale}_ef8",
+                "devices": p,
+                "sync": sync,
+                "lanes": lanes,
+                "qps_coalesced": qps_c,
+                "qps_per_request": qps_s,
+                "qps_speedup": speedup,
+                "latency_ms_coalesced": lat_c,
+                "latency_ms_per_request": lat_s,
+                "wave_occupancy": occupancy,
+                "open_loop": open_rows,
+                "dup_hit_rate": dup_hit_rate,
+            }
+    return rep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale / low-QPS open loop for CI")
+    args = ap.parse_args(argv)
+    rep = run(smoke=args.smoke)
+    print(rep.render())
+    # standalone runs append rows to the repo-root trajectory file so the
+    # tier-2 CI artifact carries them (run.py does the same for full runs)
+    path = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "BENCH_bfs.json")
+    )
+    bench = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            bench = json.load(f)
+    # merge per row: a smoke run must not erase recorded full-scale cells
+    bench.setdefault("service_latency", {}).update(
+        rep.extra.get("service_latency", {})
+    )
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"service_latency rows -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,7 +43,7 @@ def run(scale: int = 13, roots: int = 4, smoke: bool = False) -> Report:
     for name, g in graphs.items():
         pg = partition.partition_1d(g, 8)
         n_rows = sssp.dist_rows(pg)
-        rs = [csr.largest_component_root(g, rng) for _ in range(roots)]
+        rs = csr.largest_component_roots(g, roots, rng).tolist()
         rep.extra.setdefault("sssp", {})[name] = {}
         for sync in SYNCS:
             cfg = sssp.SSSPConfig(axes=("data",), fanout=4, sync=sync)

@@ -37,7 +37,7 @@ def main() -> int:
     mesh = jax.make_mesh((8,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
     rng = np.random.default_rng(0)
-    roots = [csr.largest_component_root(g, rng) for _ in range(args.roots)]
+    roots = csr.largest_component_roots(g, args.roots, rng).tolist()
 
     header = f"{'sync':11s} {'fanout':6s} {'mode':22s} {'ms/BFS':>8s} {'MTEP/s':>8s}"
     print(header + "\n" + "-" * len(header))

@@ -31,9 +31,7 @@ mesh = jax.make_mesh((8,), ("data",),
 print(f"graph: n={g.n:,} m={g.n_edges:,} weighted (w in [1, 64]), P=8")
 
 rng = np.random.default_rng(0)
-roots = np.array(
-    [csr.largest_component_root(g, rng) for _ in range(8)], np.int32
-)
+roots = csr.largest_component_roots(g, 8, rng).astype(np.int32)
 
 engine = BFSQueryEngine(
     pg, mesh, bfs.BFSConfig(axes=("data",), fanout=4, sync="adaptive"),

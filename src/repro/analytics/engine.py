@@ -21,7 +21,8 @@ Three query families share the placed arrays and the cache:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -39,19 +40,22 @@ from repro.traversal.sssp import SSSPConfig
 # graphs and meshes hash by identity (re-partitioning a graph is a new
 # program).  Each entry keeps a STRONG reference to its graph and mesh so a
 # live key's id() can never be recycled onto a different object (id-reuse
-# after GC would otherwise alias a stale program).  Bounded FIFO so dead
+# after GC would otherwise alias a stale program).  Bounded LRU — hits
+# refresh recency, eviction drops the coldest program — so a long-lived
+# service process churning graphs/configs keeps its hot programs while dead
 # graphs + executables don't accumulate forever.
-_PROGRAM_CACHE: Dict[Tuple, Tuple] = {}
+_PROGRAM_CACHE: "OrderedDict[Tuple, Tuple]" = OrderedDict()
 _PROGRAM_CACHE_MAX = 32
 
 
 def _cached(pg, mesh, key: Tuple, build: Callable[[], object]):
     entry = _PROGRAM_CACHE.get(key)
     if entry is not None and entry[1] is pg and entry[2] is mesh:
+        _PROGRAM_CACHE.move_to_end(key)
         return entry[0]
     fn = build()
     while len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_MAX:
-        _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
+        _PROGRAM_CACHE.popitem(last=False)
     _PROGRAM_CACHE[key] = (fn, pg, mesh)
     return fn
 
@@ -90,6 +94,7 @@ def compiled_bc_fn(
 class EngineStats:
     queries: int = 0
     waves: int = 0
+    deduped_roots: int = 0  # duplicate roots folded out of waves (§15)
     scanned_edges: float = 0.0  # aggregate over lanes, honest TEPS numerator
     max_levels: int = 0
     sssp_queries: int = 0
@@ -146,13 +151,20 @@ class BFSQueryEngine:
 
     def query(self, roots: Sequence[int]) -> np.ndarray:
         """Distances for every root: ``int64[len(roots), n]`` (INT32_MAX for
-        unreached), in query order."""
+        unreached), in query order.
+
+        Duplicate roots are folded before lane packing — each DISTINCT root
+        occupies one lane and every duplicate reads the shared result row —
+        so a hot root repeated across a batch burns one lane, not many
+        (``stats.deduped_roots`` counts the folds)."""
         roots = self._checked_ids(roots, "root")
+        uniq, inverse = np.unique(roots, return_inverse=True)
         out: List[np.ndarray] = []
-        for lo in range(0, roots.size, self.lanes):
-            out.append(self._run_wave(roots[lo : lo + self.lanes]))
+        for lo in range(0, uniq.size, self.lanes):
+            out.append(self._run_wave(uniq[lo : lo + self.lanes]))
         self.stats.queries += int(roots.size)
-        return np.concatenate(out, axis=0)
+        self.stats.deduped_roots += int(roots.size - uniq.size)
+        return np.concatenate(out, axis=0)[inverse]
 
     def query_one(self, root: int) -> np.ndarray:
         """Single-root convenience: ``int64[n]`` distances."""

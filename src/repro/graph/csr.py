@@ -205,10 +205,22 @@ def in_csr(g: Graph):
 def largest_component_root(g: Graph, rng: np.random.Generator) -> int:
     """Pick a random root inside the largest connected component (paper
     Sec. 4 picks roots whose traversal covers the big component)."""
+    return int(largest_component_roots(g, 1, rng)[0])
+
+
+def largest_component_roots(
+    g: Graph, count: int, rng: np.random.Generator
+) -> np.ndarray:
+    """``count`` DISTINCT largest-component roots (clamped to the component
+    size): the serving/benchmark convention — engine waves fold duplicate
+    roots (DESIGN.md §15), so sampling with replacement would silently
+    under-count the work behind a reported rate."""
     comp = connected_components(g)
     largest = np.bincount(comp[: g.n_real]).argmax()
     candidates = np.flatnonzero(comp[: g.n_real] == largest)
-    return int(rng.choice(candidates))
+    return rng.choice(
+        candidates, size=min(count, candidates.size), replace=False
+    ).astype(np.int64)
 
 
 def connected_components(g: Graph) -> np.ndarray:

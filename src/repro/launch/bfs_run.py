@@ -14,13 +14,43 @@ waves and the report adds aggregate searches/s.
 min-reduce; requires ``--max-weight``, defaulted when omitted) and
 ``--algo bc`` runs Brandes betweenness centrality waves over the root
 queries (DESIGN.md §14).
+
+``--stats-json PATH`` dumps the run's ``EngineStats`` (plus graph/config
+identity and wall timing) as machine-readable JSON — the serving CLI
+(``repro.launch.serve_graph``) emits the same schema extended with service
+telemetry (DESIGN.md §15).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import os
 import sys
+
+STATS_SCHEMA = "bfs_run_stats/v1"
+
+
+def write_stats_json(path, *, algo, graph, devices, config, timing_ms,
+                     engine_stats, **extra) -> None:
+    """Persist one run's machine-readable stats (schema asserted by the
+    smoke test; ``serve_graph`` adds a ``telemetry`` extra)."""
+    doc = {
+        "schema": STATS_SCHEMA,
+        "algo": algo,
+        "graph": graph,
+        "devices": devices,
+        "config": config,
+        "timing_ms": timing_ms,
+        "engine_stats": (
+            dataclasses.asdict(engine_stats)
+            if dataclasses.is_dataclass(engine_stats) else engine_stats
+        ),
+    }
+    doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
 
 
 def main(argv=None) -> int:
@@ -59,6 +89,8 @@ def main(argv=None) -> int:
                          "multi-source waves (analytics.msbfs)")
     ap.add_argument("--pallas", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="dump EngineStats + run identity as JSON")
     args = ap.parse_args(argv)
 
     os.environ.setdefault(
@@ -97,7 +129,20 @@ def main(argv=None) -> int:
         density_threshold=args.density_threshold,
     )
     rng = np.random.default_rng(args.seed)
-    roots = [csr.largest_component_root(g, rng) for _ in range(args.roots)]
+    # DISTINCT roots (clamped to the big component): engine waves fold
+    # duplicate roots (DESIGN.md §15), so sampling with replacement would
+    # silently under-count the work behind the reported rates
+    roots = csr.largest_component_roots(g, args.roots, rng).tolist()
+    n_roots = len(roots)
+
+    graph_doc = {"name": args.graph, "scale": args.scale,
+                 "edge_factor": args.edge_factor, "n": g.n,
+                 "n_real": g.n_real, "n_edges": g.n_edges,
+                 "weighted": bool(g.weighted)}
+    config_doc = {"sync": args.sync, "mode": args.mode,
+                  "fanout": args.fanout, "lanes": args.num_sources,
+                  "delta": args.delta, "max_weight": max_weight,
+                  "use_pallas": bool(args.pallas)}
 
     if args.algo == "sssp":
         from repro.traversal import sssp as sssp_mod
@@ -114,7 +159,7 @@ def main(argv=None) -> int:
         fn = sssp_mod.build_sssp_fn(pg, mesh, scfg)
         d, it, relaxed = fn(arrays, np.int32(roots[0]))  # warmup / compile
         jax.block_until_ready(d)
-        times, rates = [], []
+        times, rates, relaxed_total = [], [], 0.0
         for r in roots:
             t0 = time.time()
             d, it, relaxed = fn(arrays, np.int32(r))
@@ -122,12 +167,25 @@ def main(argv=None) -> int:
             dt = time.time() - t0
             times.append(dt)
             rates.append(float(relaxed[0]) / dt / 1e9)
+            relaxed_total += float(relaxed[0])
         t = np.array(times)
         print(
             f"SSSP {scfg.sync} fanout={args.fanout} delta={args.delta} "
             f"devices={args.devices}: time {t.mean()*1e3:.1f}ms  "
             f"GRelax/s {np.mean(rates):.4f} (host-simulated devices)"
         )
+        if args.stats_json:
+            from repro.analytics.engine import EngineStats
+
+            write_stats_json(
+                args.stats_json, algo="sssp", graph=graph_doc,
+                devices=args.devices, config=config_doc,
+                timing_ms={"mean": float(t.mean() * 1e3),
+                           "total": float(t.sum() * 1e3)},
+                engine_stats=EngineStats(
+                    sssp_queries=len(roots), relaxed_edges=relaxed_total
+                ),
+            )
         return 0
 
     if args.algo == "bc":
@@ -142,11 +200,19 @@ def main(argv=None) -> int:
         top = np.argsort(bc_scores)[::-1][:5]
         print(
             f"BC {args.sync} fanout={args.fanout} devices={args.devices} "
-            f"lanes={lanes}: {args.roots} sources in {dt*1e3:.1f}ms "
-            f"({args.roots/dt:.1f} sources/s; host-simulated devices)"
+            f"lanes={lanes}: {n_roots} sources in {dt*1e3:.1f}ms "
+            f"({n_roots/dt:.1f} sources/s; host-simulated devices)"
         )
         print("top-5 central vertices:",
               ", ".join(f"{v}={bc_scores[v]:.1f}" for v in top))
+        if args.stats_json:
+            write_stats_json(
+                args.stats_json, algo="bc", graph=graph_doc,
+                devices=args.devices, config=config_doc,
+                timing_ms={"mean": dt * 1e3 / max(n_roots, 1),
+                           "total": dt * 1e3},
+                engine_stats=eng.stats,
+            )
         return 0
 
     if args.num_sources > 1:
@@ -161,10 +227,18 @@ def main(argv=None) -> int:
         print(
             f"MS-BFS {args.sync} fanout={args.fanout} mode={args.mode} "
             f"devices={args.devices} lanes={args.num_sources}: "
-            f"{args.roots} searches in {dt*1e3:.1f}ms over {eng.stats.waves} "
-            f"waves  ({args.roots/dt:.1f} searches/s, aggregate GTEP/s "
+            f"{n_roots} searches in {dt*1e3:.1f}ms over {eng.stats.waves} "
+            f"waves  ({n_roots/dt:.1f} searches/s, aggregate GTEP/s "
             f"{eng.stats.scanned_edges/dt/1e9:.4f}; host-simulated devices)"
         )
+        if args.stats_json:
+            write_stats_json(
+                args.stats_json, algo="bfs", graph=graph_doc,
+                devices=args.devices, config=config_doc,
+                timing_ms={"mean": dt * 1e3 / max(n_roots, 1),
+                           "total": dt * 1e3},
+                engine_stats=eng.stats,
+            )
         return 0
 
     layout = None
@@ -179,6 +253,7 @@ def main(argv=None) -> int:
     jax.block_until_ready(d)
 
     times, gteps = [], []
+    scanned_total, max_lvl = 0.0, 0
     for r in roots:
         t0 = time.time()
         d, lvl, scanned = fn(arrays, np.int32(r))
@@ -186,6 +261,8 @@ def main(argv=None) -> int:
         dt = time.time() - t0
         times.append(dt)
         gteps.append(float(scanned[0]) / dt / 1e9)
+        scanned_total += float(scanned[0])
+        max_lvl = max(max_lvl, int(np.max(lvl)))
     # paper protocol: drop fastest/slowest quartile
     order = np.argsort(times)
     keep = order[len(order) // 4 : -len(order) // 4] if len(order) >= 8 else order
@@ -197,6 +274,19 @@ def main(argv=None) -> int:
         f"GTEP/s {g_.mean():.4f} (host-simulated devices; "
         f"see EXPERIMENTS.md for the measurement caveat)"
     )
+    if args.stats_json:
+        from repro.analytics.engine import EngineStats
+
+        write_stats_json(
+            args.stats_json, algo="bfs", graph=graph_doc,
+            devices=args.devices, config=config_doc,
+            timing_ms={"mean": float(t.mean() * 1e3),
+                       "total": float(np.sum(times) * 1e3)},
+            engine_stats=EngineStats(
+                queries=len(roots), waves=len(roots),
+                scanned_edges=scanned_total, max_levels=max_lvl,
+            ),
+        )
     return 0
 
 

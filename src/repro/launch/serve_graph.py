@@ -1,0 +1,158 @@
+"""Graph-query serving CLI (DESIGN.md §15).
+
+``python -m repro.launch.serve_graph --scale 12 --devices 8 --duration 5``
+
+Builds a graph, 1D-partitions it over simulated devices, starts a
+:class:`~repro.service.GraphQueryService`, and drives it with a built-in
+open-loop load (mixed ``bfs``/``closeness`` root queries at ``--qps``,
+per-request ``--deadline-ms``); on exit it prints — and with
+``--stats-json`` persists — the full telemetry snapshot (p50/p95/p99
+latency, QPS, wave occupancy, cache hit rate) alongside the engine stats,
+using the ``bfs_run`` stats schema extended with a ``telemetry`` block.
+
+``--swap-after N`` swaps in a fresh graph (new seed) after ``N`` requests
+to exercise the epoch-bump invalidation path under live traffic.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--fanout", type=int, default=4)
+    ap.add_argument("--sync", default="adaptive",
+                    choices=["butterfly", "sparse", "adaptive", "rabenseifner",
+                             "all_to_all", "xla"])
+    ap.add_argument("--lanes", type=int, default=32,
+                    help="wave width (bit-lanes per MS-BFS wave)")
+    ap.add_argument("--qps", type=float, default=100.0,
+                    help="offered open-loop arrival rate")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="seconds of offered load")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline; 0 = best-effort")
+    ap.add_argument("--linger-ms", type=float, default=5.0,
+                    help="max wave linger before a partial dispatch")
+    ap.add_argument("--cache-capacity", type=int, default=1024)
+    ap.add_argument("--max-pending", type=int, default=1024,
+                    help="admission-control queue bound")
+    ap.add_argument("--algos", default="bfs,closeness",
+                    help="comma list drawn per request (bfs,closeness,bc)")
+    ap.add_argument("--hot-fraction", type=float, default=0.2,
+                    help="fraction of requests hitting one hot root "
+                         "(exercises dedup + the result cache)")
+    ap.add_argument("--swap-after", type=int, default=0,
+                    help="swap in a reseeded graph after N requests "
+                         "(exercises epoch invalidation); 0 = never")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="dump telemetry + engine stats as JSON")
+    args = ap.parse_args(argv)
+
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}"
+    )
+    import json
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core import bfs
+    from repro.graph import csr, generators, partition
+    from repro.service import AdmissionError, GraphQueryService
+
+    def build(seed):
+        g = generators.kronecker(args.scale, args.edge_factor, seed=seed)
+        return g, partition.partition_1d(g, args.devices)
+
+    g, pg = build(args.seed)
+    print(f"graph: n={g.n_real:,} m={g.n_edges:,}")
+    mesh = jax.make_mesh((args.devices,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = bfs.BFSConfig(axes=("data",), fanout=args.fanout, sync=args.sync)
+    algos = [a.strip() for a in args.algos.split(",") if a.strip()]
+
+    svc = GraphQueryService(
+        pg, mesh, cfg, lanes=args.lanes, n_real=g.n_real,
+        cache_capacity=args.cache_capacity, max_pending=args.max_pending,
+        max_linger_s=args.linger_ms / 1e3,
+        default_deadline_s=(args.deadline_ms / 1e3) or None,
+    )
+    rng = np.random.default_rng(args.seed)
+    hot = csr.largest_component_root(g, rng)
+    svc.query("bfs", hot)  # warmup / compile
+    svc.reset_telemetry()  # the compile must not pollute measured latency
+    print(f"serving: lanes={args.lanes} sync={args.sync} "
+          f"linger={args.linger_ms}ms qps={args.qps} "
+          f"deadline={args.deadline_ms or 'none'}ms")
+
+    n = max(int(args.qps * args.duration), 1)
+    futs = []
+    rejected = 0
+    t0 = time.perf_counter()
+    for i in range(n):
+        target = t0 + i / args.qps
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        if args.swap_after and i == args.swap_after:
+            g, pg = build(args.seed + 1)
+            epoch = svc.swap_graph(pg, n_real=g.n_real)
+            print(f"  [swapped graph at request {i} -> epoch {epoch}]")
+        root = (hot if rng.random() < args.hot_fraction
+                else int(rng.integers(0, g.n_real)))
+        try:
+            futs.append(svc.submit(algos[i % len(algos)], root))
+        except AdmissionError:
+            rejected += 1
+    ok = err = 0
+    for f in futs:
+        try:
+            f.result(timeout=600)
+            ok += 1
+        except Exception:
+            err += 1
+    elapsed = time.perf_counter() - t0
+
+    snap = svc.snapshot()
+    lat = snap["latency_ms"]
+    print(
+        f"{ok}/{n} served in {elapsed:.2f}s ({ok/elapsed:.1f} QPS; "
+        f"{rejected} rejected, {err} failed/expired)  "
+        f"p50 {lat['p50']:.1f}ms  p95 {lat['p95']:.1f}ms  "
+        f"p99 {lat['p99']:.1f}ms  occupancy {snap['wave_occupancy']:.2f}  "
+        f"cache hit-rate {snap['cache']['hit_rate']:.2f} "
+        f"(host-simulated devices)"
+    )
+    if args.stats_json:
+        from repro.launch.bfs_run import write_stats_json
+
+        write_stats_json(
+            args.stats_json, algo="service",
+            graph={"name": "kronecker", "scale": args.scale,
+                   "edge_factor": args.edge_factor, "n": g.n,
+                   "n_real": g.n_real, "n_edges": g.n_edges,
+                   "weighted": bool(g.weighted)},
+            devices=args.devices,
+            config={"sync": args.sync, "mode": cfg.mode,
+                    "fanout": args.fanout, "lanes": args.lanes,
+                    "delta": 0, "max_weight": 0, "use_pallas": False},
+            timing_ms={"mean": lat["mean"], "total": elapsed * 1e3},
+            engine_stats=svc.engine.stats,
+            telemetry=snap,
+        )
+        print(f"stats -> {args.stats_json}")
+    svc.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

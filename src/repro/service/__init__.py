@@ -1,0 +1,301 @@
+"""Async graph-query serving on the butterfly engine (DESIGN.md §15).
+
+The repo's first subsystem whose unit of work is a REQUEST STREAM rather
+than a fixed batch: callers submit single-root queries (``bfs`` /
+``closeness`` / ``sssp`` / ``bc``) with optional deadlines and get
+:class:`concurrent.futures.Future`\\ s back; a background wave scheduler
+coalesces compatible requests into full-width §13 lane waves against the
+batched :class:`~repro.analytics.engine.BFSQueryEngine`.
+
+    queue  →  scheduler  →  engine  →  cache
+      │           │            │          │
+  admission   deadline /   compiled    epoch-keyed
+  control     linger wave  §13/§14     LRU results
+              formation    programs
+
+Layers (one module each):
+
+* :mod:`repro.service.queue`     — thread-safe submission + admission control,
+* :mod:`repro.service.scheduler` — deadline-aware wave formation + dedup,
+* :mod:`repro.service.cache`     — bounded LRU keyed ``(epoch, algo, cfg, root)``,
+* :mod:`repro.service.telemetry` — p50/p95/p99, QPS, occupancy, hit rate.
+
+Epoch contract: every result is computed, cached, and delivered under the
+graph epoch current AT DISPATCH; :meth:`GraphQueryService.swap_graph` bumps
+the epoch atomically with the engine swap, so a reloaded graph can never
+serve levels computed under its predecessor.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.analytics import measures
+from repro.analytics.engine import BFSQueryEngine
+from repro.core.bfs import BFSConfig
+from repro.service.cache import ResultCache, result_key
+from repro.service.queue import (  # noqa: F401  (public API re-exports)
+    ALGOS,
+    AdmissionError,
+    DeadlineExceeded,
+    QueryRequest,
+    ServiceStopped,
+    SubmissionQueue,
+    resolve_future,
+)
+from repro.service.scheduler import WAVE_CLASS, WaveScheduler  # noqa: F401
+from repro.service.telemetry import Telemetry
+from repro.traversal.sssp import SSSPConfig
+
+
+class GraphQueryService:
+    """Asynchronous deadline-aware graph-query service.
+
+    ::
+
+        svc = GraphQueryService(pg, mesh, cfg, lanes=32)
+        fut = svc.submit("bfs", root=7, deadline_s=0.1)
+        dist = fut.result()        # int64[n] levels
+        svc.stop()
+
+    ``coalesce=False`` degrades to one-request-per-wave dispatch (the §15
+    benchmark baseline).  ``cache_capacity=0`` disables the result cache.
+    """
+
+    def __init__(
+        self,
+        pg,
+        mesh,
+        cfg: BFSConfig = BFSConfig(),
+        *,
+        lanes: int = 32,
+        n_real: Optional[int] = None,
+        sssp_cfg: Optional[SSSPConfig] = None,
+        max_pending: int = 1024,
+        cache_capacity: int = 1024,
+        max_linger_s: float = 0.005,
+        default_deadline_s: Optional[float] = None,
+        coalesce: bool = True,
+        start: bool = True,
+    ):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.lanes = lanes
+        self.n_real = int(n_real) if n_real is not None else pg.n
+        self.default_deadline_s = default_deadline_s
+        self.swap_lock = threading.RLock()
+        # (epoch, engine) swapped as ONE tuple so readers always see a
+        # consistent pair without taking the swap lock
+        self._state: Tuple[int, BFSQueryEngine] = (
+            0, BFSQueryEngine(pg, mesh, cfg, lanes=lanes)
+        )
+        self._sssp_cfg = sssp_cfg
+        self.queue = SubmissionQueue(max_pending)
+        self.cache = ResultCache(cache_capacity)
+        self.telemetry = Telemetry()
+        self.scheduler = WaveScheduler(
+            self, max_linger_s=max_linger_s, coalesce=coalesce
+        )
+        self._stopped = False
+        if start:
+            self.start()
+
+    # --- state ------------------------------------------------------------
+
+    @property
+    def state(self) -> Tuple[int, BFSQueryEngine]:
+        return self._state
+
+    @property
+    def epoch(self) -> int:
+        return self._state[0]
+
+    @property
+    def engine(self) -> BFSQueryEngine:
+        return self._state[1]
+
+    @property
+    def sssp_cfg(self) -> SSSPConfig:
+        """The service's SSSP knobs (engine BFS knobs lifted when not given
+        explicitly; raises when the engine sync has no SSSP equivalent)."""
+        if self._sssp_cfg is None:
+            self._sssp_cfg = self.engine._sssp_cfg(None)
+        return self._sssp_cfg
+
+    def _cfg_for(self, algo: str):
+        return self.sssp_cfg if algo == "sssp" else self.engine.cfg
+
+    # --- submission path --------------------------------------------------
+
+    def submit(
+        self, algo: str, root: int, deadline_s: Optional[float] = None
+    ) -> Future:
+        """Enqueue one root query; returns a future resolving to the algo's
+        payload (``bfs``/``sssp``: ``int64[n]`` distances, ``closeness``:
+        float, ``bc``: this source's Brandes dependency vector
+        ``float64[n]``).  Cache hits resolve synchronously without touching
+        the queue.  Raises :class:`AdmissionError` on overload and
+        :class:`ValueError` on bad algo/root."""
+        epoch, engine = self._state
+        if algo not in ALGOS:
+            raise ValueError(f"unknown algo {algo!r}; expected one of {ALGOS}")
+        root = int(root)
+        if not 0 <= root < engine.pg.n:
+            raise ValueError(f"root out of range [0, {engine.pg.n}): {root}")
+        if algo == "sssp":
+            if not engine.pg.weighted:
+                raise ValueError("sssp requires a weighted graph")
+            self.sssp_cfg  # raises early when the sync has no SSSP analogue
+        self.telemetry.record_submit()
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        hit, value = self.cache_lookup(epoch, engine, algo, root)
+        if hit:
+            fut: Future = Future()
+            fut.set_result(value)
+            self.telemetry.record_completed(0.0, True)
+            return fut
+        try:
+            return self.queue.submit(algo, root, deadline_s).future
+        except AdmissionError:
+            self.telemetry.record_rejected()
+            raise
+
+    def query(
+        self,
+        algo: str,
+        root: int,
+        deadline_s: Optional[float] = None,
+        timeout: Optional[float] = None,
+    ):
+        """Blocking convenience: ``submit(...).result(timeout)``."""
+        return self.submit(algo, root, deadline_s).result(timeout)
+
+    # --- cache plumbing (scheduler calls these) ---------------------------
+
+    def cache_lookup(self, epoch, engine, algo, root):
+        """``(hit, payload)`` under ``epoch``.  A closeness probe falls back
+        to a cached BFS row for the same root (same wave family) and
+        memoizes the derived scalar."""
+        if not self.cache.enabled:
+            return False, None
+        key = result_key(epoch, algo, self._cfg_for(algo), root)
+        hit, value = self.cache.get(key)
+        if hit:
+            return True, value
+        if algo == "closeness":
+            hit, row = self.cache.get(
+                result_key(epoch, "bfs", engine.cfg, root)
+            )
+            if hit:
+                value = self._closeness(row)
+                self.cache.put(key, value)
+                return True, value
+        return False, None
+
+    def finish_result(self, epoch, engine, algo, root, raw):
+        """Map a wave-class raw result to the request's payload (identity
+        except closeness, which derives its scalar from the BFS row)."""
+        if algo != "closeness":
+            return raw
+        value = self._closeness(raw)
+        self.cache.put(
+            result_key(epoch, "closeness", engine.cfg, root), value
+        )
+        return value
+
+    def _closeness(self, dist_row) -> float:
+        return float(
+            measures.closeness_centrality(
+                np.asarray(dist_row)[None, :], n=self.n_real
+            )[0]
+        )
+
+    # --- graph lifecycle --------------------------------------------------
+
+    def swap_graph(
+        self,
+        pg,
+        mesh=None,
+        cfg: Optional[BFSConfig] = None,
+        *,
+        lanes: Optional[int] = None,
+        n_real: Optional[int] = None,
+        sssp_cfg: Optional[SSSPConfig] = None,
+    ) -> int:
+        """Replace the served graph; bumps the epoch atomically with the
+        engine swap (waits for any in-flight wave).  Returns the new epoch.
+        Pending requests are served under the NEW epoch — a request never
+        observes the graph it was submitted against after a swap, only the
+        current one (the no-stale-results contract)."""
+        with self.swap_lock:
+            mesh = mesh if mesh is not None else self.mesh
+            cfg = cfg if cfg is not None else self.cfg
+            lanes = lanes if lanes is not None else self.lanes
+            engine = BFSQueryEngine(pg, mesh, cfg, lanes=lanes)
+            epoch = self._state[0] + 1
+            self._state = (epoch, engine)
+            self.mesh, self.cfg, self.lanes = mesh, cfg, lanes
+            self.n_real = int(n_real) if n_real is not None else pg.n
+            self._sssp_cfg = sssp_cfg
+            self.cache.drop_stale(epoch)
+            self.telemetry.record_epoch_bump()
+            return epoch
+
+    def bump_epoch(self) -> int:
+        """Invalidate every cached result without swapping the engine (the
+        hook for in-place graph mutation).  Returns the new epoch."""
+        with self.swap_lock:
+            epoch = self._state[0] + 1
+            self._state = (epoch, self._state[1])
+            self.cache.drop_stale(epoch)
+            self.telemetry.record_epoch_bump()
+            return epoch
+
+    # --- lifecycle --------------------------------------------------------
+
+    def start(self) -> None:
+        self.scheduler.start()
+
+    def stop(self) -> None:
+        """Stop the scheduler; pending futures fail with
+        :class:`ServiceStopped`."""
+        if self._stopped:
+            return
+        self._stopped = True
+        self.scheduler._stop.set()
+        leftovers = self.queue.close()  # also wakes the scheduler
+        self.scheduler.stop(join=True)
+        for r in leftovers:
+            resolve_future(r.future,
+                           exception=ServiceStopped("service stopped"))
+
+    def __enter__(self) -> "GraphQueryService":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # --- reporting --------------------------------------------------------
+
+    def reset_telemetry(self) -> None:
+        """Fresh counters/latency reservoir — call after warmup so compile
+        time never pollutes the measured latency/QPS/occupancy."""
+        self.telemetry = Telemetry()
+
+    def snapshot(self) -> dict:
+        """JSON-serializable telemetry + cache + queue state."""
+        return self.telemetry.snapshot(
+            cache=self.cache.snapshot(),
+            pending=len(self.queue),
+            epoch=self.epoch,
+            lanes=self.engine.lanes,
+            coalesce=self.scheduler.coalesce,
+            engine={"waves": self.engine.stats.waves,
+                    "queries": self.engine.stats.queries},
+        )

@@ -1,0 +1,135 @@
+"""Service telemetry: latency percentiles, QPS, wave occupancy (DESIGN.md §15).
+
+One lock-protected accumulator shared by the submission path (caller
+threads) and the dispatch path (scheduler thread).  Latencies land in a
+bounded ring so a long-lived process keeps O(window) memory; percentiles
+are computed lazily at :meth:`snapshot` time.  Everything in the snapshot
+is plain ``int``/``float``/``str`` — ``json.dumps`` safe by construction
+(``launch/serve_graph.py --stats-json`` and the load generator persist it
+verbatim).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, Optional
+
+
+def percentiles(values, points=(50.0, 95.0, 99.0)) -> Dict[str, float]:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` via linear interpolation
+    (numpy-free so telemetry stays importable anywhere)."""
+    out = {f"p{int(p) if float(p).is_integer() else p}": 0.0 for p in points}
+    if not values:
+        return out
+    xs = sorted(values)
+    n = len(xs)
+    for p in points:
+        rank = (p / 100.0) * (n - 1)
+        lo = int(rank)
+        hi = min(lo + 1, n - 1)
+        frac = rank - lo
+        key = f"p{int(p) if float(p).is_integer() else p}"
+        out[key] = xs[lo] * (1.0 - frac) + xs[hi] * frac
+    return out
+
+
+class Telemetry:
+    """Counters + latency reservoir for one :class:`GraphQueryService`."""
+
+    def __init__(self, *, latency_window: int = 65536, clock=time.monotonic):
+        self._lock = threading.Lock()
+        self._clock = clock
+        self._t0 = clock()
+        self._latencies = deque(maxlen=latency_window)
+        # request lifecycle
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0  # admission control turned it away
+        self.expired = 0  # deadline passed before dispatch (load shed)
+        self.failed = 0  # engine/dispatch exception
+        self.deadline_misses = 0  # served, but past its deadline
+        # dispatch-side accounting
+        self.dispatches = 0  # scheduler engine calls
+        self.engine_waves = 0  # compiled-program invocations underneath
+        self.lanes_used = 0  # unique roots actually occupying lanes
+        self.lanes_offered = 0  # lanes the dispatched waves provided
+        self.coalesced_roots = 0  # duplicate roots folded into one lane
+        self.epoch_bumps = 0
+
+    # --- submission path --------------------------------------------------
+
+    def record_submit(self) -> None:
+        with self._lock:
+            self.submitted += 1
+
+    def record_rejected(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def record_expired(self) -> None:
+        with self._lock:
+            self.expired += 1
+
+    def record_failed(self) -> None:
+        with self._lock:
+            self.failed += 1
+
+    def record_completed(self, latency_s: float, deadline_met: bool) -> None:
+        with self._lock:
+            self.completed += 1
+            self._latencies.append(latency_s)
+            if not deadline_met:
+                self.deadline_misses += 1
+
+    # --- dispatch path ----------------------------------------------------
+
+    def record_dispatch(
+        self, *, engine_waves: int, lanes_used: int, lanes_offered: int,
+        coalesced_roots: int = 0,
+    ) -> None:
+        with self._lock:
+            self.dispatches += 1
+            self.engine_waves += engine_waves
+            self.lanes_used += lanes_used
+            self.lanes_offered += lanes_offered
+            self.coalesced_roots += coalesced_roots
+
+    def record_epoch_bump(self) -> None:
+        with self._lock:
+            self.epoch_bumps += 1
+
+    # --- reporting --------------------------------------------------------
+
+    def snapshot(self, **extra: Any) -> Dict[str, Any]:
+        """JSON-serializable state; keyword extras (e.g. ``cache=...``,
+        ``pending=...``, ``epoch=...``) are merged in verbatim."""
+        with self._lock:
+            elapsed = max(self._clock() - self._t0, 1e-9)
+            lat_ms = [v * 1e3 for v in self._latencies]
+            snap: Dict[str, Any] = {
+                "uptime_s": elapsed,
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "expired": self.expired,
+                "failed": self.failed,
+                "deadline_misses": self.deadline_misses,
+                "qps": self.completed / elapsed,
+                "latency_ms": {
+                    **percentiles(lat_ms),
+                    "mean": sum(lat_ms) / len(lat_ms) if lat_ms else 0.0,
+                    "count": len(lat_ms),
+                },
+                "dispatches": self.dispatches,
+                "engine_waves": self.engine_waves,
+                "wave_occupancy": (
+                    self.lanes_used / self.lanes_offered
+                    if self.lanes_offered else 0.0
+                ),
+                "coalesced_roots": self.coalesced_roots,
+                "epoch_bumps": self.epoch_bumps,
+            }
+        snap.update(extra)
+        return snap

@@ -170,6 +170,77 @@ def test_engine_batches_query_stream(mesh8):
     np.testing.assert_array_equal(eng.query_one(int(roots[0])), dist[0])
 
 
+def test_engine_query_dedupes_duplicate_roots(mesh8):
+    """ISSUE-4 satellite: duplicates inside one query() fold into a single
+    lane — ``query(r + r) == query(r)`` twice over, positionally — and the
+    wave count reflects DISTINCT roots only."""
+    g = GRAPHS["kron10"]()
+    pg = partition.partition_1d(g, 8)
+    eng = aengine.BFSQueryEngine(
+        pg, mesh8, bfs.BFSConfig(axes=("data",), fanout=4), lanes=4
+    )
+    r = _roots(g, 3, seed=5).tolist()
+    w0 = eng.stats.waves
+    doubled = eng.query(r + r)  # 6 requests, 3 distinct -> ONE 4-lane wave
+    assert eng.stats.waves - w0 == 1
+    assert eng.stats.deduped_roots == 3
+    base = eng.query(r)
+    np.testing.assert_array_equal(doubled, np.concatenate([base, base]))
+    # interleaved duplicates also resolve by position
+    mixed = eng.query([r[1], r[0], r[1], r[2], r[0]])
+    np.testing.assert_array_equal(
+        mixed, base[[1, 0, 1, 2, 0]], err_msg="positional dedup"
+    )
+
+
+def test_program_cache_lru_bound_and_strong_refs(monkeypatch):
+    """ISSUE-4 satellite: the module-wide compiled-program cache is a
+    bounded LRU — hits refresh recency — and every resident entry keeps a
+    STRONG reference to its graph/mesh so a live key's id() can never be
+    recycled onto a different object (the PR 3 id-reuse fix must survive
+    eviction)."""
+    import gc
+    import weakref
+    from collections import OrderedDict
+
+    monkeypatch.setattr(aengine, "_PROGRAM_CACHE", OrderedDict())
+    monkeypatch.setattr(aengine, "_PROGRAM_CACHE_MAX", 4)
+
+    class Obj:
+        pass
+
+    mesh = Obj()
+    refs = []
+    for i in range(10):
+        pg = Obj()
+        refs.append(weakref.ref(pg))
+        fn = aengine._cached(
+            pg, mesh, (id(pg), id(mesh), "bfs", i), lambda i=i: f"prog{i}"
+        )
+        assert fn == f"prog{i}"
+        del pg
+    gc.collect()
+    assert len(aengine._PROGRAM_CACHE) == 4  # bounded
+    # exactly the resident entries pin their graphs alive
+    assert sum(1 for r in refs if r() is not None) == 4
+    # a hit refreshes LRU order: touch the coldest entry, then insert one
+    # more — the refreshed entry survives, the next-coldest is evicted
+    keys = list(aengine._PROGRAM_CACHE)
+    coldest = aengine._PROGRAM_CACHE[keys[0]]
+    hit = aengine._cached(
+        coldest[1], coldest[2], keys[0], lambda: "MUST NOT REBUILD"
+    )
+    assert hit == coldest[0]
+    aengine._cached(Obj(), mesh, ("fresh",), lambda: "fresh")
+    assert keys[0] in aengine._PROGRAM_CACHE
+    assert keys[1] not in aengine._PROGRAM_CACHE
+    # an id-recycled key with a DIFFERENT live object rebuilds, never
+    # aliases (identity check, not just key equality)
+    impostor = Obj()
+    rebuilt = aengine._cached(impostor, mesh, keys[0], lambda: "rebuilt")
+    assert rebuilt == "rebuilt"
+
+
 def test_engine_program_cache_reuse(mesh8):
     g = GRAPHS["kron10"]()
     pg = partition.partition_1d(g, 8)

@@ -198,3 +198,22 @@ def test_largest_component_root():
     for _ in range(5):
         r = csr.largest_component_root(g, rng)
         assert comp[r] == largest
+
+
+def test_largest_component_roots_distinct_and_clamped():
+    """§15 serving convention: distinct big-component roots, clamped to the
+    component size (engine waves fold duplicates, so replacement sampling
+    would under-count benchmark work)."""
+    g = generators.kronecker(8, 8, seed=0)
+    comp = csr.connected_components(g)
+    largest = np.bincount(comp[: g.n_real]).argmax()
+    comp_size = int(np.sum(comp[: g.n_real] == largest))
+
+    rng = np.random.default_rng(0)
+    roots = csr.largest_component_roots(g, 10, rng)
+    assert roots.shape == (10,)
+    assert len(set(roots.tolist())) == 10  # distinct
+    assert np.all(comp[roots] == largest)  # inside the big component
+
+    everything = csr.largest_component_roots(g, comp_size + 999, rng)
+    assert everything.shape == (comp_size,)  # clamped, never raises

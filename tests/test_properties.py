@@ -212,3 +212,42 @@ def test_compact_expand_roundtrip(n_words, active, capacity, seed):
     if not overflow:
         back = fr.expand_words(n_words, idx, vals)
         assert np.array_equal(np.asarray(back), b)
+
+
+# --- query-engine dedup (serving, DESIGN.md §15) ----------------------------
+
+
+def _dedup_engine():
+    """One shared tiny engine (module-cached program) for the property."""
+    global _DEDUP_ENGINE
+    try:
+        return _DEDUP_ENGINE
+    except NameError:
+        from repro.analytics.engine import BFSQueryEngine
+        from repro.graph import generators
+
+        g = generators.kronecker(8, 8, seed=2)
+        pg = partition.partition_1d(g, 4)
+        mesh = jax.make_mesh((4,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        _DEDUP_ENGINE = (
+            g, BFSQueryEngine(pg, mesh, bfs.BFSConfig(axes=("data",)), lanes=4)
+        )
+        return _DEDUP_ENGINE
+
+
+@given(
+    roots=st.lists(st.integers(0, 255), min_size=1, max_size=6),
+)
+@settings(max_examples=15, deadline=None)
+def test_engine_query_dedup_property(roots):
+    """``query(r + r) == query(r)`` twice over, for ANY root list (the
+    ISSUE-4 duplicate-fold contract), and distinct-root wave accounting."""
+    g, eng = _dedup_engine()
+    base = eng.query(roots)
+    w0 = eng.stats.waves
+    doubled = eng.query(roots + roots)
+    waves = eng.stats.waves - w0
+    assert np.array_equal(doubled, np.concatenate([base, base]))
+    n_uniq = len(set(roots))
+    assert waves == -(-n_uniq // eng.lanes)  # ceil(distinct / lanes)

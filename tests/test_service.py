@@ -1,0 +1,448 @@
+"""Async graph-query service: correctness, caching, deadlines (DESIGN.md §15).
+
+Tier-1 covers the full request lifecycle on small graphs — mixed-algo
+correctness vs host oracles, wave coalescing + duplicate-root dedup,
+epoch-keyed cache hits/invalidation (asserted via the engine wave counter),
+deadline shedding, linger dispatch, admission control, telemetry schema.
+The kron13/P=8 load-generator acceptance bars (>= 5x coalesced QPS at
+equal-or-better p99, >= 90% duplicate-root cache hit rate) run under the
+``tier2`` marker off the emitted ``service_latency`` rows.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import bfs
+from repro.graph import generators, partition
+from repro.service import (
+    ALGOS,
+    AdmissionError,
+    DeadlineExceeded,
+    GraphQueryService,
+    ServiceStopped,
+)
+from repro.service.cache import ResultCache, result_key
+from repro.service.telemetry import Telemetry, percentiles
+from repro.traversal import bc as bc_mod
+from repro.traversal import sssp as sssp_mod
+
+INF32 = np.iinfo(np.int32).max
+LANES = 8
+RESULT_S = 120.0  # generous future timeout: compiles happen on first touch
+
+
+def _norm(d):
+    return np.where(np.asarray(d) >= INF32, -1, np.asarray(d))
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.kronecker(10, 8, seed=1, max_weight=16)
+
+
+@pytest.fixture(scope="module")
+def pgraph(graph):
+    return partition.partition_1d(graph, 8)
+
+
+def _service(pgraph, mesh8, graph, **kw):
+    kw.setdefault("lanes", LANES)
+    kw.setdefault("n_real", graph.n_real)
+    kw.setdefault("max_linger_s", 0.01)
+    return GraphQueryService(
+        pgraph, mesh8, bfs.BFSConfig(axes=("data",), fanout=4), **kw
+    )
+
+
+def _component_roots(graph, count):
+    from repro.graph import csr
+
+    return csr.largest_component_roots(
+        graph, count, np.random.default_rng(0)
+    )
+
+
+# --- request lifecycle ------------------------------------------------------
+
+
+def test_mixed_algo_stream_matches_oracles(pgraph, mesh8, graph):
+    """One service, all four algos in flight together, each checked against
+    its host oracle."""
+    r1, r2, r3, r4 = (int(r) for r in _component_roots(graph, 4))
+    svc = _service(pgraph, mesh8, graph)
+    try:
+        futs = {
+            "bfs": svc.submit("bfs", r1),
+            "closeness": svc.submit("closeness", r2),
+            "sssp": svc.submit("sssp", r3),
+            "bc": svc.submit("bc", r4),
+        }
+        np.testing.assert_array_equal(
+            _norm(futs["bfs"].result(RESULT_S)),
+            _norm(bfs.bfs_reference(graph, r1)),
+        )
+        from repro.analytics import measures
+
+        ref_row = bfs.bfs_reference(graph, r2)[None, :]
+        assert futs["closeness"].result(RESULT_S) == pytest.approx(
+            float(measures.closeness_centrality(ref_row, n=graph.n_real)[0])
+        )
+        np.testing.assert_array_equal(
+            futs["sssp"].result(RESULT_S), sssp_mod.sssp_reference(graph, r3)
+        )
+        np.testing.assert_allclose(
+            futs["bc"].result(RESULT_S)[: graph.n_real],
+            bc_mod.bc_reference(graph, [r4])[: graph.n_real],
+            rtol=1e-5, atol=1e-6,  # engine sigma accumulates in float32
+        )
+    finally:
+        svc.stop()
+
+
+def test_wave_coalescing_folds_duplicates(pgraph, mesh8, graph):
+    """A queued burst with duplicate roots dispatches ceil(unique/lanes)
+    waves; every future resolves positionally."""
+    uniq = _component_roots(graph, LANES + 3)  # 11 distinct roots
+    roots = np.concatenate([uniq, uniq[:5]])  # 16 requests, 11 distinct
+    svc = _service(pgraph, mesh8, graph, start=False, cache_capacity=0)
+    try:
+        w0 = svc.engine.stats.waves
+        futs = [svc.submit("bfs", int(r)) for r in roots]
+        svc.start()  # scheduler drains the whole burst at once
+        results = [f.result(RESULT_S) for f in futs]
+        assert svc.engine.stats.waves - w0 == 2  # ceil(11 / 8)
+        for r, d in zip(roots, results):
+            np.testing.assert_array_equal(
+                _norm(d), _norm(bfs.bfs_reference(graph, int(r)))
+            )
+        snap = svc.snapshot()
+        assert snap["coalesced_roots"] == 5  # the duplicate riders
+        assert snap["completed"] == len(roots)
+    finally:
+        svc.stop()
+
+
+# --- cache + epoch contract -------------------------------------------------
+
+
+def test_same_epoch_repeat_hits_cache_and_skips_dispatch(pgraph, mesh8, graph):
+    root = int(_component_roots(graph, 1)[0])
+    svc = _service(pgraph, mesh8, graph)
+    try:
+        first = svc.query("bfs", root, timeout=RESULT_S)
+        waves = svc.engine.stats.waves
+        again = svc.query("bfs", root, timeout=RESULT_S)
+        assert svc.engine.stats.waves == waves  # no engine dispatch
+        np.testing.assert_array_equal(first, again)
+        snap = svc.snapshot()
+        assert snap["cache"]["hits"] >= 1
+        # closeness for the same root derives from the cached BFS row —
+        # still no wave
+        svc.query("closeness", root, timeout=RESULT_S)
+        assert svc.engine.stats.waves == waves
+    finally:
+        svc.stop()
+
+
+def test_epoch_bump_after_graph_swap_misses_and_serves_new_graph(mesh8):
+    """The no-stale-results contract: after swap_graph the same root MUST
+    recompute (cache miss) and the answer must match the NEW graph."""
+    g1 = generators.path_graph(96)
+    g2 = generators.torus_2d(10)  # 100 vertices, very different levels
+    pg1 = partition.partition_1d(g1, 8)
+    pg2 = partition.partition_1d(g2, 8)
+    svc = GraphQueryService(
+        pg1, mesh8, bfs.BFSConfig(axes=("data",)), lanes=4,
+        n_real=g1.n_real, max_linger_s=0.005,
+    )
+    try:
+        root = 3
+        d1 = svc.query("bfs", root, timeout=RESULT_S)
+        np.testing.assert_array_equal(_norm(d1), _norm(bfs.bfs_reference(g1, root)))
+        assert len(svc.cache) > 0
+
+        epoch = svc.swap_graph(pg2, n_real=g2.n_real)
+        assert epoch == 1
+        assert len(svc.cache) == 0  # stale entries freed eagerly
+
+        waves = svc.engine.stats.waves
+        d2 = svc.query("bfs", root, timeout=RESULT_S)
+        assert svc.engine.stats.waves > waves  # recomputed, not cached
+        np.testing.assert_array_equal(_norm(d2), _norm(bfs.bfs_reference(g2, root)))
+        assert not np.array_equal(_norm(d1)[: g2.n_real], _norm(d2)[: g2.n_real])
+
+        # same epoch again -> hit
+        waves = svc.engine.stats.waves
+        svc.query("bfs", root, timeout=RESULT_S)
+        assert svc.engine.stats.waves == waves
+
+        # bump_epoch without a swap also invalidates
+        svc.bump_epoch()
+        svc.query("bfs", root, timeout=RESULT_S)
+        assert svc.engine.stats.waves > waves
+        assert svc.snapshot()["epoch_bumps"] == 2
+    finally:
+        svc.stop()
+
+
+def test_cancelled_future_never_kills_the_scheduler(pgraph, mesh8, graph):
+    """A caller's cancel() must cost nothing: the cancelled lane is
+    skipped, wave-mates are served, and the scheduler thread survives to
+    serve later requests."""
+    roots = _component_roots(graph, 3)
+    svc = _service(pgraph, mesh8, graph, start=False, cache_capacity=0)
+    try:
+        f0 = svc.submit("bfs", int(roots[0]))
+        f1 = svc.submit("bfs", int(roots[1]))
+        assert f0.cancel()
+        svc.start()
+        np.testing.assert_array_equal(
+            _norm(f1.result(RESULT_S)),
+            _norm(bfs.bfs_reference(graph, int(roots[1]))),
+        )
+        # scheduler still alive and serving
+        d = svc.query("bfs", int(roots[2]), timeout=RESULT_S)
+        np.testing.assert_array_equal(
+            _norm(d), _norm(bfs.bfs_reference(graph, int(roots[2])))
+        )
+        assert svc.scheduler.running
+    finally:
+        svc.stop()
+
+
+def test_swap_to_smaller_graph_fails_only_out_of_range_requests(mesh8):
+    """A swap can shrink n underneath pending requests; only the roots that
+    no longer exist may fail — wave-mates with valid roots must be served
+    (on the NEW graph)."""
+    g_big = generators.torus_2d(10)  # n_real=100
+    g_small = generators.path_graph(64)
+    svc = GraphQueryService(
+        partition.partition_1d(g_big, 8), mesh8,
+        bfs.BFSConfig(axes=("data",)), lanes=4, n_real=g_big.n_real,
+        start=False, cache_capacity=0,
+    )
+    try:
+        f_gone = svc.submit("bfs", 90)  # valid now, gone after the swap
+        f_ok = svc.submit("bfs", 3)
+        svc.swap_graph(partition.partition_1d(g_small, 8),
+                       n_real=g_small.n_real)
+        svc.start()
+        np.testing.assert_array_equal(
+            _norm(f_ok.result(RESULT_S)),
+            _norm(bfs.bfs_reference(g_small, 3)),
+        )
+        with pytest.raises(ValueError, match="after graph swap"):
+            f_gone.result(RESULT_S)
+        assert svc.snapshot()["failed"] == 1
+    finally:
+        svc.stop()
+
+
+# --- deadlines, linger, admission ------------------------------------------
+
+
+def test_expired_deadline_is_shed_without_a_wave(pgraph, mesh8, graph):
+    root = int(_component_roots(graph, 1)[0])
+    svc = _service(pgraph, mesh8, graph, start=False, cache_capacity=0)
+    try:
+        fut = svc.submit("bfs", root, deadline_s=0.01)
+        time.sleep(0.08)  # deadline passes while the scheduler is down
+        w0 = svc.engine.stats.waves
+        svc.start()
+        with pytest.raises(DeadlineExceeded):
+            fut.result(RESULT_S)
+        assert svc.engine.stats.waves == w0  # no lane burned
+        assert svc.snapshot()["expired"] == 1
+    finally:
+        svc.stop()
+
+
+def test_linger_dispatches_partial_wave(pgraph, mesh8, graph):
+    """A lone request must not wait for a full wave: the linger timer
+    dispatches a partial one."""
+    root = int(_component_roots(graph, 1)[0])
+    svc = _service(pgraph, mesh8, graph, max_linger_s=0.02, cache_capacity=0)
+    try:
+        d = svc.query("bfs", root, timeout=RESULT_S)
+        np.testing.assert_array_equal(_norm(d), _norm(bfs.bfs_reference(graph, root)))
+        snap = svc.snapshot()
+        assert snap["dispatches"] == 1
+        assert 0 < snap["wave_occupancy"] <= 1.0 / LANES + 1e-9
+    finally:
+        svc.stop()
+
+
+def test_admission_control_bounds_queue_depth(pgraph, mesh8, graph):
+    roots = _component_roots(graph, 5)
+    svc = _service(pgraph, mesh8, graph, start=False, max_pending=4)
+    futs = [svc.submit("bfs", int(r)) for r in roots[:4]]
+    with pytest.raises(AdmissionError):
+        svc.submit("bfs", int(roots[4]))
+    with pytest.raises(AdmissionError):  # unmeetable deadline at submit
+        svc.submit("bfs", int(roots[0]), deadline_s=-0.5)
+    snap = svc.snapshot()
+    assert snap["rejected"] == 2 and snap["pending"] == 4
+    svc.stop()  # never started: pending futures must fail, not hang
+    for f in futs:
+        with pytest.raises(ServiceStopped):
+            f.result(1.0)
+    with pytest.raises(ServiceStopped):
+        svc.submit("bfs", int(roots[0]))
+
+
+def test_submit_validation(pgraph, mesh8, graph):
+    svc = _service(pgraph, mesh8, graph, start=False)
+    try:
+        with pytest.raises(ValueError, match="unknown algo"):
+            svc.submit("pagerank", 0)
+        with pytest.raises(ValueError, match="out of range"):
+            svc.submit("bfs", -1)
+        with pytest.raises(ValueError, match="out of range"):
+            svc.submit("bfs", pgraph.n)
+        g_unweighted = generators.path_graph(96)
+        svc_u = GraphQueryService(
+            partition.partition_1d(g_unweighted, 8), mesh8,
+            bfs.BFSConfig(axes=("data",)), lanes=4, start=False,
+        )
+        with pytest.raises(ValueError, match="weighted"):
+            svc_u.submit("sssp", 0)
+        svc_u.stop()
+    finally:
+        svc.stop()
+
+
+# --- telemetry --------------------------------------------------------------
+
+
+def test_snapshot_is_json_serializable(pgraph, mesh8, graph):
+    svc = _service(pgraph, mesh8, graph)
+    try:
+        svc.query("bfs", int(_component_roots(graph, 1)[0]), timeout=RESULT_S)
+        snap = svc.snapshot()
+        roundtrip = json.loads(json.dumps(snap))
+        for key in ("submitted", "completed", "qps", "latency_ms",
+                    "wave_occupancy", "cache", "epoch", "pending"):
+            assert key in roundtrip
+        assert {"p50", "p95", "p99", "mean", "count"} <= set(
+            roundtrip["latency_ms"]
+        )
+    finally:
+        svc.stop()
+
+
+def test_percentiles_interpolation():
+    vals = list(range(1, 101))  # 1..100
+    p = percentiles(vals)
+    assert p["p50"] == pytest.approx(50.5)
+    assert p["p95"] == pytest.approx(95.05)
+    assert p["p99"] == pytest.approx(99.01)
+    assert percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+def test_telemetry_counters_thread_safe():
+    tele = Telemetry()
+    def hammer():
+        for _ in range(500):
+            tele.record_submit()
+            tele.record_completed(0.001, True)
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = tele.snapshot()
+    assert snap["submitted"] == snap["completed"] == 2000
+
+
+# --- result cache unit tests ------------------------------------------------
+
+
+def test_result_cache_lru_eviction_order():
+    c = ResultCache(capacity=3)
+    for i in range(3):
+        c.put(result_key(0, "bfs", "cfg", i), i)
+    c.get(result_key(0, "bfs", "cfg", 0))  # refresh 0: now LRU order 1,2,0
+    c.put(result_key(0, "bfs", "cfg", 3), 3)  # evicts 1
+    assert c.peek(result_key(0, "bfs", "cfg", 0))
+    assert not c.peek(result_key(0, "bfs", "cfg", 1))
+    assert c.evictions == 1 and len(c) == 3
+
+
+def test_result_cache_epoch_keying_and_drop_stale():
+    c = ResultCache(capacity=8)
+    c.put(result_key(0, "bfs", "cfg", 7), "old")
+    hit, _ = c.get(result_key(1, "bfs", "cfg", 7))  # new epoch: structural miss
+    assert not hit
+    assert c.drop_stale(1) == 1 and len(c) == 0
+
+
+def test_result_cache_disabled_when_capacity_zero():
+    c = ResultCache(capacity=0)
+    c.put(result_key(0, "bfs", "cfg", 1), "x")
+    hit, _ = c.get(result_key(0, "bfs", "cfg", 1))
+    assert not hit and len(c) == 0
+    with pytest.raises(ValueError):
+        ResultCache(capacity=-1)
+
+
+# --- launch stats-json ------------------------------------------------------
+
+
+def test_bfs_run_stats_json_schema(tmp_path):
+    from repro.launch import bfs_run
+
+    out = tmp_path / "stats.json"
+    assert bfs_run.main([
+        "--scale", "8", "--devices", "2", "--roots", "3",
+        "--num-sources", "4", "--stats-json", str(out),
+    ]) == 0
+    doc = json.loads(out.read_text())
+    assert doc["schema"] == bfs_run.STATS_SCHEMA
+    assert doc["algo"] == "bfs" and doc["devices"] == 2
+    for key in ("graph", "config", "timing_ms", "engine_stats"):
+        assert key in doc
+    assert doc["graph"]["name"] == "kronecker" and doc["graph"]["scale"] == 8
+    stats = doc["engine_stats"]
+    for key in ("queries", "waves", "deduped_roots", "scanned_edges",
+                "max_levels", "sssp_queries", "relaxed_edges", "bc_sources"):
+        assert key in stats
+    assert stats["queries"] == 3 and stats["waves"] >= 1
+
+
+# --- tier-2 acceptance off the load generator -------------------------------
+
+
+@pytest.mark.tier2
+def test_service_acceptance_kron13_p8():
+    """ISSUE-4 bars, asserted from the emitted ``service_latency`` rows:
+    at P=8 on kron13, coalesced waves sustain >= 5x the QPS of
+    one-request-per-wave dispatch at equal-or-better p99, and a
+    100%-duplicate-root workload serves >= 90% from the epoch cache."""
+    from benchmarks import service as sbench
+
+    rep = sbench.run(scale=13, ps=(8,), syncs=("butterfly",))
+    row = rep.extra["service_latency"]["kron13_P8_butterfly"]
+    assert row["qps_speedup"] >= 5.0, row
+    assert (row["latency_ms_coalesced"]["p99"]
+            <= row["latency_ms_per_request"]["p99"] * 1.05), row
+    assert row["dup_hit_rate"] >= 0.90, row
+    for point in row["open_loop"]:
+        assert point["achieved_qps"] > 0
+
+
+@pytest.mark.tier2
+def test_service_benchmark_smoke_rows_schema():
+    from benchmarks import service as sbench
+
+    rep = sbench.run(smoke=True, ps=(8,))
+    rows = rep.extra["service_latency"]
+    assert rows, "smoke must emit service_latency rows"
+    for row in rows.values():
+        for key in ("qps_coalesced", "qps_per_request", "qps_speedup",
+                    "latency_ms_coalesced", "latency_ms_per_request",
+                    "open_loop", "dup_hit_rate", "wave_occupancy"):
+            assert key in row
