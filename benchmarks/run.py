@@ -6,6 +6,7 @@ One benchmark per paper table/figure (+ the LM-integration study):
   msbfs            — DESIGN §13 (32-lane multi-source vs single-source)
   sssp             — DESIGN §14 (weighted SSSP on the butterfly MIN-monoid)
   service          — DESIGN §15 (serving QPS/latency: coalesced vs per-wave)
+  dynamic          — DESIGN §16 (incremental repair vs full recompute)
   scaling          — Fig. 3  (strong scaling × fanout)
   fanout           — Fig. 2 / §3 (fanout trade-offs)
   collective_bytes — §3 message/byte analysis vs compiled HLO
@@ -37,6 +38,7 @@ def main(argv=None) -> int:
         bfs_gteps,
         collective_bytes,
         direction,
+        dynamic,
         fanout,
         grad_sync,
         msbfs,
@@ -50,11 +52,12 @@ def main(argv=None) -> int:
         # (``python -m benchmarks.service --smoke`` appends its rows)
         runs = [(bfs_gteps, {"scale": 11, "roots": 2, "smoke": True}),
                 (msbfs, {"smoke": True}),
-                (sssp, {"smoke": True})]
+                (sssp, {"smoke": True}),
+                (dynamic, {"smoke": True})]
     else:
         runs = [(bfs_gteps, {}), (msbfs, {}), (sssp, {}), (service, {}),
-                (scaling, {}), (fanout, {}), (collective_bytes, {}),
-                (direction, {}), (grad_sync, {})]
+                (dynamic, {}), (scaling, {}), (fanout, {}),
+                (collective_bytes, {}), (direction, {}), (grad_sync, {})]
     results = []
     extras = {}
     t_all = time.time()
@@ -76,6 +79,7 @@ def main(argv=None) -> int:
         "msbfs_per_sync": extras.get("msbfs", {}),
         "sssp_per_sync": extras.get("sssp", {}),
         "service_latency": extras.get("service_latency", {}),
+        "dynamic_update": extras.get("dynamic_update", {}),
     }
     bench_out = os.path.join(os.path.dirname(__file__), "..", "BENCH_bfs.json")
     bench_out = os.path.abspath(bench_out)

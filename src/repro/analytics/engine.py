@@ -128,6 +128,13 @@ class BFSQueryEngine:
         self._arrays = place_arrays(pg, mesh, cfg.axes)
         self._fn = compiled_wave_fn(pg, mesh, cfg, lanes)
 
+    def refresh_arrays(self) -> None:
+        """Re-place the partition arrays after an IN-PLACE host mutation
+        (``dynamic.delta.apply_update_to_partition``, DESIGN.md §16).  The
+        partition object — hence every compiled program keyed on its
+        identity — is unchanged: shapes are static, only values moved."""
+        self._arrays = place_arrays(self.pg, self.mesh, self.cfg.axes)
+
     def _run_wave(self, roots: np.ndarray) -> np.ndarray:
         padded = np.full(self.lanes, -1, dtype=np.int32)
         padded[: roots.size] = roots

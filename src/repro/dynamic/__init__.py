@@ -1,0 +1,42 @@
+"""Streaming graph mutations with incremental butterfly repair (DESIGN.md §16).
+
+The §15 service's only mutation path was ``swap_graph``: a full rebuild that
+bumps the epoch and cold-starts the entire result cache.  This package makes
+the partitioned CSR cheaply mutable WITHOUT losing the §3 bitmap / §12
+butterfly machinery:
+
+* :mod:`repro.dynamic.delta`      — partition-aligned delta overlay on
+  :class:`repro.graph.csr.Graph` (per-shard insert/delete buffers with the
+  ETL's min-dedup/symmetrize/weight semantics) + compaction into a fresh CSR,
+* :mod:`repro.dynamic.repair`     — incremental BFS/SSSP repair seeded at the
+  endpoints of changed edges (monotone min-relaxation under the §14 monoid;
+  deletions taint affected subtrees and re-relax them), one
+  ``jit(shard_map(while_loop))``,
+* :mod:`repro.dynamic.versioning` — ``(epoch, delta_seq)`` graph versions and
+  the partial-invalidation protocol that lets untouched cached service rows
+  survive a mutation batch.
+"""
+
+from repro.dynamic.delta import (  # noqa: F401
+    AppliedUpdate,
+    DeltaOverlay,
+    EdgeBatch,
+    apply_update_to_partition,
+    read_update_stream,
+    write_update_stream,
+)
+from repro.dynamic.repair import (  # noqa: F401
+    build_repair_fn,
+    build_repair_wave_fn,
+    compiled_repair_fn,
+    compiled_repair_wave_fn,
+    repair_row,
+    repair_rows,
+    repair_seeds,
+)
+from repro.dynamic.versioning import (  # noqa: F401
+    GraphVersion,
+    InvalidationStats,
+    migrate_cache,
+    partitions_equivalent,
+)

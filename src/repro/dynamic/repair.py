@@ -1,0 +1,545 @@
+"""Incremental traversal repair on the butterfly (DESIGN.md §16).
+
+Repairs a PRIOR distance/level vector after a mutation batch instead of
+recomputing from scratch.  The whole repair is ONE compiled
+``jit(shard_map(...))`` program containing two ``lax.while_loop`` waves
+over the §3 bitmap frontiers:
+
+* **Phase A — deletion taint closure.**  A deleted edge ``(u, v)`` can
+  only invalidate ``v``'s distance if it was TIGHT (``d[u] + w == d[v]``).
+  Seeding the taint at every tight-deleted head and propagating along
+  SURVIVING tight edges (``d0[x] + w == d0[y]``) marks a superset of the
+  vertices whose distance may have grown: any vertex outside the closure
+  has, by induction on distance, a tight path that avoids every deleted
+  edge entirely, so its distance is provably unchanged.  Tainted vertices
+  are reset to the UNREACHED sentinel.
+
+* **Phase B — monotone min re-relaxation.**  Inserts can only LOWER
+  distances (weights are uint32 ≥ 1 and duplicate inserts keep the min),
+  so under the §14 MIN-monoid the prior vector is a valid upper bound and
+  the §12 changed-words sparse exchange carries the repair wave
+  unmodified — the frontier is seeded with the insert endpoints that
+  actually improve something plus the untainted boundary of the taint
+  region, and relaxes to the same unique fixpoint a from-scratch run
+  reaches (hence bit-exact across dense/sparse/adaptive sync).
+
+The EMPTY-seed case never launches the device program at all: a batch
+whose edges neither improve nor were tight proves the row unchanged on
+the host — that proof is the fast path of the §16 partial-invalidation
+protocol.  BFS level repair is the ``unit_weight=True`` special case
+(every edge weight 1).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import frontier as fr
+from repro.core.bfs import BFSConfig, _sync_frontier, graph_array_keys, place_arrays
+from repro.graph.partition import PartitionedGraph
+from repro.traversal import sssp as sssp_mod
+from repro.traversal.sssp import SSSPConfig, UNREACHED, dist_rows
+
+INF32 = np.iinfo(np.int32).max
+
+
+def _or_cfg(cfg: SSSPConfig) -> BFSConfig:
+    """The OR-sync (bitmap) twin of a distance-sync config: taint and seed
+    bitmaps merge with the same sync family the distances use."""
+    return BFSConfig(
+        axes=cfg.axes, fanout=cfg.fanout, sync=cfg.sync,
+        sparse_capacity=cfg.sparse_capacity,
+        density_threshold=cfg.density_threshold,
+    )
+
+
+def build_repair_fn(
+    pg: PartitionedGraph,
+    mesh: jax.sharding.Mesh,
+    cfg: SSSPConfig,
+    *,
+    unit_weight: bool = False,
+    with_taint: bool = True,
+):
+    """Compile-ready incremental repair.
+
+    Returns ``run(arrays, dist0, taint_seed, relax_seed)`` where ``arrays``
+    is the placed (POST-update) graph pytree, ``dist0`` the prior
+    replicated ``uint32[dist_rows(pg)]`` distances (:data:`UNREACHED`
+    sentinel), ``taint_seed``/``relax_seed`` replicated
+    ``uint32[dist_rows(pg) // 32]`` seed bitmaps (tight-deleted heads /
+    improving insert endpoints).  Output per device: owned repaired
+    distances ``uint32[P, vmax]``, iterations (taint + relax rounds),
+    and the global touched-vertex count (identical on every rank).
+
+    ``with_taint=False`` compiles the INSERT-ONLY specialization: phase A,
+    the boundary probe, and the pre-relax seed sync all drop out of the
+    program (the relax seed bitmap is host-computed and replicated, so no
+    merge is needed) — the common small-batch case pays only for the
+    monotone relaxation itself.  ``taint_seed`` must then be all-zero.
+
+    ``cfg.delta`` (bucket frontiers) is ignored: repair always runs plain
+    monotone relaxation — the fixpoint, hence the result, is identical.
+    """
+    if not unit_weight and pg.edge_weight is None:
+        raise ValueError(
+            "weighted repair needs a weighted partition; pass "
+            "unit_weight=True for BFS level repair"
+        )
+    n_rows = dist_rows(pg)
+    nw = n_rows // fr.WORD_BITS
+    vmax = pg.vmax
+    capacity = cfg.resolved_capacity(n_rows)
+    max_iters = cfg.max_iters if cfg.max_iters is not None else (1 << 30)
+    spec = P(cfg.axes if len(cfg.axes) > 1 else cfg.axes[0])
+    or_cfg = _or_cfg(cfg)
+    inf = jnp.uint32(UNREACHED)
+
+    def body(arrays, dist0, taint_seed, relax_seed):
+        arrays = jax.tree.map(lambda a: a[0], arrays)
+        v_start = arrays["v_start"]
+        src, dst = arrays["edge_src"], arrays["edge_dst"]
+        emask = jnp.arange(src.shape[0], dtype=jnp.int32) < arrays["edge_count"]
+        if unit_weight:
+            w = jnp.uint32(1)
+        else:
+            w = arrays["edge_weight"].astype(jnp.uint32)
+
+        if with_taint:
+            # -- Phase A: deletion taint closure over surviving tight edges
+            def t_cond(state):
+                taint, front, rounds = state
+                return fr.popcount(front) > 0
+
+            def t_step(state):
+                taint, front, rounds = state
+                du = dist0[src]
+                tight = (
+                    fr.get_bits(front, src) & emask
+                    & (du != inf) & (du + w == dist0[dst])
+                )
+                prop = _sync_frontier(fr.scatter_or(nw, dst, tight), or_cfg)
+                new = prop & ~taint
+                return taint | new, new, rounds + 1
+
+            taint, _, t_rounds = lax.while_loop(
+                t_cond, t_step, (taint_seed, taint_seed, jnp.int32(0))
+            )
+            taint_bits = fr.unpack(taint)
+            dist = jnp.where(taint_bits, inf, dist0)
+
+            # untainted finite boundary: owners of a surviving edge INTO
+            # the taint region re-propose distances across it
+            bnd = fr.scatter_or(
+                nw, src,
+                fr.get_bits(taint, dst) & ~fr.get_bits(taint, src)
+                & emask & (dist[src] != inf),
+            )
+            changed = _sync_frontier(relax_seed | bnd, or_cfg)
+        else:
+            # insert-only: the prior distances stand as valid upper bounds
+            # and the replicated host seeds need no merge
+            t_rounds = jnp.int32(0)
+            taint_bits = jnp.zeros((n_rows,), jnp.bool_)
+            dist = dist0
+            changed = relax_seed
+
+        # -- Phase B: monotone min re-relaxation (the §14 SSSP step) ------
+        def r_cond(state):
+            d, ch, it = state
+            return (fr.popcount(ch) > 0) & (it < max_iters)
+
+        def r_step(state):
+            d, ch, it = state
+            act = fr.get_bits(ch, src) & emask
+            ds = d[src]
+            nd = ds + w  # uint32; nd < ds detects wraparound -> saturate
+            cand = jnp.where(act & (ds != inf) & (nd >= ds), nd, inf)
+            local = d.at[dst].min(cand)
+            synced = sssp_mod._sync_dist(local, d, cfg, capacity)
+            improved = fr.pack(synced < d)
+            return synced, improved, it + 1
+
+        dist, _, r_iters = lax.while_loop(
+            r_cond, r_step, (dist, changed, jnp.int32(0))
+        )
+
+        touched = fr.pack(taint_bits | (dist != dist0))
+        count = fr.popcount(touched)  # replicated-identical on every rank
+        d_owned = lax.dynamic_slice(dist, (v_start,), (vmax,))
+        return d_owned[None], (t_rounds + r_iters)[None], count[None]
+
+    shard_fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=({k: spec for k in graph_array_keys(pg)}, P(), P(), P()),
+        out_specs=(spec, spec, spec),
+        check_vma=False,
+    )
+    return jax.jit(shard_fn)
+
+
+def compiled_repair_fn(
+    pg: PartitionedGraph,
+    mesh: jax.sharding.Mesh,
+    cfg: SSSPConfig,
+    *,
+    unit_weight: bool = False,
+    with_taint: bool = True,
+):
+    """The module-cached repair program for this key (same bounded-LRU
+    program cache the §13/§14 engine programs live in)."""
+    from repro.analytics import engine as eng
+
+    return eng._cached(
+        pg, mesh, (id(pg), id(mesh), "repair", cfg, unit_weight, with_taint),
+        lambda: build_repair_fn(pg, mesh, cfg, unit_weight=unit_weight,
+                                with_taint=with_taint),
+    )
+
+
+LANE_BITS = fr.WORD_BITS
+
+
+def build_repair_wave_fn(
+    pg: PartitionedGraph,
+    mesh: jax.sharding.Mesh,
+    cfg: SSSPConfig,
+    lane_words: int = 1,
+    *,
+    unit_weight: bool = False,
+    with_taint: bool = True,
+):
+    """Lane-packed repair: up to ``32 · lane_words`` prior rows repaired in
+    ONE wave (the §13 result, replayed for repair: the sync round count —
+    and most of the relax cost — is shared across lanes, so repairing a
+    whole cacheful of rows costs one wave, not one per row).
+
+    Returns ``run(arrays, dist0, taint_seed, relax_seed)`` with
+
+    * ``dist0``      — ``uint32[dist_rows(pg), L]`` prior distances, one
+      COLUMN per lane (``L = 32 · lane_words``; pad lanes all-UNREACHED),
+    * ``taint_seed``/``relax_seed`` — lane-packed ``uint32[dist_rows(pg),
+      lane_words]`` seed masks (bit ``b`` of lane-word ``b >> 5`` = lane
+      ``b`` seeded at that vertex row), all replicated.
+
+    Output per device: owned distances ``uint32[P, vmax, L]``, iterations,
+    and per-lane touched-vertex counts ``int32[P, L]`` (replicated-
+    identical).  Pad lanes are inert: no seeds, all-unreached, zero
+    touched.  Phase structure and the ``with_taint`` specialization match
+    :func:`build_repair_fn` exactly — each lane converges to its own
+    from-scratch fixpoint, bit-exact per lane.
+    """
+    if not unit_weight and pg.edge_weight is None:
+        raise ValueError(
+            "weighted repair needs a weighted partition; pass "
+            "unit_weight=True for BFS level repair"
+        )
+    if lane_words < 1:
+        raise ValueError(f"lane_words must be >= 1, got {lane_words}")
+    n_rows = dist_rows(pg)
+    lanes = lane_words * LANE_BITS
+    vmax = pg.vmax
+    capacity = cfg.resolved_capacity(n_rows * lanes)
+    max_iters = cfg.max_iters if cfg.max_iters is not None else (1 << 30)
+    spec = P(cfg.axes if len(cfg.axes) > 1 else cfg.axes[0])
+    inf = jnp.uint32(UNREACHED)
+
+    def body(arrays, dist0, taint_seed, relax_seed):
+        arrays = jax.tree.map(lambda a: a[0], arrays)
+        v_start = arrays["v_start"]
+        src, dst = arrays["edge_src"], arrays["edge_dst"]
+        emask = jnp.arange(src.shape[0], dtype=jnp.int32) < arrays["edge_count"]
+        if unit_weight:
+            w_col = jnp.uint32(1)
+        else:
+            w_col = arrays["edge_weight"].astype(jnp.uint32)[:, None]
+
+        if with_taint:
+            # -- Phase A, per lane: taint closure over tight edges --------
+            def t_cond(state):
+                taint, front, rounds = state
+                return fr.popcount(front) > 0
+
+            def t_step(state):
+                taint, front, rounds = state
+                du = dist0[src]  # [E, L]
+                tight = (
+                    fr.lane_unpack(front[src])
+                    & emask[:, None] & (du != inf)
+                    & (du + w_col == dist0[dst])
+                )
+                prop = fr.scatter_or_lanes(n_rows, dst, fr.lane_pack(tight))
+                prop = _sync_frontier(
+                    prop.reshape(-1), _or_cfg(cfg)
+                ).reshape(n_rows, lane_words)
+                new = prop & ~taint
+                return taint | new, new, rounds + 1
+
+            taint, _, t_rounds = lax.while_loop(
+                t_cond, t_step, (taint_seed, taint_seed, jnp.int32(0))
+            )
+            taint_bits = fr.lane_unpack(taint)  # [n_rows, L]
+            dist = jnp.where(taint_bits, inf, dist0)
+
+            bnd = fr.scatter_or_lanes(
+                n_rows, src,
+                fr.lane_pack(
+                    fr.lane_unpack(taint[dst]) & ~fr.lane_unpack(taint[src])
+                    & emask[:, None] & (dist[src] != inf)
+                ),
+            )
+            changed = _sync_frontier(
+                (relax_seed | bnd).reshape(-1), _or_cfg(cfg)
+            ).reshape(n_rows, lane_words)
+        else:
+            t_rounds = jnp.int32(0)
+            taint_bits = jnp.zeros((n_rows, lanes), jnp.bool_)
+            dist = dist0
+            changed = relax_seed
+
+        # -- Phase B, per lane: monotone min re-relaxation ----------------
+        def r_cond(state):
+            d, ch, it = state
+            return (fr.popcount(ch) > 0) & (it < max_iters)
+
+        def r_step(state):
+            d, ch, it = state
+            act = fr.lane_unpack(ch[src]) & emask[:, None]  # [E, L]
+            ds = d[src]
+            nd = ds + w_col
+            cand = jnp.where(act & (ds != inf) & (nd >= ds), nd, inf)
+            local = d.at[dst].min(cand)
+            synced = sssp_mod._sync_dist(
+                local.reshape(-1), d.reshape(-1), cfg, capacity
+            ).reshape(n_rows, lanes)
+            improved = fr.lane_pack(synced < d)
+            return synced, improved, it + 1
+
+        dist, _, r_iters = lax.while_loop(
+            r_cond, r_step, (dist, changed, jnp.int32(0))
+        )
+
+        touched = taint_bits | (dist != dist0)  # [n_rows, L] bool
+        counts = touched.sum(axis=0, dtype=jnp.int32)  # per lane
+        d_owned = lax.dynamic_slice(dist, (v_start, 0), (vmax, lanes))
+        return d_owned[None], (t_rounds + r_iters)[None], counts[None]
+
+    shard_fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=({k: spec for k in graph_array_keys(pg)}, P(), P(), P()),
+        out_specs=(spec, spec, spec),
+        check_vma=False,
+    )
+    return jax.jit(shard_fn)
+
+
+def compiled_repair_wave_fn(
+    pg: PartitionedGraph,
+    mesh: jax.sharding.Mesh,
+    cfg: SSSPConfig,
+    lane_words: int = 1,
+    *,
+    unit_weight: bool = False,
+    with_taint: bool = True,
+):
+    from repro.analytics import engine as eng
+
+    return eng._cached(
+        pg, mesh,
+        (id(pg), id(mesh), "repair_wave", cfg, lane_words, unit_weight,
+         with_taint),
+        lambda: build_repair_wave_fn(
+            pg, mesh, cfg, lane_words, unit_weight=unit_weight,
+            with_taint=with_taint,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side seeding + end-to-end row repair
+# ---------------------------------------------------------------------------
+
+
+def repair_seeds(
+    row: np.ndarray, update, *, unit_weight: bool
+) -> Tuple[np.ndarray, np.ndarray]:
+    """``(relax_seed_ids, taint_seed_ids)`` for repairing ``row`` (global
+    ``int64[n]`` distances, any sentinel ≥ INT32_MAX) after ``update``.
+
+    BOTH empty proves the row unchanged: no inserted edge improves either
+    endpoint and no deleted edge was tight — the zero-cost survival check
+    of the partial-invalidation protocol (§16).  Finite distances are
+    assumed < 2^31 (they are bounded by ``n · max_weight`` everywhere in
+    this repo)."""
+    d = np.asarray(row, dtype=np.int64)
+
+    def _w(ws, size):
+        if unit_weight or ws is None:
+            return np.ones(size, dtype=np.int64)
+        return ws.astype(np.int64)
+
+    du = d[update.ins_src]
+    dv = d[update.ins_dst]
+    improving = (du < INF32) & (
+        du + _w(update.ins_w, update.ins_src.size) < dv
+    )
+    relax_ids = update.ins_src[improving]
+
+    du = d[update.del_src]
+    dv = d[update.del_dst]
+    tight = (du < INF32) & (
+        du + _w(update.del_w, update.del_src.size) == dv
+    )
+    taint_ids = update.del_dst[tight]
+    return relax_ids, taint_ids
+
+
+def seed_words(ids: np.ndarray, nw: int) -> np.ndarray:
+    """Vertex ids -> packed ``uint32[nw]`` seed bitmap."""
+    words = np.zeros(nw, dtype=np.uint32)
+    ids = np.asarray(ids, dtype=np.int64)
+    np.bitwise_or.at(
+        words, ids >> 5, (np.uint32(1) << (ids & 31).astype(np.uint32))
+    )
+    return words
+
+
+def encode_distances(row: np.ndarray, n_rows: int) -> np.ndarray:
+    """Global ``int64[n]`` distances (sentinel ≥ INT32_MAX) -> the repair
+    buffer ``uint32[n_rows]`` (:data:`UNREACHED` sentinel, slack rows
+    unreached)."""
+    buf = np.full(n_rows, UNREACHED, dtype=np.uint32)
+    row = np.asarray(row, dtype=np.int64)
+    buf[: row.size] = np.where(row >= INF32, UNREACHED, row).astype(np.uint32)
+    return buf
+
+
+def repair_row(
+    pg: PartitionedGraph,
+    mesh: jax.sharding.Mesh,
+    row: np.ndarray,
+    update,
+    cfg: SSSPConfig,
+    *,
+    unit_weight: bool = False,
+    arrays: Optional[dict] = None,
+    bfs_sentinel: Optional[bool] = None,
+) -> Tuple[np.ndarray, int, int]:
+    """Repair one cached distance row after ``update`` has been applied to
+    ``pg``'s partition arrays.  Returns ``(new_row, touched, iters)`` —
+    ``touched == 0`` means the row is proven unchanged (``new_row is
+    row``); a seed-free proof costs NO device work.
+
+    ``bfs_sentinel`` controls the unreached sentinel of the returned row
+    (INT32_MAX for BFS levels, :data:`UNREACHED` for SSSP); defaults to
+    ``unit_weight``."""
+    relax_ids, taint_ids = repair_seeds(row, update, unit_weight=unit_weight)
+    if relax_ids.size == 0 and taint_ids.size == 0:
+        return row, 0, 0
+    if arrays is None:
+        arrays = place_arrays(pg, mesh, cfg.axes)
+    n_rows = dist_rows(pg)
+    nw = n_rows // fr.WORD_BITS
+    fn = compiled_repair_fn(
+        pg, mesh, cfg, unit_weight=unit_weight,
+        with_taint=taint_ids.size > 0,
+    )
+    d_owned, iters, count = fn(
+        arrays,
+        jnp.asarray(encode_distances(row, n_rows)),
+        jnp.asarray(seed_words(taint_ids, nw)),
+        jnp.asarray(seed_words(relax_ids, nw)),
+    )
+    new_row = sssp_mod.assemble_distances(pg, d_owned)
+    if unit_weight if bfs_sentinel is None else bfs_sentinel:
+        new_row = np.where(new_row >= UNREACHED, INF32, new_row)
+    return new_row, int(np.asarray(count)[0]), int(np.max(iters))
+
+
+def repair_rows(
+    pg: PartitionedGraph,
+    mesh: jax.sharding.Mesh,
+    rows,
+    update,
+    cfg: SSSPConfig,
+    *,
+    unit_weight: bool = False,
+    arrays: Optional[dict] = None,
+    bfs_sentinel: Optional[bool] = None,
+    max_repairs: Optional[int] = None,
+):
+    """Repair MANY prior rows against one update batch, lane-packed: rows
+    proven unchanged on the host cost nothing; the suspects share one
+    §16 repair wave per 32 lanes (a lone suspect takes the cheaper
+    single-row program).  Returns ``[(new_row, touched, iters), ...]`` in
+    input order — ``touched == 0`` means ``new_row is rows[i]``; suspects
+    beyond ``max_repairs`` (the device-repair budget) return ``None``."""
+    results = [None] * len(rows)
+    suspects = []
+    seeds = []
+    for i, row in enumerate(rows):
+        relax_ids, taint_ids = repair_seeds(
+            row, update, unit_weight=unit_weight
+        )
+        if relax_ids.size == 0 and taint_ids.size == 0:
+            results[i] = (row, 0, 0)
+        elif max_repairs is None or len(suspects) < max_repairs:
+            suspects.append(i)
+            seeds.append((relax_ids, taint_ids))
+    if not suspects:
+        return results
+    if len(suspects) == 1:
+        i = suspects[0]
+        results[i] = repair_row(
+            pg, mesh, rows[i], update, cfg, unit_weight=unit_weight,
+            arrays=arrays, bfs_sentinel=bfs_sentinel,
+        )
+        return results
+    if arrays is None:
+        arrays = place_arrays(pg, mesh, cfg.axes)
+    n_rows = dist_rows(pg)
+    use_bfs_sentinel = unit_weight if bfs_sentinel is None else bfs_sentinel
+    for lo in range(0, len(suspects), LANE_BITS):
+        chunk = suspects[lo : lo + LANE_BITS]
+        lane_words = (len(chunk) + LANE_BITS - 1) // LANE_BITS
+        lanes = lane_words * LANE_BITS
+        dist0 = np.full((n_rows, lanes), UNREACHED, dtype=np.uint32)
+        relax_w = np.zeros((n_rows, lane_words), dtype=np.uint32)
+        taint_w = np.zeros((n_rows, lane_words), dtype=np.uint32)
+        with_taint = False
+        for b, i in enumerate(chunk):
+            dist0[:, b] = encode_distances(rows[i], n_rows)
+            relax_ids, taint_ids = seeds[lo + b]
+            mask = np.uint32(1) << np.uint32(b & 31)
+            relax_w[relax_ids, b >> 5] |= mask
+            if taint_ids.size:
+                taint_w[taint_ids, b >> 5] |= mask
+                with_taint = True
+        fn = compiled_repair_wave_fn(
+            pg, mesh, cfg, lane_words, unit_weight=unit_weight,
+            with_taint=with_taint,
+        )
+        d_owned, iters, counts = fn(
+            arrays, jnp.asarray(dist0), jnp.asarray(taint_w),
+            jnp.asarray(relax_w),
+        )
+        from repro.analytics import msbfs
+
+        dist = msbfs.assemble_distances(pg, d_owned, lanes)
+        counts = np.asarray(counts)[0]
+        it = int(np.max(iters))
+        for b, i in enumerate(chunk):
+            new_row = dist[b]
+            if use_bfs_sentinel:
+                new_row = np.where(new_row >= UNREACHED, INF32, new_row)
+            touched = int(counts[b])
+            results[i] = (rows[i] if touched == 0 else new_row, touched, it)
+    return results

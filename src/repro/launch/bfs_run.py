@@ -88,6 +88,10 @@ def main(argv=None) -> int:
                          ">1 packs the root queries into bit-parallel "
                          "multi-source waves (analytics.msbfs)")
     ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--updates", default=None, metavar="FILE",
+                    help="replay a recorded JSONL edge-update stream "
+                         "(serve_graph --record-updates) through the §16 "
+                         "delta overlay + partition patch before measuring")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump EngineStats + run identity as JSON")
@@ -121,6 +125,32 @@ def main(argv=None) -> int:
     print(f"graph: n={g.n:,} m={g.n_edges:,} (directed, symmetrized"
           f"{', weighted' if g.weighted else ''})")
     pg = partition.partition_1d(g, args.devices)
+    if args.updates:
+        from repro.dynamic import delta as delta_mod
+
+        overlay = delta_mod.DeltaOverlay(g)
+        n_ins = n_del = n_comp = 0
+        for batch in delta_mod.read_update_stream(args.updates):
+            if g.weighted and batch.insert_weights is None:
+                # replaying an unweighted stream onto a weighted graph:
+                # unit weights keep the stream applicable
+                batch = delta_mod.EdgeBatch(
+                    insert_src=batch.insert_src,
+                    insert_dst=batch.insert_dst,
+                    insert_weights=np.ones(batch.insert_src.size, np.uint32),
+                    delete_src=batch.delete_src,
+                    delete_dst=batch.delete_dst,
+                )
+            update = overlay.apply(batch)
+            n_ins += update.ins_src.size
+            n_del += update.del_src.size
+            if (not delta_mod.apply_update_to_partition(pg, update)
+                    or overlay.needs_compaction()):
+                pg = partition.partition_1d(overlay.compact(), args.devices)
+                n_comp += 1
+        g = overlay.current_graph()
+        print(f"replayed updates: {n_ins} directed inserts, {n_del} "
+              f"deletes, {n_comp} compactions -> m={g.n_edges:,}")
     mesh = jax.make_mesh((args.devices,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
     cfg = bfs.BFSConfig(

@@ -12,6 +12,16 @@ using the ``bfs_run`` stats schema extended with a ``telemetry`` block.
 
 ``--swap-after N`` swaps in a fresh graph (new seed) after ``N`` requests
 to exercise the epoch-bump invalidation path under live traffic.
+
+``--mutate-rate R`` injects ``R`` random edge-mutation batches per second
+into the open-loop driver (``--mutate-edges`` inserts and
+``--mutate-delete-frac`` of that many deletions each) through
+``GraphQueryService.apply_updates`` — the §16 streaming path: the
+partition is patched in place, cached rows are proven-unchanged /
+repaired / dropped per batch, and the report adds the
+partial-invalidation hit-rate (surviving-row fraction) next to the
+existing telemetry.  ``--record-updates PATH`` persists the injected
+batches as a JSONL stream replayable by ``bfs_run --updates``.
 """
 
 from __future__ import annotations
@@ -51,6 +61,17 @@ def main(argv=None) -> int:
     ap.add_argument("--swap-after", type=int, default=0,
                     help="swap in a reseeded graph after N requests "
                          "(exercises epoch invalidation); 0 = never")
+    ap.add_argument("--mutate-rate", type=float, default=0.0,
+                    help="edge-mutation batches per second injected into "
+                         "the load (0 = static graph)")
+    ap.add_argument("--mutate-edges", type=int, default=16,
+                    help="undirected edge inserts per mutation batch")
+    ap.add_argument("--mutate-delete-frac", type=float, default=0.25,
+                    help="deletions per batch as a fraction of "
+                         "--mutate-edges")
+    ap.add_argument("--record-updates", default=None, metavar="PATH",
+                    help="persist injected mutation batches as a JSONL "
+                         "stream (replay with `bfs_run --updates PATH`)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump telemetry + engine stats as JSON")
@@ -97,6 +118,8 @@ def main(argv=None) -> int:
     n = max(int(args.qps * args.duration), 1)
     futs = []
     rejected = 0
+    batches = []  # injected mutation batches (for --record-updates)
+    n_mut = 0
     t0 = time.perf_counter()
     for i in range(n):
         target = t0 + i / args.qps
@@ -107,6 +130,16 @@ def main(argv=None) -> int:
             g, pg = build(args.seed + 1)
             epoch = svc.swap_graph(pg, n_real=g.n_real)
             print(f"  [swapped graph at request {i} -> epoch {epoch}]")
+        if args.mutate_rate > 0:
+            due = int((time.perf_counter() - t0) * args.mutate_rate)
+            while n_mut < due:
+                batch = svc.overlay.sample_batch(
+                    rng, args.mutate_edges,
+                    int(args.mutate_edges * args.mutate_delete_frac),
+                )
+                batches.append(batch)
+                svc.apply_updates(batch)
+                n_mut += 1
         root = (hot if rng.random() < args.hot_fraction
                 else int(rng.integers(0, g.n_real)))
         try:
@@ -132,6 +165,21 @@ def main(argv=None) -> int:
         f"cache hit-rate {snap['cache']['hit_rate']:.2f} "
         f"(host-simulated devices)"
     )
+    if n_mut:
+        mut = snap["mutations"]
+        print(
+            f"mutations: {mut['batches']} batches "
+            f"({mut['compactions']} compactions)  cached rows "
+            f"{mut['rows_kept']} kept / {mut['rows_repaired']} repaired / "
+            f"{mut['rows_dropped']} dropped  partial-invalidation "
+            f"hit-rate {mut['survival_rate']:.2f}"
+        )
+    if args.record_updates and batches:
+        from repro.dynamic import delta
+
+        delta.write_update_stream(args.record_updates, batches)
+        print(f"update stream ({len(batches)} batches) -> "
+              f"{args.record_updates}")
     if args.stats_json:
         from repro.launch.bfs_run import write_stats_json
 

@@ -21,9 +21,13 @@ Layers (one module each):
 * :mod:`repro.service.telemetry` — p50/p95/p99, QPS, occupancy, hit rate.
 
 Epoch contract: every result is computed, cached, and delivered under the
-graph epoch current AT DISPATCH; :meth:`GraphQueryService.swap_graph` bumps
-the epoch atomically with the engine swap, so a reloaded graph can never
-serve levels computed under its predecessor.
+:class:`~repro.dynamic.versioning.GraphVersion` current AT DISPATCH;
+:meth:`GraphQueryService.swap_graph` bumps the epoch atomically with the
+engine swap, so a reloaded graph can never serve levels computed under
+its predecessor.  :meth:`GraphQueryService.apply_updates` (DESIGN.md §16)
+is the surgical mutation path: an in-place edge-delta bumps only
+``delta_seq`` and cached rows are proven-unchanged/repaired instead of
+cold-started; an identity swap is free.
 """
 
 from __future__ import annotations
@@ -37,6 +41,11 @@ import numpy as np
 from repro.analytics import measures
 from repro.analytics.engine import BFSQueryEngine
 from repro.core.bfs import BFSConfig
+from repro.dynamic import delta as delta_mod
+from repro.dynamic import repair as repair_mod
+from repro.dynamic import versioning
+from repro.dynamic.versioning import GraphVersion, InvalidationStats  # noqa: F401
+from repro.graph import partition as partition_mod
 from repro.service.cache import ResultCache, result_key
 from repro.service.queue import (  # noqa: F401  (public API re-exports)
     ALGOS,
@@ -81,6 +90,8 @@ class GraphQueryService:
         default_deadline_s: Optional[float] = None,
         coalesce: bool = True,
         start: bool = True,
+        compact_ratio: float = 0.25,
+        repair_budget: Optional[int] = None,
     ):
         self.mesh = mesh
         self.cfg = cfg
@@ -88,12 +99,17 @@ class GraphQueryService:
         self.n_real = int(n_real) if n_real is not None else pg.n
         self.default_deadline_s = default_deadline_s
         self.swap_lock = threading.RLock()
-        # (epoch, engine) swapped as ONE tuple so readers always see a
+        # (version, engine) swapped as ONE tuple so readers always see a
         # consistent pair without taking the swap lock
-        self._state: Tuple[int, BFSQueryEngine] = (
-            0, BFSQueryEngine(pg, mesh, cfg, lanes=lanes)
+        self._state: Tuple[GraphVersion, BFSQueryEngine] = (
+            GraphVersion(), BFSQueryEngine(pg, mesh, cfg, lanes=lanes)
         )
         self._sssp_cfg = sssp_cfg
+        # streaming mutations (DESIGN.md §16): overlay built lazily from
+        # the served partition on first apply_updates
+        self.compact_ratio = compact_ratio
+        self.repair_budget = repair_budget
+        self._overlay: Optional[delta_mod.DeltaOverlay] = None
         self.queue = SubmissionQueue(max_pending)
         self.cache = ResultCache(cache_capacity)
         self.telemetry = Telemetry()
@@ -107,11 +123,11 @@ class GraphQueryService:
     # --- state ------------------------------------------------------------
 
     @property
-    def state(self) -> Tuple[int, BFSQueryEngine]:
+    def state(self) -> Tuple[GraphVersion, BFSQueryEngine]:
         return self._state
 
     @property
-    def epoch(self) -> int:
+    def epoch(self) -> GraphVersion:
         return self._state[0]
 
     @property
@@ -226,35 +242,164 @@ class GraphQueryService:
         lanes: Optional[int] = None,
         n_real: Optional[int] = None,
         sssp_cfg: Optional[SSSPConfig] = None,
-    ) -> int:
+    ) -> GraphVersion:
         """Replace the served graph; bumps the epoch atomically with the
-        engine swap (waits for any in-flight wave).  Returns the new epoch.
-        Pending requests are served under the NEW epoch — a request never
-        observes the graph it was submitted against after a swap, only the
-        current one (the no-stale-results contract)."""
-        with self.swap_lock:
-            mesh = mesh if mesh is not None else self.mesh
-            cfg = cfg if cfg is not None else self.cfg
-            lanes = lanes if lanes is not None else self.lanes
-            engine = BFSQueryEngine(pg, mesh, cfg, lanes=lanes)
-            epoch = self._state[0] + 1
-            self._state = (epoch, engine)
-            self.mesh, self.cfg, self.lanes = mesh, cfg, lanes
-            self.n_real = int(n_real) if n_real is not None else pg.n
-            self._sssp_cfg = sssp_cfg
-            self.cache.drop_stale(epoch)
-            self.telemetry.record_epoch_bump()
-            return epoch
+        engine swap (waits for any in-flight wave).  Returns the new
+        :class:`GraphVersion`.  Pending requests are served under the NEW
+        version — a request never observes the graph it was submitted
+        against after a swap, only the current one (the no-stale-results
+        contract).
 
-    def bump_epoch(self) -> int:
-        """Invalidate every cached result without swapping the engine (the
-        hook for in-place graph mutation).  Returns the new epoch."""
+        **Identity swaps are free** (§16): when the incoming partition is
+        structurally equivalent to the served one and no serving knob
+        changes, the current engine, version, and cache are kept — a
+        reload that turned out to be a no-op must not cold-start anything.
+        """
         with self.swap_lock:
-            epoch = self._state[0] + 1
-            self._state = (epoch, self._state[1])
-            self.cache.drop_stale(epoch)
+            knobs_unchanged = (
+                (mesh is None or mesh is self.mesh)
+                and (cfg is None or cfg == self.cfg)
+                and (lanes is None or lanes == self.lanes)
+                and (n_real is None or int(n_real) == self.n_real)
+                and sssp_cfg is None
+            )
+            if knobs_unchanged and versioning.partitions_equivalent(
+                self.engine.pg, pg
+            ):
+                return self._state[0]
+            return self._swap_locked(
+                pg, mesh=mesh, cfg=cfg, lanes=lanes, n_real=n_real,
+                sssp_cfg=sssp_cfg,
+            )
+
+    def _swap_locked(
+        self, pg, *, mesh=None, cfg=None, lanes=None, n_real=None,
+        sssp_cfg=None,
+    ) -> GraphVersion:
+        """The unconditional swap path (caller holds ``swap_lock``)."""
+        mesh = mesh if mesh is not None else self.mesh
+        cfg = cfg if cfg is not None else self.cfg
+        lanes = lanes if lanes is not None else self.lanes
+        engine = BFSQueryEngine(pg, mesh, cfg, lanes=lanes)
+        version = self._state[0].bump_epoch()
+        self._state = (version, engine)
+        self.mesh, self.cfg, self.lanes = mesh, cfg, lanes
+        self.n_real = int(n_real) if n_real is not None else pg.n
+        self._sssp_cfg = sssp_cfg
+        self._overlay = None  # rebuilt from the new partition on demand
+        self.cache.drop_stale(version)
+        self.telemetry.record_epoch_bump()
+        return version
+
+    def bump_epoch(self) -> GraphVersion:
+        """Invalidate every cached result without swapping the engine (the
+        blunt hook for out-of-band in-place mutation; ``apply_updates`` is
+        the surgical one).  Returns the new version."""
+        with self.swap_lock:
+            version = self._state[0].bump_epoch()
+            self._state = (version, self._state[1])
+            self._overlay = None
+            self.cache.drop_stale(version)
             self.telemetry.record_epoch_bump()
-            return epoch
+            return version
+
+    # --- streaming mutations (DESIGN.md §16) ------------------------------
+
+    @property
+    def overlay(self) -> delta_mod.DeltaOverlay:
+        """The host-authoritative streaming edge set over the served
+        partition (built on first touch)."""
+        with self.swap_lock:
+            if self._overlay is None:
+                g = delta_mod.graph_from_partition(
+                    self.engine.pg, n_real=self.n_real
+                )
+                self._overlay = delta_mod.DeltaOverlay(
+                    g, compact_ratio=self.compact_ratio
+                )
+            return self._overlay
+
+    def apply_updates(self, batch: delta_mod.EdgeBatch) -> GraphVersion:
+        """Fold one mutation batch into the SERVED graph in place and
+        carry the result cache across it (§16).
+
+        The delta lands in the partition's static slack (compiled programs
+        are reused — same shapes, same partition identity), the version
+        bumps ``delta_seq``, and every cached ``bfs``/``sssp`` row is
+        either proven unchanged (empty repair seeds), repaired to its new
+        exact value on the device, or dropped — only full swaps
+        (slack overflow / compaction threshold) still cold-start the
+        cache, under a fresh epoch.  Returns the new version."""
+        with self.swap_lock:
+            old_version, engine = self._state
+            overlay = self.overlay
+            update = overlay.apply(batch)
+            if update.empty:
+                # a no-op batch (dedup'd away) must not invalidate anything
+                self.telemetry.record_mutation(InvalidationStats())
+                return old_version
+            applied = delta_mod.apply_update_to_partition(engine.pg, update)
+            if not applied or overlay.needs_compaction():
+                # slack exhausted or overlay too thick: compact into a
+                # fresh CSR and take the full-swap path (epoch bump),
+                # dropping every cached row (honest survival accounting)
+                g = overlay.compact()
+                pg = partition_mod.partition_1d(g, engine.pg.p)
+                self.telemetry.record_compaction()
+                self.telemetry.record_mutation(InvalidationStats(
+                    rows_before=len(self.cache), dropped=len(self.cache),
+                ))
+                version = self._swap_locked(
+                    pg, n_real=self.n_real, sssp_cfg=self._sssp_cfg
+                )
+                self._overlay = overlay  # already rebased on the fresh CSR
+                return version
+            engine.refresh_arrays()
+            version = old_version.bump_delta()
+            self._state = (version, engine)
+            stats = versioning.migrate_cache(
+                self.cache, old_version, version,
+                repairers=self._repairers(update, engine),
+                derive_closeness=self._closeness,
+            )
+            self.cache.drop_stale(version)
+            self.telemetry.record_mutation(stats)
+            return version
+
+    def _repairers(self, update, engine):
+        """Per-algo BATCH repairers for :func:`versioning.migrate_cache`,
+        sharing one device-repair budget (``None`` = unlimited).  Suspect
+        rows within the budget share lane-packed §16 repair waves; rows
+        past it drop."""
+        budget = [self.repair_budget]
+
+        def make(cfg, unit_weight):
+            def repairer(rows):
+                outcomes = repair_mod.repair_rows(
+                    engine.pg, self.mesh, rows, update, cfg,
+                    unit_weight=unit_weight, arrays=engine._arrays,
+                    max_repairs=budget[0],
+                )
+                if budget[0] is not None:
+                    # device-repaired suspects (iters > 0) consume budget;
+                    # host-proven rows (iters == 0) are free
+                    budget[0] -= sum(
+                        1 for o in outcomes if o is not None and o[2] > 0
+                    )
+                return outcomes
+            return repairer
+
+        reps = {}
+        try:
+            reps["bfs"] = make(engine._sssp_cfg(None), True)
+        except ValueError:
+            pass  # sync has no min-monoid analogue: bfs rows drop
+        if engine.pg.weighted:
+            try:
+                reps["sssp"] = make(self.sssp_cfg, False)
+            except ValueError:
+                pass  # same: sssp rows drop rather than failing the batch
+        return reps
 
     # --- lifecycle --------------------------------------------------------
 
@@ -293,7 +438,7 @@ class GraphQueryService:
         return self.telemetry.snapshot(
             cache=self.cache.snapshot(),
             pending=len(self.queue),
-            epoch=self.epoch,
+            epoch=str(self.epoch),  # "epoch.delta_seq" (§16 versioning)
             lanes=self.engine.lanes,
             coalesce=self.scheduler.coalesce,
             engine={"waves": self.engine.stats.waves,

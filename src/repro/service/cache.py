@@ -24,10 +24,16 @@ _MISS = object()
 
 
 def result_key(
-    epoch: int, algo: str, cfg: Hashable, root: int
-) -> Tuple[int, str, Hashable, int]:
-    """The canonical cache key: ``(graph_epoch, algo, cfg, root)``."""
-    return (int(epoch), algo, cfg, int(root))
+    epoch, algo: str, cfg: Hashable, root: int
+) -> Tuple[Hashable, str, Hashable, int]:
+    """The canonical cache key: ``(graph_epoch, algo, cfg, root)``.
+    ``epoch`` is any hashable, ordered version marker — a plain int (the
+    §15 epoch) or a :class:`repro.dynamic.versioning.GraphVersion`."""
+    try:
+        epoch = int(epoch)  # normalize int-like (np integers included)
+    except TypeError:
+        pass  # GraphVersion and friends key as themselves
+    return (epoch, algo, cfg, int(root))
 
 
 class ResultCache:
@@ -63,6 +69,13 @@ class ResultCache:
         """Membership probe that touches no counters and no LRU order."""
         with self._lock:
             return key in self._data
+
+    def items_snapshot(self):
+        """Point-in-time ``[(key, value), ...]`` copy (LRU order, coldest
+        first) — the §16 partial-invalidation walk reads this without
+        holding the lock across repairs."""
+        with self._lock:
+            return list(self._data.items())
 
     def put(self, key: Tuple, value: Any) -> None:
         if not self.enabled:

@@ -57,6 +57,12 @@ class Telemetry:
         self.lanes_offered = 0  # lanes the dispatched waves provided
         self.coalesced_roots = 0  # duplicate roots folded into one lane
         self.epoch_bumps = 0
+        # streaming-mutation accounting (DESIGN.md §16)
+        self.mutations = 0  # apply_updates batches folded in place
+        self.compactions = 0  # overlay merges that forced a full swap
+        self.rows_kept = 0  # cached rows proven unchanged across a batch
+        self.rows_repaired = 0  # cached rows repaired to their new value
+        self.rows_dropped = 0  # cached rows cold-started by a batch
 
     # --- submission path --------------------------------------------------
 
@@ -100,6 +106,19 @@ class Telemetry:
         with self._lock:
             self.epoch_bumps += 1
 
+    def record_mutation(self, stats) -> None:
+        """Fold one :class:`~repro.dynamic.versioning.InvalidationStats`
+        (an ``apply_updates`` batch) into the counters."""
+        with self._lock:
+            self.mutations += 1
+            self.rows_kept += stats.kept
+            self.rows_repaired += stats.repaired
+            self.rows_dropped += stats.dropped
+
+    def record_compaction(self) -> None:
+        with self._lock:
+            self.compactions += 1
+
     # --- reporting --------------------------------------------------------
 
     def snapshot(self, **extra: Any) -> Dict[str, Any]:
@@ -108,6 +127,7 @@ class Telemetry:
         with self._lock:
             elapsed = max(self._clock() - self._t0, 1e-9)
             lat_ms = [v * 1e3 for v in self._latencies]
+            rows_total = self.rows_kept + self.rows_repaired + self.rows_dropped
             snap: Dict[str, Any] = {
                 "uptime_s": elapsed,
                 "submitted": self.submitted,
@@ -130,6 +150,19 @@ class Telemetry:
                 ),
                 "coalesced_roots": self.coalesced_roots,
                 "epoch_bumps": self.epoch_bumps,
+                "mutations": {
+                    "batches": self.mutations,
+                    "compactions": self.compactions,
+                    "rows_kept": self.rows_kept,
+                    "rows_repaired": self.rows_repaired,
+                    "rows_dropped": self.rows_dropped,
+                    # the §16 partial-invalidation hit-rate: cached rows
+                    # that stayed servable across mutation batches
+                    "survival_rate": (
+                        (self.rows_kept + self.rows_repaired) / rows_total
+                        if rows_total else 1.0
+                    ),
+                },
             }
         snap.update(extra)
         return snap

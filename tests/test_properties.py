@@ -251,3 +251,80 @@ def test_engine_query_dedup_property(roots):
     assert np.array_equal(doubled, np.concatenate([base, base]))
     n_uniq = len(set(roots))
     assert waves == -(-n_uniq // eng.lanes)  # ceil(distinct / lanes)
+
+
+# --- streaming delta overlay (DESIGN.md §16) --------------------------------
+
+
+def _overlay_oracle(g, batches):
+    """Pure-python oracle of the §16 overlay semantics: symmetrize, drop
+    self-loops, min-weight on duplicate insert, delete both directions."""
+    edges = {}
+    for i, (u, v) in enumerate(zip(g.src.tolist(), g.dst.tolist())):
+        edges[(u, v)] = int(g.weights[i]) if g.weighted else None
+    for b in batches:
+        ws = (b.insert_weights.tolist() if b.insert_weights is not None
+              else [None] * b.insert_src.size)
+        for u, v, w in zip(b.insert_src.tolist(), b.insert_dst.tolist(), ws):
+            if u == v:
+                continue
+            for e in ((u, v), (v, u)):
+                if e in edges and edges[e] is not None:
+                    edges[e] = min(edges[e], w)
+                elif e not in edges:
+                    edges[e] = w
+        for u, v in zip(b.delete_src.tolist(), b.delete_dst.tolist()):
+            edges.pop((u, v), None)
+            edges.pop((v, u), None)
+    return edges
+
+
+@given(
+    n=st.integers(4, 80),
+    m=st.integers(0, 200),
+    weighted=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+    n_batches=st.integers(1, 4),
+    compact_at=st.integers(0, 4),
+)
+@settings(max_examples=25, deadline=None)
+def test_delta_overlay_stream_property(n, m, weighted, seed, n_batches,
+                                       compact_at):
+    """ISSUE-5 satellite: ANY random stream of insert/delete batches
+    applied through ``dynamic.delta`` (with a compaction anywhere in the
+    stream) yields a Graph identical — structure and min-dedup'd weights —
+    to a from-scratch build of the final edge list."""
+    from repro.dynamic import delta
+
+    rng = np.random.default_rng(seed)
+    g = csr.from_edges(
+        rng.integers(0, n, size=m), rng.integers(0, n, size=m), n,
+        weights=rng.integers(1, 16, size=m) if weighted else None,
+    )
+    ov = delta.DeltaOverlay(g)
+    batches = []
+    for i in range(n_batches):
+        k_ins, k_del = int(rng.integers(0, 12)), int(rng.integers(0, 8))
+        b = ov.sample_batch(rng, k_ins, k_del,
+                            max_weight=16 if weighted else 0)
+        batches.append(b)
+        ov.apply(b)
+        if i == compact_at:
+            ov.compact()  # mid-stream compaction must not change anything
+    got = ov.current_graph()
+    got.validate()
+    edges = _overlay_oracle(g, batches)
+    keys = sorted(edges)
+    np.testing.assert_array_equal(
+        got.src, np.array([k[0] for k in keys], dtype=np.int32)
+    )
+    np.testing.assert_array_equal(
+        got.dst, np.array([k[1] for k in keys], dtype=np.int32)
+    )
+    if weighted:
+        np.testing.assert_array_equal(
+            got.weights,
+            np.array([edges[k] for k in keys], dtype=np.uint32),
+        )
+    else:
+        assert got.weights is None

@@ -23,6 +23,7 @@ from repro.service import (
     AdmissionError,
     DeadlineExceeded,
     GraphQueryService,
+    GraphVersion,
     ServiceStopped,
 )
 from repro.service.cache import ResultCache, result_key
@@ -166,7 +167,7 @@ def test_epoch_bump_after_graph_swap_misses_and_serves_new_graph(mesh8):
         assert len(svc.cache) > 0
 
         epoch = svc.swap_graph(pg2, n_real=g2.n_real)
-        assert epoch == 1
+        assert epoch == GraphVersion(1, 0)
         assert len(svc.cache) == 0  # stale entries freed eagerly
 
         waves = svc.engine.stats.waves
