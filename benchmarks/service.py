@@ -213,12 +213,233 @@ def run(scale: int = 13, lanes: int = 32, ps=(1, 8),
     return rep
 
 
+# --- replicated serving tier (DESIGN.md §17) --------------------------------
+
+
+def _open_loop_router(router, roots, offered_qps, duration_s, *,
+                      mutate_every=0, batch_fn=None, timeout_s=600.0):
+    """Open loop against a :class:`ReplicaRouter`: paced arrivals with a
+    read-your-writes ``min_seq`` that advances with each injected mutation
+    batch (the mutation storm).  Counts failed futures explicitly — the
+    §17 chaos bar is ZERO."""
+    from repro.service import AdmissionError
+
+    n = max(int(offered_qps * duration_s), 1)
+    lats, futs, rejected = [], [], 0
+    min_seq = router.latest_seq
+    t0 = time.perf_counter()
+    for i in range(n):
+        target = t0 + i / offered_qps
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        if mutate_every and i and i % mutate_every == 0:
+            min_seq = router.apply_updates(batch_fn())
+        s = time.perf_counter()
+        try:
+            f = router.submit("bfs", int(roots[i % len(roots)]),
+                              min_seq=min_seq)
+        except AdmissionError:
+            rejected += 1
+            continue
+        f.add_done_callback(
+            lambda fut, s=s: lats.append(time.perf_counter() - s)
+        )
+        futs.append(f)
+    futures_wait(futs, timeout=timeout_s)
+    elapsed = time.perf_counter() - t0
+    failed = sum(1 for f in futs
+                 if not f.done() or f.exception() is not None)
+    ok = len(futs) - failed
+    stale = sum(1 for f in futs
+                if f.done() and f.exception() is None and f.result().stale)
+    return {
+        "offered_qps": offered_qps,
+        "achieved_qps": ok / elapsed,
+        "requests": n,
+        "rejected": rejected,
+        "failed": failed,
+        "stale": stale,
+        **_percentiles_ms(lats),
+    }
+
+
+def run_replicated(scale: int = 13, lanes: int = 32, p: int = 8,
+                   max_replicas: int = 4, chaos: str = "kill-one",
+                   smoke: bool = False, linger_s: float = 0.01,
+                   seed: int = 0) -> Report:
+    """Aggregate QPS vs replica count + chaos tail latency (§17).
+
+    Phase 1: closed-loop aggregate QPS at N=1,2,4 replicas behind one
+    router.  Each replica gets a DISJOINT device slice when the host has
+    ``n * p`` devices (waves overlap freely — the production shape);
+    otherwise all replicas share the full set and the devlock serializes
+    their waves.  ``host_cpus`` and ``shared_devices`` ride along in
+    every row: on a 1-core or shared-device host the replicas time-slice
+    the same resources and the scaling bar is not meaningful, so the
+    tier-2 assertion gates on both.
+    Phase 2 (``chaos``): open loop + mutation storm at N=2, once without
+    faults and once with a replica killed mid-run — failed futures and
+    p99 inflation are the §17 acceptance numbers.
+    """
+    from repro.core import bfs
+    from repro.service import FaultInjector, Replica, ReplicaRouter
+
+    from repro.graph import generators
+
+    if smoke:
+        scale = 10
+        max_replicas = min(max_replicas, 2)
+        lanes = min(lanes, 8)  # compile cost dominates CI smoke wall-clock
+    counts = [n for n in (1, 2, 4) if n <= max_replicas] or [1]
+    g = generators.kronecker(scale, 8, seed=0)
+    mesh = _mesh(p)
+    cfg = bfs.BFSConfig(axes=("data",), fanout=4, sync="butterfly")
+    host_cpus = os.cpu_count() or 1
+    n_closed = (2 if smoke else 4) * lanes
+    roots = _component_roots(g, n_closed)
+    service_kw = dict(cache_capacity=0, max_linger_s=linger_s,
+                      max_pending=8 * lanes)
+
+    import jax
+
+    devs = jax.devices()
+
+    def replica_mesh(i, n):
+        # disjoint device slices when the host has enough devices:
+        # replicas then overlap their waves freely (production shape).
+        # Otherwise they share the full set — the devlock serializes
+        # their waves, which on shared devices is the only schedule that
+        # does not deadlock XLA's collective rendezvous (see
+        # repro.core.devlock).
+        if n * p <= len(devs):
+            return jax.make_mesh(
+                (p,), ("data",), devices=devs[i * p:(i + 1) * p],
+                axis_types=(jax.sharding.AxisType.Auto,),
+            )
+        return mesh
+
+    def shared_devices(n):
+        return n * p > len(devs)
+
+    def build(n, injector=None):
+        reps = [
+            Replica(i, g, p, cfg, mesh=replica_mesh(i, n), lanes=lanes,
+                    n_real=g.n_real, service_kw=dict(service_kw))
+            for i in range(n)
+        ]
+        for r in reps:  # warm every engine before measuring
+            r.submit("bfs", int(roots[0])).result(600.0)
+            r.svc.reset_telemetry()
+        return reps, ReplicaRouter(
+            reps, injector=injector, heartbeat_interval_s=0.05,
+            suspect_backoff_s=0.05,
+        )
+
+    rep = Report(
+        f"replicated service (kron{scale}_ef8, P={p}, {lanes} lanes, "
+        f"{host_cpus} host cpus)",
+        ["phase", "N", "agg QPS", "p50 ms", "p99 ms", "failed", "note"],
+    )
+    qps1 = qps_last = None
+    for n in counts:
+        _, router = build(n)
+        qps, lat = _closed_loop(router, roots, n_closed, n * lanes)
+        router.stop()
+        qps1 = qps if qps1 is None else qps1
+        qps_last = qps
+        rep.add("scale", n, qps, lat["p50"], lat["p99"], 0,
+                f"{qps / qps1:.2f}x vs N=1")
+        rep.extra.setdefault("service_replicas", {})[
+            f"kron{scale}_P{p}_N{n}"
+        ] = {
+            "graph": f"kron{scale}_ef8",
+            "devices": p,
+            "replicas": n,
+            "lanes": lanes,
+            "qps": qps,
+            "latency_ms": lat,
+            "qps_vs_n1": qps / qps1,
+            "host_cpus": host_cpus,
+            "shared_devices": shared_devices(n),
+            "smoke": smoke,
+        }
+
+    if chaos:
+        n = 2  # kill-one tolerance needs a second replica to fail over to
+        duration = 2.0 if smoke else 4.0
+        offered = max(0.5 * (qps_last or 10.0), 1.0)
+        if smoke:
+            # the smoke bar is schema + zero failed futures, not saturation:
+            # each mutation fans out to every replica and drains its wave,
+            # so an uncapped storm takes minutes on a small CI host
+            offered = min(offered, 25.0)
+        spec = chaos
+        if "@" not in spec:
+            # bare kind ("kill-one"): fire mid-run for the worst case
+            spec = f"{spec}@op={max(int(offered * duration) // 2, 1)}"
+
+        def storm_driver(injector):
+            reps, router = build(n, injector=injector)
+            batch_rng = np.random.default_rng(seed + 17)
+
+            def batch_fn():
+                return reps[0].svc.overlay.sample_batch(batch_rng, 16, 4)
+
+            row = _open_loop_router(
+                router, roots, offered, duration,
+                mutate_every=8, batch_fn=batch_fn,
+            )
+            snap = router.snapshot()
+            router.stop()
+            return row, snap
+
+        base_row, _ = storm_driver(None)
+        chaos_row, snap = storm_driver(
+            FaultInjector.from_spec(spec, seed, n)
+        )
+        p99_base = max(base_row["p99"], 1e-6)
+        inflation = chaos_row["p99"] / p99_base
+        rep.add("no-fault", n, base_row["achieved_qps"], base_row["p50"],
+                base_row["p99"], base_row["failed"], "mutation storm")
+        rep.add("chaos", n, chaos_row["achieved_qps"], chaos_row["p50"],
+                chaos_row["p99"], chaos_row["failed"],
+                f"{spec}; p99 x{inflation:.2f}")
+        rep.extra.setdefault("service_chaos", {})[
+            f"kron{scale}_P{p}_N{n}_{spec.split('@')[0]}"
+        ] = {
+            "graph": f"kron{scale}_ef8",
+            "devices": p,
+            "replicas": n,
+            "spec": spec,
+            "offered_qps": offered,
+            "no_fault": base_row,
+            "chaos": chaos_row,
+            "p99_inflation": inflation,
+            "faults": snap["faults"],
+            "host_cpus": host_cpus,
+            "shared_devices": shared_devices(n),
+            "smoke": smoke,
+        }
+    return rep
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced scale / low-QPS open loop for CI")
+    ap.add_argument("--replicas", type=int, default=0, metavar="N",
+                    help="run the replicated-serving benchmark instead, "
+                         "scaling up to N replicas (§17)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="fault spec for the chaos phase (e.g. kill-one); "
+                         "only with --replicas")
     args = ap.parse_args(argv)
-    rep = run(smoke=args.smoke)
+    if args.replicas:
+        rep = run_replicated(smoke=args.smoke, max_replicas=args.replicas,
+                             chaos=args.chaos or "kill-one")
+    else:
+        rep = run(smoke=args.smoke)
     print(rep.render())
     # standalone runs append rows to the repo-root trajectory file so the
     # tier-2 CI artifact carries them (run.py does the same for full runs)
@@ -229,13 +450,14 @@ def main(argv=None) -> int:
     if os.path.exists(path):
         with open(path) as f:
             bench = json.load(f)
-    # merge per row: a smoke run must not erase recorded full-scale cells
-    bench.setdefault("service_latency", {}).update(
-        rep.extra.get("service_latency", {})
-    )
+    # merge per row for EVERY emitted key (service_latency,
+    # service_replicas, service_chaos, ...): a smoke run must not erase
+    # recorded full-scale cells
+    for key, rows in rep.extra.items():
+        bench.setdefault(key, {}).update(rows)
     with open(path, "w") as f:
         json.dump(bench, f, indent=1)
-    print(f"service_latency rows -> {path}")
+    print(f"{', '.join(sorted(rep.extra))} rows -> {path}")
     return 0
 
 

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.analytics import msbfs
 from repro.core.bfs import BFSConfig, place_arrays
+from repro.core.devlock import device_lock
 from repro.graph.partition import PartitionedGraph
 from repro.traversal import bc as bc_mod
 from repro.traversal import sssp as sssp_mod
@@ -138,7 +139,16 @@ class BFSQueryEngine:
     def _run_wave(self, roots: np.ndarray) -> np.ndarray:
         padded = np.full(self.lanes, -1, dtype=np.int32)
         padded[: roots.size] = roots
-        d_owned, levels, scanned = self._fn(self._arrays, jnp.asarray(padded))
+        with device_lock(self.mesh):
+            d_owned, levels, scanned = self._fn(
+                self._arrays, jnp.asarray(padded)
+            )
+            # materialize INSIDE the lock: ops on the lazy outputs (even
+            # np.max) dispatch fresh device programs, which must not
+            # overlap another engine's collectives on shared devices
+            d_owned, levels, scanned = (
+                np.asarray(d_owned), np.asarray(levels), np.asarray(scanned)
+            )
         self.stats.waves += 1
         self.stats.scanned_edges += float(np.asarray(scanned)[0])
         self.stats.max_levels = max(self.stats.max_levels, int(np.max(levels)))
@@ -209,7 +219,9 @@ class BFSQueryEngine:
         fn = compiled_sssp_fn(self.pg, self.mesh, cfg)
         out = np.empty((roots.size, self.pg.n), dtype=np.int64)
         for i, r in enumerate(roots):
-            d_owned, _, relaxed = fn(self._arrays, jnp.int32(r))
+            with device_lock(self.mesh):
+                d_owned, _, relaxed = fn(self._arrays, jnp.int32(r))
+                d_owned, relaxed = np.asarray(d_owned), np.asarray(relaxed)
             out[i] = sssp_mod.assemble_distances(self.pg, d_owned)
             self.stats.relaxed_edges += float(np.asarray(relaxed)[0])
         self.stats.sssp_queries += int(roots.size)
@@ -227,7 +239,14 @@ class BFSQueryEngine:
             chunk = sources[lo : lo + self.lanes]
             padded = np.full(self.lanes, -1, dtype=np.int32)
             padded[: chunk.size] = chunk
-            bc_owned, depth, scanned = fn(self._arrays, jnp.asarray(padded))
+            with device_lock(self.mesh):
+                bc_owned, depth, scanned = fn(
+                    self._arrays, jnp.asarray(padded)
+                )
+                bc_owned, depth, scanned = (
+                    np.asarray(bc_owned), np.asarray(depth),
+                    np.asarray(scanned),
+                )
             bc += bc_mod.assemble_bc(self.pg, bc_owned)
             self.stats.waves += 1
             self.stats.scanned_edges += float(np.asarray(scanned)[0])

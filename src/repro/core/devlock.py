@@ -1,0 +1,50 @@
+"""Per-device-set execution locks for collective programs.
+
+Two independently compiled collective programs dispatched CONCURRENTLY
+onto the same device set can deadlock inside XLA's cross-module
+rendezvous on the host platform: each in-flight program parks per-device
+threads waiting for all ranks to arrive, and with two programs in flight
+the device threads split between them — program A holds ranks program B
+needs and vice versa, so neither rendezvous completes (observed as
+``collective_ops_utils`` "waiting for all participants" stalls that
+never resolve).  Within one engine the wave scheduler already serializes
+dispatch; the hazard appears the moment two engines share devices —
+exactly the §17 replicated-serving shape on host-simulated devices,
+where every replica's mesh is carved from the same ``jax.devices()``.
+
+The fix is an execution lock KEYED BY THE DEVICE SET: engines over the
+same devices serialize their waves (which on shared devices is also the
+only honest schedule — they were time-slicing the same silicon anyway),
+while engines over disjoint device sets take disjoint locks and overlap
+freely, preserving the production scaling story where each replica owns
+its own slice of hardware.
+
+Usage — hold the lock across dispatch AND completion (an async dispatch
+that escapes the lock still occupies the device threads)::
+
+    with device_lock(mesh):
+        out = fn(*args)
+        jax.block_until_ready(out)
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Tuple
+
+_REGISTRY: Dict[Tuple[int, ...], threading.RLock] = {}
+_REGISTRY_LOCK = threading.Lock()
+
+
+def device_lock(mesh) -> threading.RLock:
+    """The execution lock for ``mesh``'s device set.  Meshes over the
+    same devices (any axis shape/order) share one lock; disjoint device
+    sets get independent locks.  Overlapping-but-unequal sets also get
+    independent locks — that shape is already unsupported for collective
+    execution and is not introduced by this module."""
+    key = tuple(sorted(d.id for d in mesh.devices.flat))
+    with _REGISTRY_LOCK:
+        lock = _REGISTRY.get(key)
+        if lock is None:
+            lock = _REGISTRY[key] = threading.RLock()
+        return lock

@@ -42,6 +42,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import frontier as fr
 from repro.core.bfs import BFSConfig, _sync_frontier, graph_array_keys, place_arrays
+from repro.core.devlock import device_lock
 from repro.graph.partition import PartitionedGraph
 from repro.traversal import sssp as sssp_mod
 from repro.traversal.sssp import SSSPConfig, UNREACHED, dist_rows
@@ -452,12 +453,19 @@ def repair_row(
         pg, mesh, cfg, unit_weight=unit_weight,
         with_taint=taint_ids.size > 0,
     )
-    d_owned, iters, count = fn(
-        arrays,
-        jnp.asarray(encode_distances(row, n_rows)),
-        jnp.asarray(seed_words(taint_ids, nw)),
-        jnp.asarray(seed_words(relax_ids, nw)),
-    )
+    with device_lock(mesh):
+        d_owned, iters, count = fn(
+            arrays,
+            jnp.asarray(encode_distances(row, n_rows)),
+            jnp.asarray(seed_words(taint_ids, nw)),
+            jnp.asarray(seed_words(relax_ids, nw)),
+        )
+        # materialize INSIDE the lock: ops on the lazy outputs dispatch
+        # fresh device programs (np.max included), which must not overlap
+        # another engine's collectives on shared devices
+        d_owned, iters, count = (
+            np.asarray(d_owned), np.asarray(iters), np.asarray(count)
+        )
     new_row = sssp_mod.assemble_distances(pg, d_owned)
     if unit_weight if bfs_sentinel is None else bfs_sentinel:
         new_row = np.where(new_row >= UNREACHED, INF32, new_row)
@@ -527,10 +535,14 @@ def repair_rows(
             pg, mesh, cfg, lane_words, unit_weight=unit_weight,
             with_taint=with_taint,
         )
-        d_owned, iters, counts = fn(
-            arrays, jnp.asarray(dist0), jnp.asarray(taint_w),
-            jnp.asarray(relax_w),
-        )
+        with device_lock(mesh):
+            d_owned, iters, counts = fn(
+                arrays, jnp.asarray(dist0), jnp.asarray(taint_w),
+                jnp.asarray(relax_w),
+            )
+            d_owned, iters, counts = (
+                np.asarray(d_owned), np.asarray(iters), np.asarray(counts)
+            )
         from repro.analytics import msbfs
 
         dist = msbfs.assemble_distances(pg, d_owned, lanes)

@@ -22,6 +22,15 @@ repaired / dropped per batch, and the report adds the
 partial-invalidation hit-rate (surviving-row fraction) next to the
 existing telemetry.  ``--record-updates PATH`` persists the injected
 batches as a JSONL stream replayable by ``bfs_run --updates``.
+
+``--replicas N`` serves through N independent engine replicas behind the
+§17 version-aware router: mutations fan out through the replication log
+with read-your-writes ``min_seq``, failures fail over, and the stats gain
+a ``faults`` telemetry block (injected faults, retries, hedges,
+failovers, recoveries, shed, stale serves — zeroed on the single-service
+path so the ``--stats-json`` schema is uniform).  ``--chaos SPEC`` arms
+the deterministic fault injector (``--chaos-seed`` fixes the victim
+draws), e.g. ``--chaos 'kill-one@op=20;corrupt-batch@batch=2'``.
 """
 
 from __future__ import annotations
@@ -72,10 +81,24 @@ def main(argv=None) -> int:
     ap.add_argument("--record-updates", default=None, metavar="PATH",
                     help="persist injected mutation batches as a JSONL "
                          "stream (replay with `bfs_run --updates PATH`)")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="serve through N independent engine replicas "
+                         "behind the §17 version-aware router")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault-injection spec, e.g. "
+                         "'kill-one@op=20;corrupt-batch@batch=2' "
+                         "(requires --replicas > 1 to stay available)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="seed for fault victim draws (default: --seed)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump telemetry + engine stats as JSON")
     args = ap.parse_args(argv)
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.swap_after and args.replicas > 1:
+        ap.error("--swap-after is a single-service path; use mutations "
+                 "(--mutate-rate) with --replicas")
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}"
@@ -88,7 +111,14 @@ def main(argv=None) -> int:
 
     from repro.core import bfs
     from repro.graph import csr, generators, partition
-    from repro.service import AdmissionError, GraphQueryService
+    from repro.service import (
+        AdmissionError,
+        FaultInjector,
+        GraphQueryService,
+        Replica,
+        ReplicaRouter,
+        RouterTelemetry,
+    )
 
     def build(seed):
         g = generators.kronecker(args.scale, args.edge_factor, seed=seed)
@@ -101,18 +131,42 @@ def main(argv=None) -> int:
     cfg = bfs.BFSConfig(axes=("data",), fanout=args.fanout, sync=args.sync)
     algos = [a.strip() for a in args.algos.split(",") if a.strip()]
 
-    svc = GraphQueryService(
-        pg, mesh, cfg, lanes=args.lanes, n_real=g.n_real,
+    service_kw = dict(
         cache_capacity=args.cache_capacity, max_pending=args.max_pending,
         max_linger_s=args.linger_ms / 1e3,
         default_deadline_s=(args.deadline_ms / 1e3) or None,
     )
     rng = np.random.default_rng(args.seed)
     hot = csr.largest_component_root(g, rng)
-    svc.query("bfs", hot)  # warmup / compile
-    svc.reset_telemetry()  # the compile must not pollute measured latency
-    print(f"serving: lanes={args.lanes} sync={args.sync} "
-          f"linger={args.linger_ms}ms qps={args.qps} "
+    replicated = args.replicas > 1 or args.chaos is not None
+    router = injector = None
+    if replicated:
+        replicas = [
+            Replica(i, g, args.devices, cfg, mesh=mesh, lanes=args.lanes,
+                    n_real=g.n_real, service_kw=dict(service_kw))
+            for i in range(args.replicas)
+        ]
+        for r in replicas:  # warmup / compile before measuring
+            r.submit("bfs", hot).result(600.0)
+            r.svc.reset_telemetry()
+        injector = FaultInjector.from_spec(
+            args.chaos,
+            args.seed if args.chaos_seed is None else args.chaos_seed,
+            args.replicas,
+        )
+        router = ReplicaRouter(replicas, injector=injector)
+        svc = replicas[0].svc  # overlay source for sampled batches
+        if args.chaos:
+            print(f"chaos: {args.chaos} -> "
+                  f"{json.dumps(injector.schedule_json())}")
+    else:
+        svc = GraphQueryService(
+            pg, mesh, cfg, lanes=args.lanes, n_real=g.n_real, **service_kw
+        )
+        svc.query("bfs", hot)  # warmup / compile
+        svc.reset_telemetry()  # compiles must not pollute measured latency
+    print(f"serving: replicas={args.replicas} lanes={args.lanes} "
+          f"sync={args.sync} linger={args.linger_ms}ms qps={args.qps} "
           f"deadline={args.deadline_ms or 'none'}ms")
 
     n = max(int(args.qps * args.duration), 1)
@@ -120,6 +174,7 @@ def main(argv=None) -> int:
     rejected = 0
     batches = []  # injected mutation batches (for --record-updates)
     n_mut = 0
+    min_seq = router.latest_seq if replicated else 0
     t0 = time.perf_counter()
     for i in range(n):
         target = t0 + i / args.qps
@@ -138,34 +193,67 @@ def main(argv=None) -> int:
                     int(args.mutate_edges * args.mutate_delete_frac),
                 )
                 batches.append(batch)
-                svc.apply_updates(batch)
+                if replicated:  # replication log: fan out + read-your-writes
+                    min_seq = router.apply_updates(batch)
+                else:
+                    svc.apply_updates(batch)
                 n_mut += 1
         root = (hot if rng.random() < args.hot_fraction
                 else int(rng.integers(0, g.n_real)))
         try:
-            futs.append(svc.submit(algos[i % len(algos)], root))
+            if replicated:
+                futs.append(router.submit(algos[i % len(algos)], root,
+                                          min_seq=min_seq))
+            else:
+                futs.append(svc.submit(algos[i % len(algos)], root))
         except AdmissionError:
             rejected += 1
-    ok = err = 0
+    ok = err = stale = 0
     for f in futs:
         try:
-            f.result(timeout=600)
+            res = f.result(timeout=600)
             ok += 1
+            if replicated and res.stale:
+                stale += 1
         except Exception:
             err += 1
     elapsed = time.perf_counter() - t0
 
-    snap = svc.snapshot()
+    if replicated:
+        snap = router.snapshot()
+    else:
+        snap = svc.snapshot()
+        # uniform --stats-json schema: the single-service path reports a
+        # zeroed §17 faults block (nothing injected, nothing to fail over)
+        snap["faults"] = RouterTelemetry().faults_block(injector)
     lat = snap["latency_ms"]
-    print(
-        f"{ok}/{n} served in {elapsed:.2f}s ({ok/elapsed:.1f} QPS; "
-        f"{rejected} rejected, {err} failed/expired)  "
-        f"p50 {lat['p50']:.1f}ms  p95 {lat['p95']:.1f}ms  "
-        f"p99 {lat['p99']:.1f}ms  occupancy {snap['wave_occupancy']:.2f}  "
-        f"cache hit-rate {snap['cache']['hit_rate']:.2f} "
-        f"(host-simulated devices)"
-    )
-    if n_mut:
+    if replicated:
+        fb = snap["faults"]
+        print(
+            f"{ok}/{n} served in {elapsed:.2f}s ({ok/elapsed:.1f} QPS; "
+            f"{rejected} rejected, {err} failed, {stale} stale)  "
+            f"p50 {lat['p50']:.1f}ms  p95 {lat['p95']:.1f}ms  "
+            f"p99 {lat['p99']:.1f}ms  replicas "
+            f"{snap['n_serving']}/{args.replicas} serving "
+            f"(host-simulated devices)"
+        )
+        print(
+            f"faults: injected {sum(fb['injected'].values())}  "
+            f"retries {fb['retries']}  hedges {fb['hedges']}  "
+            f"failovers {fb['failovers']}  recoveries {fb['recoveries']}  "
+            f"shed {fb['shed']}  stale serves {fb['stale_serves']}  "
+            f"catch-up batches {fb['catch_up_batches']}"
+        )
+    else:
+        print(
+            f"{ok}/{n} served in {elapsed:.2f}s ({ok/elapsed:.1f} QPS; "
+            f"{rejected} rejected, {err} failed/expired)  "
+            f"p50 {lat['p50']:.1f}ms  p95 {lat['p95']:.1f}ms  "
+            f"p99 {lat['p99']:.1f}ms  occupancy {snap['wave_occupancy']:.2f}  "
+            f"cache hit-rate {snap['cache']['hit_rate']:.2f} "
+            f"(host-simulated devices)"
+        )
+    if n_mut and not replicated:
         mut = snap["mutations"]
         print(
             f"mutations: {mut['batches']} batches "
@@ -192,13 +280,18 @@ def main(argv=None) -> int:
             devices=args.devices,
             config={"sync": args.sync, "mode": cfg.mode,
                     "fanout": args.fanout, "lanes": args.lanes,
-                    "delta": 0, "max_weight": 0, "use_pallas": False},
+                    "delta": 0, "max_weight": 0, "use_pallas": False,
+                    "replicas": args.replicas,
+                    "chaos": args.chaos or ""},
             timing_ms={"mean": lat["mean"], "total": elapsed * 1e3},
             engine_stats=svc.engine.stats,
             telemetry=snap,
         )
         print(f"stats -> {args.stats_json}")
-    svc.stop()
+    if replicated:
+        router.stop()
+    else:
+        svc.stop()
     return 0
 
 

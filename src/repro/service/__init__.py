@@ -157,6 +157,10 @@ class GraphQueryService:
         the queue.  Raises :class:`AdmissionError` on overload and
         :class:`ValueError` on bad algo/root."""
         epoch, engine = self._state
+        if self._stopped or self.scheduler.dead:
+            # a dead scheduler thread must refuse work, not absorb it:
+            # nothing would ever resolve the future (timeout audit, §17)
+            raise ServiceStopped("service is not accepting queries")
         if algo not in ALGOS:
             raise ValueError(f"unknown algo {algo!r}; expected one of {ALGOS}")
         root = int(root)
@@ -186,9 +190,14 @@ class GraphQueryService:
         algo: str,
         root: int,
         deadline_s: Optional[float] = None,
-        timeout: Optional[float] = None,
+        timeout: Optional[float] = 600.0,
     ):
-        """Blocking convenience: ``submit(...).result(timeout)``."""
+        """Blocking convenience: ``submit(...).result(timeout)``.
+
+        The default timeout is deliberately finite (§17 timeout audit): a
+        dead scheduler thread must surface as a ``TimeoutError`` in the
+        caller, never as an eternal hang.  Pass ``timeout=None`` only when
+        an outer watchdog owns the wait."""
         return self.submit(algo, root, deadline_s).result(timeout)
 
     # --- cache plumbing (scheduler calls these) ---------------------------
@@ -406,15 +415,18 @@ class GraphQueryService:
     def start(self) -> None:
         self.scheduler.start()
 
-    def stop(self) -> None:
+    def stop(self, *, join: bool = True) -> None:
         """Stop the scheduler; pending futures fail with
-        :class:`ServiceStopped`."""
+        :class:`ServiceStopped`.  ``join=False`` is the crash path (§17
+        replica kill): the scheduler thread is abandoned mid-wave — its
+        exit handler still fails whatever it was holding — and the call
+        returns immediately."""
         if self._stopped:
             return
         self._stopped = True
         self.scheduler._stop.set()
         leftovers = self.queue.close()  # also wakes the scheduler
-        self.scheduler.stop(join=True)
+        self.scheduler.stop(join=join)
         for r in leftovers:
             resolve_future(r.future,
                            exception=ServiceStopped("service stopped"))
@@ -444,3 +456,25 @@ class GraphQueryService:
             engine={"waves": self.engine.stats.waves,
                     "queries": self.engine.stats.queries},
         )
+
+
+# replicated serving tier (DESIGN.md §17) — re-exported here so the
+# public surface stays one import: ``from repro.service import ...``.
+# These modules import GraphQueryService lazily, so the order is safe.
+from repro.service.faults import (  # noqa: E402, F401
+    ChaosSpecError,
+    Fault,
+    FaultInjector,
+    parse_chaos,
+)
+from repro.service.replica import (  # noqa: E402, F401
+    Replica,
+    ReplicaUnavailable,
+)
+from repro.service.router import (  # noqa: E402, F401
+    NoQuorumError,
+    ReplicaRouter,
+    RoutedResult,
+    RouterTelemetry,
+    RouterTimeout,
+)

@@ -41,7 +41,35 @@ def resolve_future(future: Future, result=_UNSET, exception=None) -> bool:
 
 
 class AdmissionError(RuntimeError):
-    """Request refused at submission (queue full / unmeetable deadline)."""
+    """Request refused at submission (queue full / quota / unmeetable
+    deadline).
+
+    Structured so the §17 router can tell shed-and-retry-later from
+    reject-permanently without parsing the message:
+
+    * ``occupancy`` — the load measure that tripped (queued depth,
+      in-flight count, tenant usage) at rejection time;
+    * ``quota`` — the bound it tripped against;
+    * ``retryable`` — True for transient overload (backpressure: try
+      again later), False for requests that can never be admitted as
+      submitted (e.g. a deadline already unmeetable at submit time);
+    * ``tenant`` — the quota bucket charged, when tenancy applies.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        occupancy: Optional[int] = None,
+        quota: Optional[int] = None,
+        retryable: bool = True,
+        tenant: Optional[str] = None,
+    ):
+        super().__init__(message)
+        self.occupancy = occupancy
+        self.quota = quota
+        self.retryable = retryable
+        self.tenant = tenant
 
 
 class DeadlineExceeded(TimeoutError):
@@ -96,14 +124,18 @@ class SubmissionQueue:
         now = time.monotonic() if now is None else now
         if deadline_s is not None and deadline_s <= 0:
             raise AdmissionError(
-                f"deadline_s={deadline_s} is unmeetable at submission"
+                f"deadline_s={deadline_s} is unmeetable at submission",
+                occupancy=len(self), quota=self.max_pending,
+                retryable=False,  # resubmitting the same deadline is futile
             )
         with self._cond:
             if self._closed:
                 raise ServiceStopped("submission queue is closed")
             if len(self._items) >= self.max_pending:
                 raise AdmissionError(
-                    f"queue full ({self.max_pending} pending): overloaded"
+                    f"queue full ({self.max_pending} pending): overloaded",
+                    occupancy=len(self._items), quota=self.max_pending,
+                    retryable=True,  # backpressure: retry after a backoff
                 )
             req = QueryRequest(
                 algo=algo,

@@ -93,6 +93,12 @@ class WaveScheduler:
     def running(self) -> bool:
         return self._thread is not None and self._thread.is_alive()
 
+    @property
+    def dead(self) -> bool:
+        """Started but no longer running (crash or un-joined stop) — new
+        submissions must fail fast rather than queue forever."""
+        return self._thread is not None and not self._thread.is_alive()
+
     # --- wave formation policy --------------------------------------------
 
     def wave_width(self, cls: str) -> int:
@@ -142,16 +148,25 @@ class WaveScheduler:
         pending: Dict[str, List[QueryRequest]] = {
             cls: [] for cls in ("bfs", "sssp", "bc")
         }
+        try:
+            self._run_loop(svc, pending)
+        finally:
+            # fail-fast on ANY exit — stop() or a crashed loop: futures
+            # already drained into `pending` AND futures still sitting in
+            # the queue both fail promptly instead of hanging their
+            # callers forever (the §17 timeout-audit contract)
+            leftovers = [r for reqs in pending.values() for r in reqs]
+            leftovers.extend(svc.queue.drain())
+            for r in leftovers:
+                resolve_future(
+                    r.future, exception=ServiceStopped("scheduler stopped")
+                )
+
+    def _run_loop(self, svc, pending: Dict[str, List[QueryRequest]]) -> None:
         while True:
             timeout = self._next_timeout(pending, time.monotonic())
             svc.queue.wait(timeout)
             if self._stop.is_set():
-                for reqs in pending.values():
-                    for r in reqs:
-                        resolve_future(
-                            r.future,
-                            exception=ServiceStopped("service stopped"),
-                        )
                 return
             for req in svc.queue.drain():
                 pending[WAVE_CLASS[req.algo]].append(req)

@@ -281,16 +281,44 @@ def test_admission_control_bounds_queue_depth(pgraph, mesh8, graph):
     roots = _component_roots(graph, 5)
     svc = _service(pgraph, mesh8, graph, start=False, max_pending=4)
     futs = [svc.submit("bfs", int(r)) for r in roots[:4]]
-    with pytest.raises(AdmissionError):
+    with pytest.raises(AdmissionError) as full:
         svc.submit("bfs", int(roots[4]))
-    with pytest.raises(AdmissionError):  # unmeetable deadline at submit
+    # structured rejection: the §17 router keys failover/shed policy off
+    # these fields, so they are contract, not decoration
+    assert full.value.occupancy == 4 and full.value.quota == 4
+    assert full.value.retryable is True  # backpressure: retry later
+    with pytest.raises(AdmissionError) as dead:  # unmeetable deadline
         svc.submit("bfs", int(roots[0]), deadline_s=-0.5)
+    assert dead.value.retryable is False  # resubmitting is futile
+    assert dead.value.quota == 4
     snap = svc.snapshot()
     assert snap["rejected"] == 2 and snap["pending"] == 4
     svc.stop()  # never started: pending futures must fail, not hang
     for f in futs:
         with pytest.raises(ServiceStopped):
             f.result(1.0)
+    with pytest.raises(ServiceStopped):
+        svc.submit("bfs", int(roots[0]))
+
+
+def test_stopped_scheduler_fails_pending_futures_promptly(
+    pgraph, mesh8, graph
+):
+    """Timeout-audit regression (§17): a scheduler that exits — crash-style
+    ``stop(join=False)``, no drain — must fail every pending future within
+    a bounded wait, and the service must refuse new work instead of
+    queueing it forever."""
+    roots = _component_roots(graph, 3)
+    svc = _service(pgraph, mesh8, graph, max_linger_s=5.0)  # park requests
+    futs = [svc.submit("bfs", int(r)) for r in roots]
+    svc.stop(join=False)  # abandon the thread mid-linger, like a kill
+    for f in futs:
+        with pytest.raises(ServiceStopped):
+            f.result(10.0)  # bounded: must NOT hang to the linger timer
+    deadline = time.monotonic() + 10.0
+    while not svc.scheduler.dead and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert svc.scheduler.dead
     with pytest.raises(ServiceStopped):
         svc.submit("bfs", int(roots[0]))
 
