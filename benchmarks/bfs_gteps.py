@@ -77,6 +77,19 @@ def run(scale: int = 13, roots: int = 4, smoke: bool = False) -> Report:
                 "levels": levels,
                 "wire_kib_per_node_level": wire / 1024,
             }
+            if name.startswith("kron"):
+                # Flight-recorder trace for the headline graph (DESIGN §18):
+                # per-level dense-vs-sparse byte attribution plus host-timed
+                # per-level wall clock.  One root — the trace is a per-level
+                # profile, not a throughput number.
+                from repro.core import flightrec
+
+                _, tr = flightrec.timed_bfs_levels(
+                    pg, mesh, cfg, rs[0], arrays=arrays
+                )
+                rep.extra.setdefault("bfs_trace", {}).setdefault(
+                    name, {}
+                )[sync] = tr.to_dict()
     return rep
 
 

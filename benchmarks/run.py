@@ -32,6 +32,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced scales/iterations for CI smoke runs")
+    ap.add_argument("--only", default=None, metavar="NAME[,NAME...]",
+                    help="run only the named benchmark modules (e.g. "
+                    "bfs_gteps,sssp); BENCH_bfs.json merges per row, so a "
+                    "partial run refreshes exactly the rows it produced")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -65,6 +69,12 @@ def main(argv=None) -> int:
                 (_service_replicated, {"chaos": "kill-one"}),
                 (dynamic, {}), (scaling, {}), (fanout, {}),
                 (collective_bytes, {}), (direction, {}), (grad_sync, {})]
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",") if w.strip()}
+        runs = [(mod, kw) for mod, kw in runs
+                if mod.__name__.split(" ")[0].rsplit(".", 1)[-1] in wanted]
+        if not runs:
+            ap.error(f"--only {args.only!r} matched no benchmark module")
     results = []
     extras = {}
     t_all = time.time()
@@ -82,6 +92,7 @@ def main(argv=None) -> int:
     # plus the multi-source aggregate rates (tracked across PRs; ROADMAP.md)
     bench = {
         "teps_per_sync": extras.get("bfs", {}),
+        "trace_per_level": extras.get("bfs_trace", {}),
         "wire_per_sync": extras.get("bfs_wire", {}),
         "msbfs_per_sync": extras.get("msbfs", {}),
         "sssp_per_sync": extras.get("sssp", {}),

@@ -59,7 +59,8 @@ def wave_rows(pg: PartitionedGraph, *, lane_pad: int = 128) -> int:
 
 
 def build_msbfs_fn(
-    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: BFSConfig, n_lanes: int
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: BFSConfig,
+    n_lanes: int, *, trace: bool = False, trace_levels=None,
 ):
     """Compile-ready B-lane multi-source BFS.
 
@@ -73,6 +74,11 @@ def build_msbfs_fn(
       levels in lock-step),
     * ``scanned float32[P]`` — edges examined, summed over lanes (honest
       aggregate TEPS, paper Sec. 2).
+
+    ``trace=True`` appends the §18 flight-recorder buffer
+    ``int32[P, trace_levels, TRACE_COLS]`` (stats over the FLATTENED
+    lane-word buffer the sync exchanges; POP/CHANGED aggregate over all
+    lanes).  ``trace=False`` stages the exact uninstrumented program.
     """
     if n_lanes < 1:
         raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
@@ -85,6 +91,10 @@ def build_msbfs_fn(
     vmax = pg.vmax
     max_levels = cfg.max_levels if cfg.max_levels is not None else pg.n
     spec = P(cfg.axes if len(cfg.axes) > 1 else cfg.axes[0])
+    if trace:
+        from repro.core import flightrec
+
+        t_levels = flightrec.resolve_trace_levels(trace_levels, max_levels)
 
     def body(arrays, roots):
         arrays = jax.tree.map(lambda a: a[0], arrays)
@@ -116,11 +126,11 @@ def build_msbfs_fn(
             init_dir = jnp.array(False)  # False == push
 
         def cond(state):
-            frontier, seen, d_owned, level, scanned, pull = state
+            frontier, seen, d_owned, level, scanned, pull = state[:6]
             return (fr.popcount(frontier) > 0) & (level < max_levels)
 
         def step(state):
-            frontier, seen, d_owned, level, scanned, pull = state
+            frontier, seen, d_owned, level, scanned, pull = state[:6]
 
             # -- Phase 1: lane-parallel traversal ------------------------
             def do_push(_):
@@ -158,6 +168,10 @@ def build_msbfs_fn(
                 lvl_scanned = jnp.where(pull, m_u, m_f)
 
             # -- Phase 2: butterfly sync, UNCHANGED on the flat buffer ---
+            if trace:
+                t_words, t_branch, t_shipped = flightrec.or_sync_stats(
+                    gq.reshape(-1), cfg
+                )
             merged = _sync_frontier(gq.reshape(-1), cfg).reshape(n_rows, bw)
 
             # -- Per-lane enqueue-if-new + level capture -----------------
@@ -181,7 +195,7 @@ def build_msbfs_fn(
                 )
                 pull = jnp.where(pull, ~go_push, go_pull)
 
-            return (
+            out = (
                 new,
                 seen,
                 d_owned,
@@ -189,6 +203,19 @@ def build_msbfs_fn(
                 scanned + lvl_scanned.astype(jnp.float32),
                 pull,
             )
+            if trace:
+                if cfg.mode == "top_down":
+                    direction = jnp.int32(0)
+                elif cfg.mode == "bottom_up":
+                    direction = jnp.int32(1)
+                else:
+                    direction = state[5].astype(jnp.int32)
+                row = flightrec.trace_row(
+                    level, t_words, fr.popcount(new), direction, t_branch,
+                    t_shipped, jnp.count_nonzero(new).astype(jnp.int32),
+                )
+                out = out + (flightrec.record(state[6], level, row),)
+            return out
 
         init = (
             frontier,
@@ -198,17 +225,21 @@ def build_msbfs_fn(
             jnp.float32(0),
             init_dir,
         )
-        frontier, seen, d_owned, level, scanned, _ = lax.while_loop(
-            cond, step, init
-        )
+        if trace:
+            init = init + (flightrec.zeros(t_levels),)
+        state = lax.while_loop(cond, step, init)
+        frontier, seen, d_owned, level, scanned, _ = state[:6]
         total_scanned = lax.psum(scanned, cfg.axes)
-        return d_owned[None], level[None], total_scanned[None]
+        out = (d_owned[None], level[None], total_scanned[None])
+        if trace:
+            out = out + (state[6][None],)
+        return out
 
     shard_fn = jax.shard_map(
         body,
         mesh=mesh,
         in_specs=({k: spec for k in graph_array_keys(pg)}, P()),
-        out_specs=(spec, spec, spec),
+        out_specs=(spec, spec, spec) + ((spec,) if trace else ()),
         check_vma=False,
     )
     return jax.jit(shard_fn)

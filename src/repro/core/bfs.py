@@ -189,7 +189,8 @@ def _expand_pull(arrays, frontier_words, visited_words, n_words, use_pallas,
 
 
 def build_bfs_fn(
-    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: BFSConfig, layout=None
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: BFSConfig, layout=None,
+    *, trace: bool = False, trace_levels: Optional[int] = None,
 ):
     """Compile-ready distributed BFS.
 
@@ -198,6 +199,13 @@ def build_bfs_fn(
     replicated int32 scalar.  Output: per-device owned distances
     ``int32[P, vmax]`` (INF for unreached), levels executed, and the number
     of edges examined (for honest TEPS, paper Sec. 2 metric discussion).
+
+    ``trace=True`` threads a §18 flight-recorder buffer through the level
+    loop and appends an ``int32[P, trace_levels, TRACE_COLS]`` output (row
+    [0] authoritative — every cell is replicated; see
+    :mod:`repro.core.flightrec`).  ``trace=False`` stages the EXACT
+    uninstrumented program — all recording is Python-gated, so the jaxpr
+    (hence the compiled HLO) is byte-identical to the pre-§18 seed.
     """
     n_words = pg.n_words
     vmax = pg.vmax
@@ -210,6 +218,10 @@ def build_bfs_fn(
     array_keys = graph_array_keys(pg) + (
         tuple(sorted(layout.arrays)) if layout is not None else ()
     )
+    if trace:
+        from repro.core import flightrec
+
+        t_levels = flightrec.resolve_trace_levels(trace_levels, max_levels)
 
     def body(arrays, root):
         # [P, ...] -> local [...]  (shard_map gives a leading axis of 1)
@@ -237,11 +249,11 @@ def build_bfs_fn(
             init_dir = jnp.array(False)
 
         def cond(state):
-            frontier_words, visited, d_owned, level, scanned, pull = state
+            frontier_words, visited, d_owned, level, scanned, pull = state[:6]
             return (fr.popcount(frontier_words) > 0) & (level < max_levels)
 
         def step(state):
-            frontier_words, visited, d_owned, level, scanned, pull = state
+            frontier_words, visited, d_owned, level, scanned, pull = state[:6]
 
             # -- Phase 1: traversal -------------------------------------
             def do_push(_):
@@ -278,6 +290,8 @@ def build_bfs_fn(
                 lvl_scanned = jnp.where(pull, m_u, m_f)
 
             # -- Phase 2: butterfly frontier synchronization -------------
+            if trace:
+                t_words, t_branch, t_shipped = flightrec.or_sync_stats(gq, cfg)
             merged = _sync_frontier(gq, cfg)
 
             # -- Update (enqueue-if-new as set ops) -----------------------
@@ -299,7 +313,7 @@ def build_bfs_fn(
                 go_push = n_f.astype(jnp.float32) < (pg.n / cfg.beta)
                 pull = jnp.where(pull, ~go_push, go_pull)
 
-            return (
+            out = (
                 new,
                 visited,
                 d_owned,
@@ -307,6 +321,19 @@ def build_bfs_fn(
                 scanned + lvl_scanned.astype(jnp.float32),
                 pull,
             )
+            if trace:
+                if cfg.mode == "top_down":
+                    direction = jnp.int32(0)
+                elif cfg.mode == "bottom_up":
+                    direction = jnp.int32(1)
+                else:
+                    direction = state[5].astype(jnp.int32)  # level's own dir
+                row = flightrec.trace_row(
+                    level, t_words, fr.popcount(new), direction, t_branch,
+                    t_shipped, jnp.count_nonzero(new).astype(jnp.int32),
+                )
+                out = out + (flightrec.record(state[6], level, row),)
+            return out
 
         init = (
             frontier_words,
@@ -316,17 +343,21 @@ def build_bfs_fn(
             jnp.float32(0),
             init_dir,
         )
-        frontier_words, visited, d_owned, level, scanned, _ = lax.while_loop(
-            cond, step, init
-        )
+        if trace:
+            init = init + (flightrec.zeros(t_levels),)
+        state = lax.while_loop(cond, step, init)
+        frontier_words, visited, d_owned, level, scanned, _ = state[:6]
         total_scanned = lax.psum(scanned, cfg.axes)
-        return d_owned[None], level[None], total_scanned[None]
+        out = (d_owned[None], level[None], total_scanned[None])
+        if trace:
+            out = out + (state[6][None],)
+        return out
 
     shard_fn = jax.shard_map(
         body,
         mesh=mesh,
         in_specs=({k: spec for k in array_keys}, P()),
-        out_specs=(spec, spec, spec),
+        out_specs=(spec, spec, spec) + ((spec,) if trace else ()),
         check_vma=False,
     )
     return jax.jit(shard_fn)

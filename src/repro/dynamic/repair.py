@@ -67,6 +67,8 @@ def build_repair_fn(
     *,
     unit_weight: bool = False,
     with_taint: bool = True,
+    trace: bool = False,
+    trace_levels=None,
 ):
     """Compile-ready incremental repair.
 
@@ -87,6 +89,14 @@ def build_repair_fn(
 
     ``cfg.delta`` (bucket frontiers) is ignored: repair always runs plain
     monotone relaxation — the fixpoint, hence the result, is identical.
+
+    ``trace=True`` appends one §18 flight-recorder buffer spanning BOTH
+    waves: phase-A taint rounds record DIR=0 (bitmap OR stats), phase-B
+    relax iterations DIR=1 (MIN-monoid stats) at consecutive LEVEL
+    indices.  The one-shot seed/boundary sync between the phases is not a
+    level and is not recorded.  ``trace=False`` stages the exact
+    uninstrumented program.  (The lane-packed ``build_repair_wave_fn``
+    variant is untraced — single-row repair is the diagnosable path.)
     """
     if not unit_weight and pg.edge_weight is None:
         raise ValueError(
@@ -101,6 +111,10 @@ def build_repair_fn(
     spec = P(cfg.axes if len(cfg.axes) > 1 else cfg.axes[0])
     or_cfg = _or_cfg(cfg)
     inf = jnp.uint32(UNREACHED)
+    if trace:
+        from repro.core import flightrec
+
+        t_levels = flightrec.resolve_trace_levels(trace_levels, max_iters)
 
     def body(arrays, dist0, taint_seed, relax_seed):
         arrays = jax.tree.map(lambda a: a[0], arrays)
@@ -115,23 +129,38 @@ def build_repair_fn(
         if with_taint:
             # -- Phase A: deletion taint closure over surviving tight edges
             def t_cond(state):
-                taint, front, rounds = state
+                taint, front, rounds = state[:3]
                 return fr.popcount(front) > 0
 
             def t_step(state):
-                taint, front, rounds = state
+                taint, front, rounds = state[:3]
                 du = dist0[src]
                 tight = (
                     fr.get_bits(front, src) & emask
                     & (du != inf) & (du + w == dist0[dst])
                 )
-                prop = _sync_frontier(fr.scatter_or(nw, dst, tight), or_cfg)
+                pre = fr.scatter_or(nw, dst, tight)
+                if trace:
+                    t_words, t_branch, t_shipped = flightrec.or_sync_stats(
+                        pre, or_cfg
+                    )
+                prop = _sync_frontier(pre, or_cfg)
                 new = prop & ~taint
-                return taint | new, new, rounds + 1
+                out = (taint | new, new, rounds + 1)
+                if trace:
+                    row = flightrec.trace_row(
+                        rounds, t_words, fr.popcount(new), jnp.int32(0),
+                        t_branch, t_shipped,
+                        jnp.count_nonzero(new).astype(jnp.int32),
+                    )
+                    out = out + (flightrec.record(state[3], rounds, row),)
+                return out
 
-            taint, _, t_rounds = lax.while_loop(
-                t_cond, t_step, (taint_seed, taint_seed, jnp.int32(0))
-            )
+            t_init = (taint_seed, taint_seed, jnp.int32(0))
+            if trace:
+                t_init = t_init + (flightrec.zeros(t_levels),)
+            t_state = lax.while_loop(t_cond, t_step, t_init)
+            taint, _, t_rounds = t_state[:3]
             taint_bits = fr.unpack(taint)
             dist = jnp.where(taint_bits, inf, dist0)
 
@@ -150,37 +179,56 @@ def build_repair_fn(
             taint_bits = jnp.zeros((n_rows,), jnp.bool_)
             dist = dist0
             changed = relax_seed
+            if trace:
+                t_state = (None, None, None, flightrec.zeros(t_levels))
 
         # -- Phase B: monotone min re-relaxation (the §14 SSSP step) ------
         def r_cond(state):
-            d, ch, it = state
+            d, ch, it = state[:3]
             return (fr.popcount(ch) > 0) & (it < max_iters)
 
         def r_step(state):
-            d, ch, it = state
+            d, ch, it = state[:3]
             act = fr.get_bits(ch, src) & emask
             ds = d[src]
             nd = ds + w  # uint32; nd < ds detects wraparound -> saturate
             cand = jnp.where(act & (ds != inf) & (nd >= ds), nd, inf)
             local = d.at[dst].min(cand)
+            if trace:
+                t_words, t_branch, t_shipped = flightrec.monoid_sync_stats(
+                    local, d, cfg, capacity
+                )
             synced = sssp_mod._sync_dist(local, d, cfg, capacity)
             improved = fr.pack(synced < d)
-            return synced, improved, it + 1
+            out = (synced, improved, it + 1)
+            if trace:
+                row = flightrec.trace_row(
+                    t_rounds + it, t_words, fr.popcount(improved),
+                    jnp.int32(1), t_branch, t_shipped,
+                    fr.changed_count(synced, d),
+                )
+                out = out + (flightrec.record(state[3], t_rounds + it, row),)
+            return out
 
-        dist, _, r_iters = lax.while_loop(
-            r_cond, r_step, (dist, changed, jnp.int32(0))
-        )
+        r_init = (dist, changed, jnp.int32(0))
+        if trace:
+            r_init = r_init + (t_state[3],)
+        r_state = lax.while_loop(r_cond, r_step, r_init)
+        dist, _, r_iters = r_state[:3]
 
         touched = fr.pack(taint_bits | (dist != dist0))
         count = fr.popcount(touched)  # replicated-identical on every rank
         d_owned = lax.dynamic_slice(dist, (v_start,), (vmax,))
-        return d_owned[None], (t_rounds + r_iters)[None], count[None]
+        out = (d_owned[None], (t_rounds + r_iters)[None], count[None])
+        if trace:
+            out = out + (r_state[3][None],)
+        return out
 
     shard_fn = jax.shard_map(
         body,
         mesh=mesh,
         in_specs=({k: spec for k in graph_array_keys(pg)}, P(), P(), P()),
-        out_specs=(spec, spec, spec),
+        out_specs=(spec, spec, spec) + ((spec,) if trace else ()),
         check_vma=False,
     )
     return jax.jit(shard_fn)

@@ -95,7 +95,15 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump EngineStats + run identity as JSON")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="export the §18 per-level flight-recorder trace "
+                         "of one traversal (first root) as Perfetto/Chrome "
+                         "trace_event JSON; --algo bfs additionally "
+                         "host-times every level so spans carry real "
+                         "durations")
     args = ap.parse_args(argv)
+    if args.trace and args.pallas:
+        ap.error("--trace instruments the XLA path; drop --pallas")
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}"
@@ -174,6 +182,21 @@ def main(argv=None) -> int:
                   "delta": args.delta, "max_weight": max_weight,
                   "use_pallas": bool(args.pallas)}
 
+    def export_trace(trace) -> dict:
+        """Write the Perfetto doc and return the JSON trace table (lands
+        in --stats-json as a ``trace`` extra)."""
+        from repro.core import flightrec
+
+        doc = flightrec.trace_chrome_doc(trace)
+        with open(args.trace, "w") as f:
+            json.dump(doc, f, indent=1)
+        s = trace.summary()
+        print(f"trace: {s['levels']} levels ({s['dense_levels']} dense / "
+              f"{s['sparse_levels']} sparse / {s['fallback_levels']} "
+              f"fallback), {s['bytes_per_node_total']:.0f} sync B/node "
+              f"-> {args.trace}")
+        return trace.to_dict()
+
     if args.algo == "sssp":
         from repro.traversal import sssp as sssp_mod
 
@@ -204,6 +227,19 @@ def main(argv=None) -> int:
             f"devices={args.devices}: time {t.mean()*1e3:.1f}ms  "
             f"GRelax/s {np.mean(rates):.4f} (host-simulated devices)"
         )
+        trace_doc = None
+        if args.trace:
+            from repro.core import flightrec
+
+            n_rows = sssp_mod.dist_rows(pg)
+            tfn = sssp_mod.build_sssp_fn(pg, mesh, scfg, trace=True)
+            _, _, _, buf = tfn(arrays, np.int32(roots[0]))
+            trace_doc = export_trace(flightrec.TraversalTrace.from_buffer(
+                np.asarray(buf), algo="sssp", sync=scfg.sync, p=pg.p,
+                fanout=scfg.fanout, n_words=n_rows,
+                capacity=scfg.resolved_capacity(n_rows),
+                density_threshold=scfg.density_threshold,
+            ))
         if args.stats_json:
             from repro.analytics.engine import EngineStats
 
@@ -215,6 +251,7 @@ def main(argv=None) -> int:
                 engine_stats=EngineStats(
                     sssp_queries=len(roots), relaxed_edges=relaxed_total
                 ),
+                **({"trace": trace_doc} if trace_doc else {}),
             )
         return 0
 
@@ -235,6 +272,24 @@ def main(argv=None) -> int:
         )
         print("top-5 central vertices:",
               ", ".join(f"{v}={bc_scores[v]:.1f}" for v in top))
+        trace_doc = None
+        if args.trace:
+            from repro.analytics import msbfs as ms
+            from repro.core import flightrec
+            from repro.traversal import bc as bc_mod
+
+            # flattened lane-word buffer the forward-wave sync exchanges
+            n_flat = ms.wave_rows(pg) * ms.lane_words(lanes)
+            arrays = bfs.place_arrays(pg, mesh, cfg.axes)
+            tfn = bc_mod.build_bc_fn(pg, mesh, cfg, lanes, trace=True)
+            out = tfn(arrays, np.asarray(
+                (roots[:lanes] + [-1] * lanes)[:lanes], np.int32))
+            trace_doc = export_trace(flightrec.TraversalTrace.from_buffer(
+                np.asarray(out[-1]), algo="bc", sync=cfg.sync, p=pg.p,
+                fanout=cfg.fanout, n_words=n_flat,
+                capacity=cfg.resolved_capacity(n_flat),
+                density_threshold=cfg.density_threshold,
+            ))
         if args.stats_json:
             write_stats_json(
                 args.stats_json, algo="bc", graph=graph_doc,
@@ -242,6 +297,7 @@ def main(argv=None) -> int:
                 timing_ms={"mean": dt * 1e3 / max(n_roots, 1),
                            "total": dt * 1e3},
                 engine_stats=eng.stats,
+                **({"trace": trace_doc} if trace_doc else {}),
             )
         return 0
 
@@ -261,6 +317,24 @@ def main(argv=None) -> int:
             f"waves  ({n_roots/dt:.1f} searches/s, aggregate GTEP/s "
             f"{eng.stats.scanned_edges/dt/1e9:.4f}; host-simulated devices)"
         )
+        trace_doc = None
+        if args.trace:
+            from repro.analytics import msbfs as ms
+            from repro.core import flightrec
+
+            n_flat = ms.wave_rows(pg) * ms.lane_words(args.num_sources)
+            arrays = bfs.place_arrays(pg, mesh, cfg.axes)
+            tfn = ms.build_msbfs_fn(pg, mesh, cfg, args.num_sources,
+                                    trace=True)
+            wave = (roots[: args.num_sources]
+                    + [-1] * args.num_sources)[: args.num_sources]
+            _, _, _, buf = tfn(arrays, np.asarray(wave, np.int32))
+            trace_doc = export_trace(flightrec.TraversalTrace.from_buffer(
+                np.asarray(buf), algo="msbfs", sync=cfg.sync, p=pg.p,
+                fanout=cfg.fanout, n_words=n_flat,
+                capacity=cfg.resolved_capacity(n_flat),
+                density_threshold=cfg.density_threshold,
+            ))
         if args.stats_json:
             write_stats_json(
                 args.stats_json, algo="bfs", graph=graph_doc,
@@ -268,6 +342,7 @@ def main(argv=None) -> int:
                 timing_ms={"mean": dt * 1e3 / max(n_roots, 1),
                            "total": dt * 1e3},
                 engine_stats=eng.stats,
+                **({"trace": trace_doc} if trace_doc else {}),
             )
         return 0
 
@@ -304,6 +379,16 @@ def main(argv=None) -> int:
         f"GTEP/s {g_.mean():.4f} (host-simulated devices; "
         f"see EXPERIMENTS.md for the measurement caveat)"
     )
+    trace_doc = None
+    if args.trace:
+        from repro.core import flightrec
+
+        # host-timed segmented execution: per-level wall clock next to the
+        # in-program sync/branch/byte attribution (DESIGN.md §18)
+        _, tr = flightrec.timed_bfs_levels(
+            pg, mesh, cfg, roots[0], arrays=arrays
+        )
+        trace_doc = export_trace(tr)
     if args.stats_json:
         from repro.analytics.engine import EngineStats
 
@@ -316,6 +401,7 @@ def main(argv=None) -> int:
                 queries=len(roots), waves=len(roots),
                 scanned_edges=scanned_total, max_levels=max_lvl,
             ),
+            **({"trace": trace_doc} if trace_doc else {}),
         )
     return 0
 

@@ -90,9 +90,19 @@ def main(argv=None) -> int:
                          "(requires --replicas > 1 to stay available)")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="seed for fault victim draws (default: --seed)")
+    ap.add_argument("--router-timeout-s", type=float, default=30.0,
+                    help="router per-request budget before the hedged "
+                         "duplicate fires (replicated path only); lower it "
+                         "with a stall chaos spec to see the hedge in a "
+                         "short --trace run")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump telemetry + engine stats as JSON")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="export a §18 cross-stack request trace as "
+                         "Perfetto/Chrome trace_event JSON (load at "
+                         "ui.perfetto.dev); FILE.jsonl gets the raw "
+                         "event stream")
     args = ap.parse_args(argv)
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
@@ -124,6 +134,10 @@ def main(argv=None) -> int:
         g = generators.kronecker(args.scale, args.edge_factor, seed=seed)
         return g, partition.partition_1d(g, args.devices)
 
+    from repro.core.tracing import NULL_TRACER, Tracer
+
+    tracer = Tracer() if args.trace else NULL_TRACER
+
     g, pg = build(args.seed)
     print(f"graph: n={g.n_real:,} m={g.n_edges:,}")
     mesh = jax.make_mesh((args.devices,), ("data",),
@@ -143,28 +157,34 @@ def main(argv=None) -> int:
     if replicated:
         replicas = [
             Replica(i, g, args.devices, cfg, mesh=mesh, lanes=args.lanes,
-                    n_real=g.n_real, service_kw=dict(service_kw))
+                    n_real=g.n_real, service_kw=dict(service_kw),
+                    tracer=tracer if args.trace else None)
             for i in range(args.replicas)
         ]
         for r in replicas:  # warmup / compile before measuring
             r.submit("bfs", hot).result(600.0)
             r.svc.reset_telemetry()
+        tracer.clear()  # warmup spans must not pollute the exported trace
         injector = FaultInjector.from_spec(
             args.chaos,
             args.seed if args.chaos_seed is None else args.chaos_seed,
             args.replicas,
         )
-        router = ReplicaRouter(replicas, injector=injector)
+        router = ReplicaRouter(replicas, injector=injector,
+                               timeout_s=args.router_timeout_s,
+                               tracer=tracer if args.trace else None)
         svc = replicas[0].svc  # overlay source for sampled batches
         if args.chaos:
             print(f"chaos: {args.chaos} -> "
                   f"{json.dumps(injector.schedule_json())}")
     else:
         svc = GraphQueryService(
-            pg, mesh, cfg, lanes=args.lanes, n_real=g.n_real, **service_kw
+            pg, mesh, cfg, lanes=args.lanes, n_real=g.n_real,
+            tracer=tracer if args.trace else None, **service_kw
         )
         svc.query("bfs", hot)  # warmup / compile
         svc.reset_telemetry()  # compiles must not pollute measured latency
+        tracer.clear()  # same for the exported trace
     print(f"serving: replicas={args.replicas} lanes={args.lanes} "
           f"sync={args.sync} linger={args.linger_ms}ms qps={args.qps} "
           f"deadline={args.deadline_ms or 'none'}ms")
@@ -292,6 +312,11 @@ def main(argv=None) -> int:
         router.stop()
     else:
         svc.stop()
+    if args.trace:
+        n_ev = tracer.write_chrome(args.trace)
+        tracer.write_jsonl(args.trace + "l")  # FILE.json -> FILE.jsonl
+        print(f"trace ({n_ev} events) -> {args.trace} "
+              f"(Perfetto/chrome://tracing) + {args.trace}l")
     return 0
 
 

@@ -33,12 +33,14 @@ cold-started; an identity swap is free.
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import Future
 from typing import Optional, Tuple
 
 import numpy as np
 
 from repro.analytics import measures
+from repro.core.tracing import NULL_TRACER
 from repro.analytics.engine import BFSQueryEngine
 from repro.core.bfs import BFSConfig
 from repro.dynamic import delta as delta_mod
@@ -92,9 +94,13 @@ class GraphQueryService:
         start: bool = True,
         compact_ratio: float = 0.25,
         repair_budget: Optional[int] = None,
+        tracer=None,
     ):
         self.mesh = mesh
         self.cfg = cfg
+        # §18 request tracing: a shared repro.core.tracing.Tracer (one per
+        # process, possibly shared across replicas) or the no-op default
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.lanes = lanes
         self.n_real = int(n_real) if n_real is not None else pg.n
         self.default_deadline_s = default_deadline_s
@@ -148,14 +154,17 @@ class GraphQueryService:
     # --- submission path --------------------------------------------------
 
     def submit(
-        self, algo: str, root: int, deadline_s: Optional[float] = None
+        self, algo: str, root: int, deadline_s: Optional[float] = None,
+        *, trace_id: str = "",
     ) -> Future:
         """Enqueue one root query; returns a future resolving to the algo's
         payload (``bfs``/``sssp``: ``int64[n]`` distances, ``closeness``:
         float, ``bc``: this source's Brandes dependency vector
         ``float64[n]``).  Cache hits resolve synchronously without touching
         the queue.  Raises :class:`AdmissionError` on overload and
-        :class:`ValueError` on bad algo/root."""
+        :class:`ValueError` on bad algo/root.  ``trace_id`` correlates the
+        request's §18 spans (minted here when tracing is on and the
+        caller — e.g. the §17 router — did not already assign one)."""
         epoch, engine = self._state
         if self._stopped or self.scheduler.dead:
             # a dead scheduler thread must refuse work, not absorb it:
@@ -171,6 +180,8 @@ class GraphQueryService:
                 raise ValueError("sssp requires a weighted graph")
             self.sssp_cfg  # raises early when the sync has no SSSP analogue
         self.telemetry.record_submit()
+        if self.tracer.enabled and not trace_id:
+            trace_id = self.tracer.new_trace_id()
         if deadline_s is None:
             deadline_s = self.default_deadline_s
         hit, value = self.cache_lookup(epoch, engine, algo, root)
@@ -178,11 +189,25 @@ class GraphQueryService:
             fut: Future = Future()
             fut.set_result(value)
             self.telemetry.record_completed(0.0, True)
+            self.tracer.instant(
+                f"cache-hit:{algo}", track="queue", trace_id=trace_id,
+                args={"algo": algo, "root": root},
+            )
             return fut
         try:
-            return self.queue.submit(algo, root, deadline_s).future
+            req = self.queue.submit(algo, root, deadline_s,
+                                    trace_id=trace_id)
+            self.tracer.instant(
+                f"submit:{algo}", track="queue", trace_id=trace_id,
+                args={"algo": algo, "root": root}, t=req.submit_t,
+            )
+            return req.future
         except AdmissionError:
             self.telemetry.record_rejected()
+            self.tracer.instant(
+                "admission-reject", track="queue", trace_id=trace_id,
+                args={"algo": algo, "root": root},
+            )
             raise
 
     def query(
@@ -354,6 +379,10 @@ class GraphQueryService:
                 # dropping every cached row (honest survival accounting)
                 g = overlay.compact()
                 pg = partition_mod.partition_1d(g, engine.pg.p)
+                self.tracer.instant(
+                    "compaction", track="mutation",
+                    args={"epoch": str(old_version)},
+                )
                 self.telemetry.record_compaction()
                 self.telemetry.record_mutation(InvalidationStats(
                     rows_before=len(self.cache), dropped=len(self.cache),
@@ -366,11 +395,21 @@ class GraphQueryService:
             engine.refresh_arrays()
             version = old_version.bump_delta()
             self._state = (version, engine)
+            t_rep = time.monotonic()
             stats = versioning.migrate_cache(
                 self.cache, old_version, version,
                 repairers=self._repairers(update, engine),
                 derive_closeness=self._closeness,
             )
+            dt_rep = time.monotonic() - t_rep
+            self.telemetry.record_stage("repair", dt_rep)
+            if self.tracer.enabled:
+                self.tracer.add_span(
+                    "repair", t_rep, t_rep + dt_rep, track="mutation",
+                    args={"version": str(version), "kept": stats.kept,
+                          "repaired": stats.repaired,
+                          "dropped": stats.dropped},
+                )
             self.cache.drop_stale(version)
             self.telemetry.record_mutation(stats)
             return version

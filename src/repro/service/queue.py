@@ -83,7 +83,10 @@ class ServiceStopped(RuntimeError):
 @dataclasses.dataclass
 class QueryRequest:
     """One pending root query.  ``deadline_t`` is absolute monotonic time
-    (``None`` = best-effort, never expires)."""
+    (``None`` = best-effort, never expires).  ``trace_id`` correlates the
+    request's §18 spans across the stack (empty = untraced); ``drain_t``
+    is stamped by the scheduler when it pops the request off the queue —
+    the queue-wait / coalesce-linger boundary."""
 
     algo: str
     root: int
@@ -91,6 +94,8 @@ class QueryRequest:
     submit_t: float
     deadline_t: Optional[float]
     seq: int
+    trace_id: str = ""
+    drain_t: float = 0.0
 
     def expired(self, now: float) -> bool:
         return self.deadline_t is not None and now >= self.deadline_t
@@ -115,6 +120,7 @@ class SubmissionQueue:
         deadline_s: Optional[float] = None,
         *,
         now: Optional[float] = None,
+        trace_id: str = "",
     ) -> QueryRequest:
         """Enqueue and wake the scheduler; raises :class:`AdmissionError`
         on overload/unmeetable deadline, :class:`ServiceStopped` after
@@ -144,6 +150,7 @@ class SubmissionQueue:
                 submit_t=now,
                 deadline_t=None if deadline_s is None else now + deadline_s,
                 seq=self._seq,
+                trace_id=trace_id,
             )
             self._seq += 1
             self._items.append(req)

@@ -71,6 +71,7 @@ class Replica:
         lanes: int = 32,
         n_real: Optional[int] = None,
         service_kw: Optional[dict] = None,
+        tracer=None,
     ):
         self.id = int(replica_id)
         self.base_graph = graph  # pristine CSR: recovery rebuilds from it
@@ -79,6 +80,10 @@ class Replica:
         self.lanes = lanes
         self.n_real = n_real if n_real is not None else graph.n_real
         self.service_kw = dict(service_kw or {})
+        if tracer is not None:
+            # §18: replicas share the router's tracer so every layer's
+            # spans land on one timeline (rebuilt services inherit it too)
+            self.service_kw.setdefault("tracer", tracer)
         self.mesh = mesh if mesh is not None else self._own_mesh()
         # TWO locks, never nested the other way around: ``_lock`` guards
         # health state and is taken from the engine's future-resolution
@@ -139,15 +144,18 @@ class Replica:
         return self.svc.epoch
 
     def submit(self, algo: str, root: int,
-               deadline_s: Optional[float] = None) -> Future:
+               deadline_s: Optional[float] = None, *,
+               trace_id: str = "") -> Future:
         """Route one query into this replica's service.  Raises
         :class:`ReplicaUnavailable` when not serving — the router treats
-        that exactly like a failed future (failover, no client impact)."""
+        that exactly like a failed future (failover, no client impact).
+        ``trace_id`` carries the router-minted §18 correlation id down
+        into the service's queue/scheduler/engine spans."""
         if not self.serving:
             raise ReplicaUnavailable(
                 f"replica {self.id} is {self.state} (not serving)"
             )
-        return self.svc.submit(algo, root, deadline_s)
+        return self.svc.submit(algo, root, deadline_s, trace_id=trace_id)
 
     def heartbeat(self) -> bool:
         """Liveness probe: the scheduler thread must be alive and the
@@ -231,6 +239,10 @@ class Replica:
         with self._lock:
             self.state = DEAD
             self.kills += 1
+            self.svc.tracer.instant(
+                "replica-killed", track=f"replica-{self.id}", cat="chaos",
+                args={"kills": self.kills},
+            )
             self.svc.stop(join=False)
 
     def recover(self, log: List[Tuple[int, object]]) -> None:

@@ -47,6 +47,7 @@ from collections import OrderedDict, deque
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core.tracing import NULL_TRACER
 from repro.service import faults as faults_mod
 from repro.service.queue import (
     AdmissionError,
@@ -91,9 +92,10 @@ class _Ticket:
 
     __slots__ = ("algo", "root", "deadline_s", "min_seq", "tenant",
                  "client", "submit_t", "attempts", "hedged", "tried",
-                 "lock")
+                 "lock", "trace_id")
 
-    def __init__(self, algo, root, deadline_s, min_seq, tenant, now):
+    def __init__(self, algo, root, deadline_s, min_seq, tenant, now,
+                 trace_id=""):
         self.algo = algo
         self.root = root
         self.deadline_s = deadline_s
@@ -105,6 +107,7 @@ class _Ticket:
         self.hedged = False
         self.tried = set()  # replica ids dispatched to
         self.lock = threading.Lock()
+        self.trace_id = trace_id
 
 
 class RouterTelemetry:
@@ -162,7 +165,9 @@ class RouterTelemetry:
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "failed": self.failed,
-                "qps": self.completed / elapsed,
+                # empty window (no completions, e.g. right after a warmup
+                # telemetry reset): exactly 0.0, never a denormal ratio
+                "qps": self.completed / elapsed if self.completed else 0.0,
                 "latency_ms": {
                     **percentiles(lat_ms),
                     "mean": sum(lat_ms) / len(lat_ms) if lat_ms else 0.0,
@@ -193,6 +198,7 @@ class ReplicaRouter:
         injector: Optional[faults_mod.FaultInjector] = None,
         auto_recover: bool = True,
         start: bool = True,
+        tracer=None,
     ):
         if not replicas:
             raise ValueError("router needs at least one replica")
@@ -208,6 +214,9 @@ class ReplicaRouter:
         self.heartbeat_interval_s = heartbeat_interval_s
         self.injector = injector
         self.auto_recover = auto_recover
+        # §18 request tracing (share ONE tracer with the replicas' services
+        # so every layer's spans land on a single timeline)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.telemetry = RouterTelemetry()
         # replication log: batches in seq order (seq = 1-based index)
         self._log: List[Any] = []
@@ -407,7 +416,10 @@ class ReplicaRouter:
         self.telemetry.bump("submitted")
         self._admit(tenant)
         now = time.monotonic()
-        ticket = _Ticket(algo, root, deadline_s, min_seq, tenant, now)
+        trace_id = (self.tracer.new_trace_id() if self.tracer.enabled
+                    else "")
+        ticket = _Ticket(algo, root, deadline_s, min_seq, tenant, now,
+                         trace_id)
         ticket.client.add_done_callback(self._finish(ticket))
         try:
             stall = None
@@ -415,8 +427,19 @@ class ReplicaRouter:
             if self.injector is not None:
                 for fault in self.injector.on_op(op):
                     if fault.kind == "kill-replica":
+                        self.tracer.instant(
+                            "chaos:kill-replica", track="router",
+                            cat="chaos", trace_id=trace_id,
+                            args={"victim": fault.victim, "op": op},
+                        )
                         self._kill(fault.victim)
                     elif fault.kind == "stall-wave":
+                        self.tracer.instant(
+                            "chaos:stall-wave", track="router",
+                            cat="chaos", trace_id=trace_id,
+                            args={"victim": fault.victim, "op": op,
+                                  "delay_s": fault.delay_s},
+                        )
                         stall = fault
             victim = (self.replicas[stall.victim]
                       if stall is not None else None)
@@ -460,18 +483,27 @@ class ReplicaRouter:
             self._release(ticket.tenant)
             if fut.cancelled():
                 return
+            now = time.monotonic()
             exc = fut.exception()
+            args = {"algo": ticket.algo, "root": ticket.root,
+                    "attempts": ticket.attempts, "hedged": ticket.hedged}
             if exc is None:
                 res = fut.result()
                 self.telemetry.bump("completed")
-                self.telemetry.record_latency(
-                    time.monotonic() - ticket.submit_t
-                )
+                self.telemetry.record_latency(now - ticket.submit_t)
                 if not res.stale:
                     self._stale_put(ticket.algo, ticket.root,
                                     res.value, res.seq)
+                args["stale"] = res.stale
+                args["replica"] = res.replica
             else:
                 self.telemetry.bump("failed")
+                args["error"] = type(exc).__name__
+            if self.tracer.enabled:
+                self.tracer.add_span(
+                    f"route:{ticket.algo}", ticket.submit_t, now,
+                    track="router", trace_id=ticket.trace_id, args=args,
+                )
         return cb
 
     # --- dispatch / failover / hedging ------------------------------------
@@ -510,24 +542,53 @@ class ReplicaRouter:
             self._inflight_replica[replica.id] = (
                 self._inflight_replica.get(replica.id, 0) + 1
             )
+        t_att = time.monotonic()
         try:
-            inner = replica.submit(ticket.algo, ticket.root,
-                                   ticket.deadline_s)
+            # keep the legacy call shape when tracing is off so replica-like
+            # stand-ins (tests, adapters) that predate trace_id still work
+            if ticket.trace_id:
+                inner = replica.submit(ticket.algo, ticket.root,
+                                       ticket.deadline_s,
+                                       trace_id=ticket.trace_id)
+            else:
+                inner = replica.submit(ticket.algo, ticket.root,
+                                       ticket.deadline_s)
         except Exception as exc:
             with self._adm_lock:
                 self._inflight_replica[replica.id] -= 1
+            self._attempt_span(ticket, replica, t_att, exc)
             self._on_failure(ticket, replica, exc)
             return
         inner.add_done_callback(
-            lambda fut: self._on_inner(ticket, replica, seq0, fut)
+            lambda fut: self._on_inner(ticket, replica, seq0, t_att, fut)
         )
 
-    def _on_inner(self, ticket: _Ticket, replica, seq0: int, fut: Future):
+    def _attempt_span(self, ticket: _Ticket, replica, t_att: float,
+                      exc: Optional[BaseException]) -> None:
+        """One per-replica dispatch attempt on the replica's own track.  A
+        killed replica's in-flight work shows up as exactly this span with
+        an ``error`` annotation (``ServiceStopped``/``ReplicaUnavailable``)
+        — the §17 chaos narrative made visible in Perfetto."""
+        if not self.tracer.enabled:
+            return
+        args = {"algo": ticket.algo, "root": ticket.root,
+                "attempt": ticket.attempts}
+        if exc is not None:
+            args["error"] = type(exc).__name__
+        self.tracer.add_span(
+            f"attempt:{ticket.algo}", t_att, time.monotonic(),
+            track=f"replica-{replica.id}", trace_id=ticket.trace_id,
+            args=args,
+        )
+
+    def _on_inner(self, ticket: _Ticket, replica, seq0: int, t_att: float,
+                  fut: Future):
         with self._adm_lock:
             self._inflight_replica[replica.id] -= 1
         if fut.cancelled():
             return
         exc = fut.exception()
+        self._attempt_span(ticket, replica, t_att, exc)
         if exc is None:
             replica.mark_healthy()
             resolve_future(ticket.client, result=RoutedResult(
@@ -559,6 +620,13 @@ class ReplicaRouter:
                  if may_retry and not self._closed else None)
         if other is not None:
             self.telemetry.bump("retries")
+            self.tracer.instant(
+                f"retry:{ticket.algo}", track="router", cat="retry",
+                trace_id=ticket.trace_id,
+                args={"root": ticket.root, "failed": replica.id,
+                      "retry_to": other.id,
+                      "error": type(exc).__name__},
+            )
             self._dispatch(ticket, other)
         else:
             self._serve_degraded(ticket, exc)
@@ -574,6 +642,11 @@ class ReplicaRouter:
                 hedged=ticket.hedged, retried=ticket.attempts > 1,
             )):
                 self.telemetry.bump("stale_serves")
+                self.tracer.instant(
+                    f"stale-serve:{ticket.algo}", track="router",
+                    trace_id=ticket.trace_id,
+                    args={"root": ticket.root, "seq": seq},
+                )
             return
         resolve_future(ticket.client, exception=fallback)
 
@@ -641,6 +714,12 @@ class ReplicaRouter:
         if other is None:
             return  # nowhere to hedge; the hard timeout is the backstop
         self.telemetry.bump("hedges")
+        self.tracer.instant(
+            f"hedge:{ticket.algo}", track="router", cat="hedge",
+            trace_id=ticket.trace_id,
+            args={"root": ticket.root, "slow": sorted(slow),
+                  "hedge_to": other.id},
+        )
         self._dispatch(ticket, other)
 
     # --- health + catch-up ------------------------------------------------
@@ -664,7 +743,12 @@ class ReplicaRouter:
             if r.state == DEAD:
                 if self.auto_recover:
                     try:
-                        r.recover(self.log_entries())
+                        with self.tracer.span(
+                            "recover", track=f"replica-{r.id}",
+                            cat="recovery",
+                            args={"log_seq": self.latest_seq},
+                        ):
+                            r.recover(self.log_entries())
                         self.telemetry.bump("recoveries")
                     except Exception:
                         pass  # stays DEAD; retried next sweep
@@ -686,6 +770,7 @@ class ReplicaRouter:
         number of batches actually applied."""
         applied = 0
         head = self.latest_seq
+        t0 = time.monotonic()
         for r in self.replicas:
             if r.state in (DEAD, RECOVERING):
                 continue
@@ -697,6 +782,13 @@ class ReplicaRouter:
                     applied += 1
         if applied:
             self.telemetry.bump("catch_up_batches", applied)
+            if self.tracer.enabled:
+                # recorded only when batches actually moved, so the
+                # heartbeat's idle sweeps never flood the trace
+                self.tracer.add_span(
+                    "catch-up", t0, time.monotonic(), track="router",
+                    cat="recovery", args={"batches": applied},
+                )
         return applied
 
     # --- degraded-mode stale cache ----------------------------------------

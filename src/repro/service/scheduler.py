@@ -168,9 +168,10 @@ class WaveScheduler:
             svc.queue.wait(timeout)
             if self._stop.is_set():
                 return
-            for req in svc.queue.drain():
-                pending[WAVE_CLASS[req.algo]].append(req)
             now = time.monotonic()
+            for req in svc.queue.drain():
+                req.drain_t = now  # queue-wait / coalesce boundary (§18)
+                pending[WAVE_CLASS[req.algo]].append(req)
             for cls in ("bfs", "sssp", "bc"):
                 reqs = pending[cls]
                 if reqs and self._ready(cls, reqs, now):
@@ -239,15 +240,48 @@ class WaveScheduler:
                 return
 
             roots = sorted(by_root)
+            # §18 stage breakdown: queued-until-drained, then lingered in
+            # the coalescing window until this dispatch instant
             t0 = time.monotonic()
+            tracer = svc.tracer
+            for group in by_root.values():
+                for r in group:
+                    drain_t = r.drain_t or t0
+                    svc.telemetry.record_stage(
+                        "queue_wait", drain_t - r.submit_t
+                    )
+                    svc.telemetry.record_stage("coalesce", t0 - drain_t)
+                    if tracer.enabled:
+                        tracer.add_span(
+                            f"queue-wait:{r.algo}", r.submit_t, drain_t,
+                            track="queue", trace_id=r.trace_id,
+                            args={"algo": r.algo, "root": r.root},
+                        )
+                        tracer.add_span(
+                            f"coalesce:{cls}", drain_t, t0,
+                            track="scheduler", trace_id=r.trace_id,
+                            args={"algo": r.algo, "root": r.root},
+                        )
             results, engine_waves, offered = self._execute(
                 engine, epoch, cls, roots
             )
+            dt_engine = time.monotonic() - t0
+            svc.telemetry.record_stage("engine", dt_engine)
+            if tracer.enabled:
+                tracer.add_span(
+                    f"wave:{cls}", t0, t0 + dt_engine, track="engine",
+                    args={
+                        "cls": cls, "roots": len(roots),
+                        "engine_waves": engine_waves, "riders": n_riders,
+                        "trace_ids": [r.trace_id for g in by_root.values()
+                                      for r in g][:8],
+                    },
+                )
             n_calls = max(1, (engine_waves if cls != "bfs"
                               else -(-len(roots) // self.wave_width(cls))))
             self._est[cls] = (
                 0.7 * self._est[cls]
-                + 0.3 * (time.monotonic() - t0) / n_calls
+                + 0.3 * dt_engine / n_calls
             )
             svc.telemetry.record_dispatch(
                 engine_waves=engine_waves,

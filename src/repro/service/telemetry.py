@@ -35,6 +35,13 @@ def percentiles(values, points=(50.0, 95.0, 99.0)) -> Dict[str, float]:
     return out
 
 
+#: per-request lifecycle stages with their own latency reservoirs
+#: (DESIGN.md §18): time spent queued before the scheduler drained the
+#: request, linger inside the coalescing window, the engine-execution
+#: window of its wave, and the device-repair portion of a mutation batch.
+STAGES = ("queue_wait", "coalesce", "engine", "repair")
+
+
 class Telemetry:
     """Counters + latency reservoir for one :class:`GraphQueryService`."""
 
@@ -43,6 +50,7 @@ class Telemetry:
         self._clock = clock
         self._t0 = clock()
         self._latencies = deque(maxlen=latency_window)
+        self._stages = {s: deque(maxlen=latency_window) for s in STAGES}
         # request lifecycle
         self.submitted = 0
         self.completed = 0
@@ -89,6 +97,16 @@ class Telemetry:
             if not deadline_met:
                 self.deadline_misses += 1
 
+    def record_stage(self, stage: str, seconds: float) -> None:
+        """Add one sample to a per-stage latency reservoir (§18 request
+        breakdown); ``stage`` must be one of :data:`STAGES`."""
+        if stage not in self._stages:
+            raise ValueError(
+                f"unknown stage {stage!r}; expected one of {STAGES}"
+            )
+        with self._lock:
+            self._stages[stage].append(seconds)
+
     # --- dispatch path ----------------------------------------------------
 
     def record_dispatch(
@@ -123,7 +141,15 @@ class Telemetry:
 
     def snapshot(self, **extra: Any) -> Dict[str, Any]:
         """JSON-serializable state; keyword extras (e.g. ``cache=...``,
-        ``pending=...``, ``epoch=...``) are merged in verbatim."""
+        ``pending=...``, ``epoch=...``) are merged in verbatim.  An extra
+        whose name collides with a core snapshot key raises ``ValueError``
+        — extras must never silently shadow measured telemetry.
+
+        Warmup-reset contract: ``uptime_s`` (and so ``qps``) is measured
+        from construction time; services replace their ``Telemetry``
+        wholesale after warmup (``reset_telemetry``) so compile time never
+        dilutes the rate.  An empty window — zero completions — reports
+        ``qps: 0.0`` exactly, never a denormal from a near-zero uptime."""
         with self._lock:
             elapsed = max(self._clock() - self._t0, 1e-9)
             lat_ms = [v * 1e3 for v in self._latencies]
@@ -136,11 +162,22 @@ class Telemetry:
                 "expired": self.expired,
                 "failed": self.failed,
                 "deadline_misses": self.deadline_misses,
-                "qps": self.completed / elapsed,
+                "qps": self.completed / elapsed if self.completed else 0.0,
                 "latency_ms": {
                     **percentiles(lat_ms),
                     "mean": sum(lat_ms) / len(lat_ms) if lat_ms else 0.0,
                     "count": len(lat_ms),
+                },
+                "stages_ms": {
+                    s: {
+                        **percentiles(ms),
+                        "mean": sum(ms) / len(ms) if ms else 0.0,
+                        "count": len(ms),
+                    }
+                    for s, ms in (
+                        (s, [v * 1e3 for v in d])
+                        for s, d in self._stages.items()
+                    )
                 },
                 "dispatches": self.dispatches,
                 "engine_waves": self.engine_waves,
@@ -164,5 +201,10 @@ class Telemetry:
                     ),
                 },
             }
+        collisions = sorted(set(snap) & set(extra))
+        if collisions:
+            raise ValueError(
+                f"snapshot extras would overwrite core keys: {collisions}"
+            )
         snap.update(extra)
         return snap

@@ -117,7 +117,8 @@ def _sync_add(buf: jax.Array, cfg: BFSConfig) -> jax.Array:
 
 
 def build_bc_fn(
-    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: BFSConfig, n_lanes: int
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: BFSConfig,
+    n_lanes: int, *, trace: bool = False, trace_levels=None,
 ):
     """Compile-ready B-lane betweenness centrality.
 
@@ -126,6 +127,13 @@ def build_bc_fn(
     dependency sums ``float32[P, vmax]`` (the BC contribution of this
     wave's sources, root rows excluded per lane), wave depth ``int32[P]``,
     and edges examined ``float32[P]``.
+
+    ``trace=True`` appends the §18 flight-recorder buffer for the FORWARD
+    wave's frontier OR sync (the backward replay makes no sparse/direction
+    decisions — it re-walks the recorded levels with the dense ADD merge,
+    one extra dense sync per level, which ``TraversalTrace.summary()``
+    reports as ``extra_dense_syncs``).  ``trace=False`` stages the exact
+    uninstrumented program.
     """
     if n_lanes < 1:
         raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
@@ -143,6 +151,10 @@ def build_bc_fn(
     vmax = pg.vmax
     max_levels = cfg.max_levels if cfg.max_levels is not None else pg.n
     spec = P(cfg.axes if len(cfg.axes) > 1 else cfg.axes[0])
+    if trace:
+        from repro.core import flightrec
+
+        t_levels = flightrec.resolve_trace_levels(trace_levels, max_levels)
 
     def body(arrays, roots):
         arrays = jax.tree.map(lambda a: a[0], arrays)
@@ -177,13 +189,17 @@ def build_bc_fn(
 
         # ---- forward wave: frontier expansion + sigma accumulation ------
         def fcond(state):
-            frontier, seen, lvl, sigma, level, scanned = state
+            frontier, seen, lvl, sigma, level, scanned = state[:6]
             return (fr.popcount(frontier) > 0) & (level < max_levels)
 
         def fstep(state):
-            frontier, seen, lvl, sigma, level, scanned = state
+            frontier, seen, lvl, sigma, level, scanned = state[:6]
 
             gq = _expand_push(arrays, frontier, n_rows, False, lanes=True)
+            if trace:
+                t_words, t_branch, t_shipped = flightrec.or_sync_stats(
+                    gq.reshape(-1), cfg
+                )
             merged = _sync_frontier(gq.reshape(-1), cfg).reshape(n_rows, bw)
             new = merged & ~seen
 
@@ -210,7 +226,7 @@ def build_bc_fn(
             ) & owned_mask[:, None]
             m_f = (arrays["deg_out"][:, None] * owned_front).sum()
 
-            return (
+            out = (
                 new,
                 seen | new,
                 lvl,
@@ -218,9 +234,19 @@ def build_bc_fn(
                 level + 1,
                 scanned + m_f.astype(jnp.float32),
             )
+            if trace:
+                row = flightrec.trace_row(
+                    level, t_words, fr.popcount(new), jnp.int32(0), t_branch,
+                    t_shipped, jnp.count_nonzero(new).astype(jnp.int32),
+                )
+                out = out + (flightrec.record(state[6], level, row),)
+            return out
 
         finit = (seen0, seen0, lvl0, sigma0, jnp.int32(0), jnp.float32(0))
-        _, _, lvl, sigma, depth, scanned = lax.while_loop(fcond, fstep, finit)
+        if trace:
+            finit = finit + (flightrec.zeros(t_levels),)
+        fstate = lax.while_loop(fcond, fstep, finit)
+        _, _, lvl, sigma, depth, scanned = fstate[:6]
 
         # ---- backward replay: dependency accumulation, deepest first ----
         sig_src = sigma[osrc]
@@ -253,13 +279,16 @@ def build_bc_fn(
             axis=1
         )
         total_scanned = lax.psum(scanned, cfg.axes)
-        return bc_owned[None], depth[None], total_scanned[None]
+        out = (bc_owned[None], depth[None], total_scanned[None])
+        if trace:
+            out = out + (fstate[6][None],)
+        return out
 
     shard_fn = jax.shard_map(
         body,
         mesh=mesh,
         in_specs=({k: spec for k in graph_array_keys(pg)}, P()),
-        out_specs=(spec, spec, spec),
+        out_specs=(spec, spec, spec) + ((spec,) if trace else ()),
         check_vma=False,
     )
     return jax.jit(shard_fn)

@@ -150,7 +150,8 @@ def _sync_dist(
 
 
 def build_sssp_fn(
-    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: SSSPConfig
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, cfg: SSSPConfig,
+    *, trace: bool = False, trace_levels=None,
 ):
     """Compile-ready distributed SSSP.
 
@@ -158,6 +159,12 @@ def build_sssp_fn(
     graph pytree and ``root`` a replicated int32 scalar.  Output: per-device
     owned distances ``uint32[P, vmax]`` (:data:`UNREACHED` sentinel),
     iterations executed, and edges relaxed (the honest-TEPS analogue).
+
+    ``trace=True`` appends the §18 flight-recorder buffer
+    ``int32[P, trace_levels, TRACE_COLS]``: WORDS/SHIPPED are
+    changed-vs-reference distance words (the MIN-monoid sparse driver),
+    POP counts distances improved per iteration, DIR is always 0.
+    ``trace=False`` stages the exact uninstrumented program.
     """
     if pg.edge_weight is None:
         raise ValueError(
@@ -172,6 +179,10 @@ def build_sssp_fn(
     max_iters = cfg.max_iters if cfg.max_iters is not None else (1 << 30)
     spec = P(cfg.axes if len(cfg.axes) > 1 else cfg.axes[0])
     inf = jnp.uint32(UNREACHED)
+    if trace:
+        from repro.core import flightrec
+
+        t_levels = flightrec.resolve_trace_levels(trace_levels, max_iters)
 
     def body(arrays, root):
         arrays = jax.tree.map(lambda a: a[0], arrays)
@@ -184,11 +195,11 @@ def build_sssp_fn(
         changed = fr.set_bit(jnp.zeros((nw,), jnp.uint32), root)
 
         def cond(state):
-            dist, changed, bucket, it, relaxed = state
+            dist, changed, bucket, it, relaxed = state[:5]
             return (fr.popcount(changed) > 0) & (it < max_iters)
 
         def step(state):
-            dist, changed, bucket, it, relaxed = state
+            dist, changed, bucket, it, relaxed = state[:5]
 
             # -- bucket frontier selection (delta-stepping-style) ---------
             if cfg.delta:
@@ -208,31 +219,48 @@ def build_sssp_fn(
             relaxed_local = dist.at[dst].min(cand)
 
             # -- Phase 2: butterfly MIN synchronization -------------------
+            if trace:
+                t_words, t_branch, t_shipped = flightrec.monoid_sync_stats(
+                    relaxed_local, dist, cfg, capacity
+                )
             synced = _sync_dist(relaxed_local, dist, cfg, capacity)
 
             # -- changed-vertex frontier update ---------------------------
             improved = fr.pack(synced < dist)
             changed = (changed & ~active) | improved
 
-            return (
+            out = (
                 synced,
                 changed,
                 bucket,
                 it + 1,
                 relaxed + src_active.sum(dtype=jnp.float32),
             )
+            if trace:
+                row = flightrec.trace_row(
+                    it, t_words, fr.popcount(improved), jnp.int32(0),
+                    t_branch, t_shipped, fr.changed_count(synced, dist),
+                )
+                out = out + (flightrec.record(state[5], it, row),)
+            return out
 
         init = (dist, changed, jnp.uint32(0), jnp.int32(0), jnp.float32(0))
-        dist, changed, _, it, relaxed = lax.while_loop(cond, step, init)
+        if trace:
+            init = init + (flightrec.zeros(t_levels),)
+        state = lax.while_loop(cond, step, init)
+        dist, changed, _, it, relaxed = state[:5]
         total_relaxed = lax.psum(relaxed, cfg.axes)
         d_owned = lax.dynamic_slice(dist, (v_start,), (vmax,))
-        return d_owned[None], it[None], total_relaxed[None]
+        out = (d_owned[None], it[None], total_relaxed[None])
+        if trace:
+            out = out + (state[5][None],)
+        return out
 
     shard_fn = jax.shard_map(
         body,
         mesh=mesh,
         in_specs=({k: spec for k in graph_array_keys(pg)}, P()),
-        out_specs=(spec, spec, spec),
+        out_specs=(spec, spec, spec) + ((spec,) if trace else ()),
         check_vma=False,
     )
     return jax.jit(shard_fn)

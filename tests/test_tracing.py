@@ -1,0 +1,273 @@
+"""Unit tests for the cross-stack request-tracing layer (DESIGN.md §18):
+the span/instant collector, the Chrome/Perfetto + JSONL exporters, the
+hand-rolled schema validator and its CLI gate, and the telemetry
+regressions that rode along with the observability PR (snapshot-extra
+collision guard, empty-window qps, per-stage reservoirs).
+
+Everything here is stdlib + numpy only — no jax, no compiled programs —
+so the whole module runs in milliseconds as tier-1.
+"""
+
+import json
+import os
+import threading
+
+import pytest
+
+from repro.core import tracing
+from repro.core.tracing import NULL_TRACER, Tracer, validate_schema
+from repro.service.telemetry import STAGES, Telemetry
+
+SCHEMA_PATH = os.path.join(os.path.dirname(__file__), "trace_schema.json")
+
+
+def _schema():
+    with open(SCHEMA_PATH) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Tracer core
+# ---------------------------------------------------------------------------
+
+
+def test_add_span_and_instant_record_relative_microseconds():
+    t = iter([10.0, 10.5]).__next__  # constructor reads t0=10.0, instant 10.5
+    tr = Tracer(clock=t)
+    tr.add_span("wave", 10.1, 10.2, track="engine", cat="serve",
+                trace_id="abc", args={"roots": 3})
+    tr.instant("hedge", track="router")
+    evs = tr.events()
+    assert len(tr) == 2 and len(evs) == 2
+    span, inst = evs
+    assert span["kind"] == "span"
+    assert span["ts_us"] == 100_000 and span["dur_us"] == 100_000
+    assert span["track"] == "engine" and span["trace_id"] == "abc"
+    assert span["args"] == {"roots": 3}
+    assert inst["kind"] == "instant"
+    assert inst["ts_us"] == 500_000 and inst["dur_us"] == 0
+
+
+def test_span_context_manager_measures_and_mutates_args():
+    clock = iter([0.0, 1.0, 3.0]).__next__
+    tr = Tracer(clock=clock)
+    with tr.span("work", track="engine", args={"fixed": 1}) as sp:
+        sp.args["added"] = 2
+    (ev,) = tr.events()
+    assert ev["ts_us"] == 1_000_000 and ev["dur_us"] == 2_000_000
+    assert ev["args"] == {"fixed": 1, "added": 2}
+
+
+def test_span_context_manager_annotates_exceptions():
+    tr = Tracer(clock=iter([0.0, 0.0, 0.0]).__next__)
+    with pytest.raises(KeyError):
+        with tr.span("boom"):
+            raise KeyError("x")
+    (ev,) = tr.events()
+    assert ev["args"]["error"] == "KeyError"
+
+
+def test_negative_duration_clamped_to_zero():
+    tr = Tracer(clock=lambda: 0.0)
+    tr.add_span("backwards", 2.0, 1.0)
+    assert tr.events()[0]["dur_us"] == 0
+
+
+def test_new_trace_id_is_16_hex_and_unique():
+    ids = {Tracer.new_trace_id() for _ in range(64)}
+    assert len(ids) == 64
+    for tid in ids:
+        assert len(tid) == 16
+        int(tid, 16)  # hex or raises
+
+
+def test_clear_and_len():
+    tr = Tracer(clock=lambda: 0.0)
+    tr.instant("a")
+    tr.instant("b")
+    assert len(tr) == 2
+    tr.clear()
+    assert len(tr) == 0 and tr.events() == []
+
+
+def test_tracer_is_thread_safe():
+    tr = Tracer()
+    n, workers = 200, 8
+
+    def hammer():
+        for i in range(n):
+            tr.instant(f"ev{i}", track="t")
+            with tr.span("s", track="t"):
+                pass
+
+    threads = [threading.Thread(target=hammer) for _ in range(workers)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(tr) == workers * n * 2
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+
+def test_to_chrome_structure_tracks_and_trace_id_folding():
+    tr = Tracer(clock=lambda: 0.0)
+    tr.add_span("wave", 0.001, 0.002, track="engine", trace_id="deadbeef")
+    tr.instant("chaos", track="router", cat="chaos")
+    doc = tr.to_chrome()
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["schema"] == tracing.CHROME_SCHEMA
+    evs = doc["traceEvents"]
+    # "M" thread-name metadata precede the payload events, one per track
+    metas = [e for e in evs if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in metas} == {"engine", "router"}
+    assert evs[: len(metas)] == metas
+    span = next(e for e in evs if e["ph"] == "X")
+    assert span["dur"] == 1000 and span["ts"] == 1000
+    assert span["args"]["trace_id"] == "deadbeef"  # folded for Perfetto query
+    inst = next(e for e in evs if e["ph"] == "i")
+    assert inst["s"] == "t"
+    # every track maps to a small integer tid shared with its meta record
+    assert span["tid"] == next(
+        m["tid"] for m in metas if m["args"]["name"] == "engine"
+    )
+
+
+def test_chrome_doc_validates_against_repo_schema():
+    tr = Tracer(clock=lambda: 0.0)
+    tr.add_span("wave", 0.0, 0.001, track="engine", args={"roots": 2})
+    tr.instant("kill", track="router", cat="chaos")
+    assert validate_schema(tr.to_chrome(), _schema()) == []
+
+
+def test_write_chrome_and_jsonl_roundtrip(tmp_path):
+    tr = Tracer(clock=lambda: 0.0)
+    tr.add_span("a", 0.0, 0.001, track="x")
+    tr.instant("b", track="y")
+    chrome = str(tmp_path / "trace.json")
+    jsonl = str(tmp_path / "trace.jsonl")
+    assert tr.write_chrome(chrome) == 2
+    assert tr.write_jsonl(jsonl) == 2
+    with open(chrome) as f:
+        doc = json.load(f)
+    assert validate_schema(doc, _schema()) == []
+    with open(jsonl) as f:
+        lines = [json.loads(ln) for ln in f]
+    assert [ev["name"] for ev in lines] == ["a", "b"]
+    assert lines[0]["kind"] == "span" and lines[1]["kind"] == "instant"
+
+
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.enabled is False
+    assert NULL_TRACER.new_trace_id() == ""
+    NULL_TRACER.add_span("x", 0.0, 1.0)
+    NULL_TRACER.instant("y")
+    with NULL_TRACER.span("z") as sp:
+        sp.args["ignored"] = 1  # same surface as the real handle
+    assert len(NULL_TRACER) == 0 and NULL_TRACER.events() == []
+    assert NULL_TRACER.now() >= 0.0  # real clock: callers time against it
+
+
+# ---------------------------------------------------------------------------
+# Schema validator + CLI gate
+# ---------------------------------------------------------------------------
+
+
+def test_validate_schema_reports_each_violation_kind():
+    schema = _schema()
+    bad = {
+        "displayTimeUnit": "ns",  # const violation
+        "traceEvents": [
+            {"ph": "Q", "pid": 1, "tid": 1, "name": "x"},  # enum violation
+            {"ph": "X", "pid": 0, "tid": 1, "name": "x"},  # minimum violation
+            {"ph": "i", "pid": 1, "tid": 1},  # missing required "name"
+            {"ph": "i", "pid": 1, "tid": 1, "name": "x",
+             "bogus": 1},  # additionalProperties violation
+            {"ph": "X", "pid": 1, "tid": 1, "name": "x",
+             "ts": "soon"},  # type violation
+        ],
+    }
+    errs = validate_schema(bad, schema)
+    joined = "\n".join(errs)
+    assert "expected const 'ms'" in joined
+    assert "'Q' not in enum" in joined
+    assert "0 < minimum 1" in joined
+    assert "missing required key 'name'" in joined
+    assert "unexpected key 'bogus'" in joined
+    assert "expected type number" in joined
+    # paths point into the document
+    assert any(e.startswith("$.traceEvents[0]") for e in errs)
+
+
+def test_validate_schema_accepts_type_lists_and_ignores_bools():
+    assert validate_schema(1, {"type": ["integer", "null"]}) == []
+    assert validate_schema(None, {"type": ["integer", "null"]}) == []
+    # bool is NOT an integer for schema purposes
+    assert validate_schema(True, {"type": "integer"}) != []
+    assert validate_schema(True, {"minimum": 5}) == []  # minimum skips bools
+
+
+def test_cli_validator_pass_and_fail(tmp_path, capsys):
+    tr = Tracer(clock=lambda: 0.0)
+    tr.instant("ok", track="t")
+    good = str(tmp_path / "good.json")
+    tr.write_chrome(good)
+    assert tracing.main([good, "--schema", SCHEMA_PATH]) == 0
+    assert "schema OK" in capsys.readouterr().out
+
+    bad = str(tmp_path / "bad.json")
+    with open(bad, "w") as f:
+        json.dump({"traceEvents": [{"ph": "Z"}]}, f)
+    assert tracing.main([bad, "--schema", SCHEMA_PATH]) == 1
+    assert "SCHEMA VIOLATION" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Telemetry regressions (satellites 1 + 2)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_extra_collision_raises():
+    tm = Telemetry()
+    with pytest.raises(ValueError, match="qps"):
+        tm.snapshot(qps=123.0)
+    with pytest.raises(ValueError, match="completed.*qps|qps.*completed"):
+        tm.snapshot(qps=1.0, completed=2)
+    # non-colliding extras still merge verbatim
+    snap = tm.snapshot(cache={"hits": 1}, pending=0)
+    assert snap["cache"] == {"hits": 1} and snap["pending"] == 0
+
+
+def test_empty_window_qps_is_exactly_zero():
+    # near-zero uptime + zero completions must report 0.0, not a denormal
+    tm = Telemetry(clock=lambda: 0.0)
+    snap = tm.snapshot()
+    assert snap["qps"] == 0.0 and snap["completed"] == 0
+
+    from repro.service.router import RouterTelemetry
+
+    rt = RouterTelemetry()
+    assert rt.snapshot()["qps"] == 0.0
+
+
+def test_record_stage_reservoirs_and_unknown_stage():
+    tm = Telemetry()
+    for s in STAGES:
+        tm.record_stage(s, 0.010)
+        tm.record_stage(s, 0.030)
+    stages = tm.snapshot()["stages_ms"]
+    assert set(stages) == set(STAGES)
+    for s in STAGES:
+        assert stages[s]["count"] == 2
+        assert stages[s]["mean"] == pytest.approx(20.0)
+    with pytest.raises(ValueError, match="unknown stage"):
+        tm.record_stage("teleport", 0.001)
+
+
+def test_stage_block_is_json_serializable():
+    tm = Telemetry()
+    tm.record_stage("engine", 0.005)
+    json.dumps(tm.snapshot())
