@@ -1,0 +1,200 @@
+"""Vertex-program benchmark: convergence rates, sparse wire bytes, and
+PageRank incremental re-push vs recompute (DESIGN.md §19).
+
+Three sections, all on the kron12/P=8 cell:
+
+* **rate rows** — one per program (pagerank/cc/tri/kcore) under the
+  density-adaptive sync: rounds to convergence, median wall time, and the
+  honest edge-examination rate (the ``work`` carry the program itself
+  counts, not an optimistic m × iters);
+* **wire rows** — per sync mode, attributing analytic sync bytes per
+  vertex from the §18 flight-recorder rows, for two regimes: PageRank
+  (the delta-mode showcase — on kron every rank's contribution buffer
+  stays DENSE, so all syncs honestly tie: delta mode is a correctness
+  result there, bit-identical sparse/dense, not a byte win) and k-core
+  (whose peel waves thin out after the first sweeps — the sparse wire
+  win the adaptive dispatch exists for);
+* **re-push row** — the §16 protocol applied to an analytics program:
+  apply one mutation batch (≤ 0.1% of directed edges) through the delta
+  overlay + in-place partition patch, then compare
+
+  - the **recompute path**: materialize the CSR, re-partition, re-place,
+    RECOMPILE (a rebuilt partition is a new program-cache identity — the
+    same accounting as ``benchmarks/dynamic.py``), and run PageRank cold;
+  - the **re-push path**: patch slack in place, re-place the same-shape
+    arrays, and warm-start the ALREADY-COMPILED program from the
+    pre-mutation rank vector.
+
+  The charitable no-recompile variant is reported alongside
+  (``speedup_warm``); warm-start iteration savings are logarithmic
+  (geometric convergence), so the compiled-program reuse is the real §16
+  win.  The re-pushed vector is checked against a float64 host oracle of
+  the MUTATED graph within the convergence tolerance.
+
+``run.py`` lifts ``extra["vertex_program"]`` into ``BENCH_bfs.json``; the
+tier-2 acceptance test asserts the ≥3× re-push speedup and the oracle
+tolerance off those rows.
+"""
+
+from benchmarks.common import Report, timeit  # noqa: F401  (sets XLA_FLAGS)
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+SYNCS = ("butterfly", "sparse", "adaptive")
+TOL = 1e-5
+
+
+def _mesh(p):
+    import jax
+
+    return jax.make_mesh((p,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def run(scale: int = 12, p: int = 8, smoke: bool = False,
+        batch_frac: float = 0.0005) -> Report:
+    import jax
+
+    from repro import programs
+    from repro.core import bfs, flightrec
+    from repro.dynamic import delta
+    from repro.graph import generators, partition
+
+    iters = 2 if smoke else 3
+    g = generators.kronecker(scale, 8, seed=0)
+    pg = partition.partition_1d(g, p)
+    mesh = _mesh(p)
+    rep = Report(
+        f"vertex programs kron{scale}/P={p} (DESIGN.md §19)",
+        ["algo", "sync", "rounds", "ms", "MEdge/s", "wire B/node"],
+    )
+    vp = {}
+
+    # --- per-algo convergence rate (adaptive sync) ------------------------
+    arrays = bfs.place_arrays(pg, mesh, ("data",))
+    acfg = programs.ProgramConfig(sync="adaptive", tol=TOL)
+    fns = {}
+    for algo in programs.PROGRAM_ALGOS:
+        prog = programs.by_name(algo)
+        fn = programs.build_program_fn(pg, mesh, prog, acfg)
+        fns[algo] = fn
+        arg = prog.default_arg(pg)
+        out = fn(arrays, arg)  # warmup/compile
+        jax.block_until_ready(out[0])
+        rounds = int(np.max(np.asarray(out[prog.n_outputs])))
+        work = float(np.asarray(out[prog.n_outputs + 1])[0])
+        t = timeit(lambda fn=fn, arg=arg: fn(arrays, arg), iters=iters)
+        rep.add(algo, "adaptive", rounds, t * 1e3, work / t / 1e6, "")
+        vp[f"rate/{algo}"] = {
+            "sync": "adaptive", "rounds": rounds, "ms": t * 1e3,
+            "medges_s": work / t / 1e6, "work_edges": work,
+        }
+
+    # --- wire bytes per sync (§18 trace attribution) ----------------------
+    # k-core's peel bitmap is TINY (nw words), so the auto capacity floor
+    # (64 pairs) is the whole buffer; 8 pairs sizes the wire format to the
+    # quiet-tail waves the sparse path exists for (exactness is unaffected
+    # — overflow rounds fall back to dense, asserted by the tier-1 suite)
+    wire_cap = {"pagerank": 0, "kcore": 8}
+    for algo in ("pagerank", "kcore"):
+        wprog = programs.by_name(algo)
+        n_words = programs.program_msg_words(pg, wprog)
+        for sync in SYNCS:
+            cfg = programs.ProgramConfig(sync=sync, tol=TOL,
+                                         sparse_capacity=wire_cap[algo])
+            tfn = programs.build_program_fn(pg, mesh, wprog, cfg, trace=True)
+            out = tfn(arrays, wprog.default_arg(pg))
+            tr = flightrec.TraversalTrace.from_buffer(
+                np.asarray(out[-1]), algo=algo, sync=sync, p=pg.p,
+                fanout=cfg.fanout, n_words=n_words,
+                capacity=cfg.resolved_capacity(n_words),
+                density_threshold=cfg.density_threshold,
+            )
+            s = tr.summary()
+            rep.add(algo, sync, s["levels"], "", "",
+                    s["bytes_per_node_total"])
+            vp[f"wire/{algo}/{sync}"] = {
+                "bytes_per_node": s["bytes_per_node_total"],
+                "levels": s["levels"], "sparse_levels": s["sparse_levels"],
+                "fallback_levels": s["fallback_levels"],
+            }
+
+    # --- §16 re-push vs recompute -----------------------------------------
+    prog = programs.by_name("pagerank")
+    fn = fns["pagerank"]
+    out = fn(arrays, prog.default_arg(pg))
+    ranks0 = prog.assemble(pg, np.asarray(out[0]))
+    overlay = delta.DeltaOverlay(g)
+    k_und = max(int(g.n_edges * batch_frac / 2), 1)
+    batch = overlay.sample_batch(np.random.default_rng(7), k_und,
+                                 max(k_und // 4, 1))
+    t0 = time.perf_counter()
+    update = overlay.apply(batch)
+    patched = delta.apply_update_to_partition(pg, update)
+    t_patch = time.perf_counter() - t0
+    assert patched, "benchmark batch must fit the partition slack"
+
+    # re-push: same compiled program, same-shape arrays, warm-start arg
+    t0 = time.perf_counter()
+    arrays2 = bfs.place_arrays(pg, mesh, ("data",))
+    out_w = fn(arrays2, programs.rank_arg(pg, ranks0))
+    jax.block_until_ready(out_w[0])
+    t_repush = t_patch + (time.perf_counter() - t0)
+    it_repush = int(np.max(np.asarray(out_w[1])))
+    repushed = prog.assemble(pg, np.asarray(out_w[0]))
+
+    # recompute: materialize + re-partition + re-place + COMPILE + cold run
+    t0 = time.perf_counter()
+    gm = overlay.current_graph()
+    pg2 = partition.partition_1d(gm, p)
+    arrays3 = bfs.place_arrays(pg2, mesh, ("data",))
+    fn2 = programs.build_program_fn(pg2, mesh, prog, acfg)
+    out_c = fn2(arrays3, prog.default_arg(pg2))
+    jax.block_until_ready(out_c[0])
+    t_recompute = time.perf_counter() - t0
+    it_recompute = int(np.max(np.asarray(out_c[1])))
+    # charitable variant: the compiled program is already cached
+    t_warm_path = timeit(
+        lambda: fn2(arrays3, prog.default_arg(pg2)), iters=iters
+    )
+
+    # both paths must land on the mutated graph's fixed point (within the
+    # residual stopping tolerance, which bounds distance-to-fixed-point)
+    ref = programs.pagerank_reference(gm, damping=acfg.damping, tol=1e-12,
+                                      max_iters=1000)
+    err = float(np.abs(repushed[: gm.n] - ref).sum())
+    assert err < 10 * TOL, f"re-push drifted off the oracle: L1 {err}"
+
+    speedup = t_recompute / t_repush
+    speedup_warm = t_warm_path / t_repush
+    rep.add("pagerank", "re-push", it_repush, t_repush * 1e3, "", "")
+    rep.add("pagerank", "recompute", it_recompute, t_recompute * 1e3, "", "")
+    vp["repush"] = {
+        "batch_directed_edges": int(update.ins_src.size + update.del_src.size),
+        "repush_ms": t_repush * 1e3, "recompute_ms": t_recompute * 1e3,
+        "recompute_warm_ms": t_warm_path * 1e3,
+        "rounds_repush": it_repush, "rounds_recompute": it_recompute,
+        "speedup": speedup, "speedup_warm": speedup_warm,
+        "oracle_l1": err, "tol": TOL,
+    }
+    print(f"   pagerank re-push: {speedup:.1f}x vs recompute "
+          f"({speedup_warm:.2f}x vs precompiled cold), oracle L1 {err:.2e}")
+    rep.extra["vertex_program"] = vp
+    return rep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--scale", type=int, default=12)
+    args = ap.parse_args(argv)
+    print(run(scale=args.scale, smoke=args.smoke).render())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,8 @@ One benchmark per paper table/figure (+ the LM-integration study):
   bfs_gteps        — Table 1 (graphs × time × honest TEPS)
   msbfs            — DESIGN §13 (32-lane multi-source vs single-source)
   sssp             — DESIGN §14 (weighted SSSP on the butterfly MIN-monoid)
+  analytics        — DESIGN §19 (vertex-program rates, PageRank delta
+                     wire bytes, §16 re-push vs recompute)
   service          — DESIGN §15 (serving QPS/latency: coalesced vs per-wave)
   dynamic          — DESIGN §16 (incremental repair vs full recompute)
   scaling          — Fig. 3  (strong scaling × fanout)
@@ -39,6 +41,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        analytics,
         bfs_gteps,
         collective_bytes,
         direction,
@@ -57,6 +60,7 @@ def main(argv=None) -> int:
         runs = [(bfs_gteps, {"scale": 11, "roots": 2, "smoke": True}),
                 (msbfs, {"smoke": True}),
                 (sssp, {"smoke": True}),
+                (analytics, {"smoke": True}),
                 (dynamic, {"smoke": True})]
     else:
         # the replicated-serving tier (§17) runs through the same module
@@ -65,7 +69,8 @@ def main(argv=None) -> int:
             __name__ = "benchmarks.service (replicated)"
             run = staticmethod(service.run_replicated)
 
-        runs = [(bfs_gteps, {}), (msbfs, {}), (sssp, {}), (service, {}),
+        runs = [(bfs_gteps, {}), (msbfs, {}), (sssp, {}), (analytics, {}),
+                (service, {}),
                 (_service_replicated, {"chaos": "kill-one"}),
                 (dynamic, {}), (scaling, {}), (fanout, {}),
                 (collective_bytes, {}), (direction, {}), (grad_sync, {})]
@@ -100,6 +105,7 @@ def main(argv=None) -> int:
         "service_replicas": extras.get("service_replicas", {}),
         "service_chaos": extras.get("service_chaos", {}),
         "dynamic_update": extras.get("dynamic_update", {}),
+        "vertex_program": extras.get("vertex_program", {}),
     }
     bench_out = os.path.join(os.path.dirname(__file__), "..", "BENCH_bfs.json")
     bench_out = os.path.abspath(bench_out)

@@ -1,0 +1,108 @@
+"""Four analytics, one gather-apply-scatter core (DESIGN.md §19).
+
+    PYTHONPATH=src python examples/vertex_programs.py [--scale 12]
+
+* runs PageRank, label-propagation components, triangle counting and
+  k-core decomposition as VertexPrograms compiled onto the SAME
+  ``jit(shard_map(lax.while_loop))`` butterfly skeleton as BFS,
+* cross-checks every result against a host oracle (PageRank within the
+  stopping tolerance, the other three exactly),
+* mutates the graph through the §16 delta overlay and repairs the
+  PageRank vector by warm-started re-push of the already-compiled
+  program — no re-partition, no recompile.
+"""
+
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edge-factor", type=int, default=8)
+    args = ap.parse_args()
+
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro import programs
+    from repro.core import bfs
+    from repro.dynamic import delta
+    from repro.graph import generators, partition
+
+    g = generators.kronecker(args.scale, args.edge_factor, seed=0)
+    print(f"graph: n={g.n_real:,} m={g.n_edges:,}")
+    p = 8
+    pg = partition.partition_1d(g, p)
+    mesh = jax.make_mesh((p,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    arrays = bfs.place_arrays(pg, mesh, ("data",))
+    cfg = programs.ProgramConfig(sync="adaptive", tol=1e-5)
+
+    # --- the four programs, one compile skeleton --------------------------
+    results = {}
+    for algo in programs.PROGRAM_ALGOS:
+        prog = programs.by_name(algo)
+        fn = programs.build_program_fn(pg, mesh, prog, cfg)
+        arg = prog.default_arg(pg)
+        fn(arrays, arg)  # warmup / compile
+        t0 = time.perf_counter()
+        out = fn(arrays, arg)
+        jax.block_until_ready(out[0])
+        dt = time.perf_counter() - t0
+        rounds = int(np.max(np.asarray(out[prog.n_outputs])))
+        results[algo] = prog.assemble(pg, np.asarray(out[0]))
+        print(f"{algo:>9}: {rounds:3d} rounds in {dt*1e3:7.1f}ms")
+
+    ranks = results["pagerank"]
+    top = np.argsort(ranks[: g.n_real])[::-1][:5]
+    print(f"  top ranks: {[int(v) for v in top]}")
+    labels = results["cc"]
+    print(f"  components: {len(np.unique(labels[: g.n_real]))}")
+    tri = results["tri"]
+    print(f"  triangles: {programs.total_triangles(tri[: g.n_real]):,}")
+    core = results["kcore"]
+    print(f"  degeneracy: {int(core[: g.n_real].max())}")
+
+    # --- host oracles -----------------------------------------------------
+    ref = programs.pagerank_reference(g, damping=cfg.damping, tol=1e-12,
+                                      max_iters=1000)
+    slack = 2 * cfg.tol * cfg.damping / (1 - cfg.damping)
+    assert np.abs(ranks[: g.n_real] - ref).max() < slack
+    assert np.array_equal(labels[: g.n_real], programs.cc_reference(g))
+    assert np.array_equal(tri[: g.n_real], programs.triangles_reference(g))
+    assert np.array_equal(core[: g.n_real], programs.kcore_reference(g))
+    print("oracles: pagerank within tolerance; cc/tri/kcore exact")
+
+    # --- §16 mutation + §19 incremental re-push ---------------------------
+    overlay = delta.DeltaOverlay(g)
+    k = max(g.n_edges // 4000, 1)
+    batch = overlay.sample_batch(np.random.default_rng(7), k, max(k // 4, 1))
+    update = overlay.apply(batch)
+    assert delta.apply_update_to_partition(pg, update)
+    arrays2 = bfs.place_arrays(pg, mesh, ("data",))
+
+    prog = programs.by_name("pagerank")
+    fn = programs.build_program_fn(pg, mesh, prog, cfg)  # cache hit: same pg
+    t0 = time.perf_counter()
+    out = fn(arrays2, programs.rank_arg(pg, ranks))  # warm-start re-push
+    jax.block_until_ready(out[0])
+    dt = time.perf_counter() - t0
+    it = int(np.max(np.asarray(out[1])))
+    repushed = prog.assemble(pg, np.asarray(out[0]))
+    gm = overlay.current_graph()
+    refm = programs.pagerank_reference(gm, damping=cfg.damping, tol=1e-12,
+                                       max_iters=1000)
+    assert np.abs(repushed[: gm.n] - refm).max() < slack
+    print(f"re-push after {update.ins_src.size + update.del_src.size} edge "
+          f"mutations: {it} rounds in {dt*1e3:.1f}ms, matches the mutated "
+          f"graph's oracle (no re-partition, no recompile)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,13 +9,16 @@ and cost nothing: their bit-lanes never activate), so every wave reuses the
 same compiled program with the same static shapes — no recompiles, no
 dynamic allocation on the query path.
 
-Three query families share the placed arrays and the cache:
+Four query families share the placed arrays and the cache:
 
-* ``query``       — BFS distances, B bit-lanes per wave (§13),
-* ``sssp``        — weighted distances, one butterfly-min program reused
-                    across the root stream (§14),
-* ``betweenness`` — Brandes dependency waves, B lanes per wave,
-                    accumulated across waves (§14).
+* ``query``          — BFS distances, B bit-lanes per wave (§13),
+* ``sssp``           — weighted distances, one butterfly-min program reused
+                       across the root stream (§14),
+* ``betweenness``    — Brandes dependency waves, B lanes per wave,
+                       accumulated across waves (§14),
+* ``vertex_program`` — §19 gather-apply-scatter analytics (pagerank / cc /
+                       tri / kcore), one compiled program per algo+config,
+                       warm-startable via ``arg`` (the §16 re-push path).
 """
 
 from __future__ import annotations
@@ -28,6 +31,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import programs
 from repro.analytics import msbfs
 from repro.core.bfs import BFSConfig, place_arrays
 from repro.core.devlock import device_lock
@@ -91,6 +95,19 @@ def compiled_bc_fn(
     )
 
 
+def compiled_program_fn(
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, algo: str,
+    cfg: "programs.ProgramConfig",
+):
+    """The cached §19 vertex-program executable for this key (warm starts
+    reuse it — only the operand differs)."""
+    prog = programs.by_name(algo)
+    return _cached(
+        pg, mesh, (id(pg), id(mesh), "vp:" + algo, cfg),
+        lambda: programs.build_program_fn(pg, mesh, prog, cfg),
+    )
+
+
 @dataclasses.dataclass
 class EngineStats:
     queries: int = 0
@@ -101,6 +118,9 @@ class EngineStats:
     sssp_queries: int = 0
     relaxed_edges: float = 0.0  # SSSP relaxation analogue of scanned_edges
     bc_sources: int = 0
+    program_runs: int = 0  # §19 vertex-program executions
+    program_iters: int = 0  # gather/sync/apply rounds across those runs
+    program_edges: float = 0.0  # edges examined by vertex programs
 
 
 class BFSQueryEngine:
@@ -255,3 +275,66 @@ class BFSQueryEngine:
             )
         self.stats.bc_sources += int(sources.size)
         return bc
+
+    # --- vertex programs (DESIGN.md §19) ----------------------------------
+
+    def _program_cfg(
+        self, cfg: Optional["programs.ProgramConfig"]
+    ) -> "programs.ProgramConfig":
+        if cfg is not None:
+            return cfg
+        if self.cfg.sync not in programs.SYNCS:
+            # same no-silent-coercion rule as _sssp_cfg: a 'rabenseifner'
+            # engine must not quietly measure 'butterfly'
+            raise ValueError(
+                f"engine sync {self.cfg.sync!r} has no vertex-program "
+                f"equivalent (expected one of {programs.SYNCS}); pass an "
+                "explicit ProgramConfig"
+            )
+        return programs.ProgramConfig(
+            axes=self.cfg.axes, fanout=self.cfg.fanout, sync=self.cfg.sync,
+            sparse_capacity=self.cfg.sparse_capacity,
+            density_threshold=self.cfg.density_threshold,
+        )
+
+    def vertex_program(
+        self,
+        algo: str,
+        cfg: Optional["programs.ProgramConfig"] = None,
+        *,
+        arg=None,
+    ) -> np.ndarray:
+        """Run one §19 vertex program to convergence; returns its global
+        result vector (``pagerank``: float64 ranks; ``cc``: int64 min
+        labels; ``tri``: int64 per-vertex triangle counts; ``kcore``:
+        int64 core numbers).  ``arg`` warm-starts convergence-style
+        programs (the §16 re-push seed); ``cfg`` defaults to the engine's
+        BFS knobs lifted to :class:`~repro.programs.ProgramConfig`."""
+        result, _, _ = self.run_program(algo, cfg, arg=arg)
+        return result
+
+    def run_program(
+        self,
+        algo: str,
+        cfg: Optional["programs.ProgramConfig"] = None,
+        *,
+        arg=None,
+    ):
+        """:meth:`vertex_program` plus the convergence accounting:
+        ``(result, iters, edges_examined)`` — the repair path reads
+        ``iters`` for the §16 re-push-vs-recompute ledger."""
+        prog = programs.by_name(algo)
+        cfg = self._program_cfg(cfg)
+        fn = compiled_program_fn(self.pg, self.mesh, algo, cfg)
+        if arg is None:
+            arg = prog.default_arg(self.pg)
+        with device_lock(self.mesh):
+            out = fn(self._arrays, arg)
+            # materialize INSIDE the lock (same rule as _run_wave)
+            out = [np.asarray(o) for o in out]
+        iters = int(np.max(out[prog.n_outputs]))
+        work = float(out[prog.n_outputs + 1][0])
+        self.stats.program_runs += 1
+        self.stats.program_iters += iters
+        self.stats.program_edges += work
+        return prog.assemble(self.pg, out[0]), iters, work

@@ -31,6 +31,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import frontier as fr
+from repro.core import loop
 from repro.core.bfs import (
     INF,
     BFSConfig,
@@ -203,19 +204,19 @@ def build_msbfs_fn(
                 scanned + lvl_scanned.astype(jnp.float32),
                 pull,
             )
-            if trace:
-                if cfg.mode == "top_down":
-                    direction = jnp.int32(0)
-                elif cfg.mode == "bottom_up":
-                    direction = jnp.int32(1)
-                else:
-                    direction = state[5].astype(jnp.int32)
-                row = flightrec.trace_row(
-                    level, t_words, fr.popcount(new), direction, t_branch,
-                    t_shipped, jnp.count_nonzero(new).astype(jnp.int32),
-                )
-                out = out + (flightrec.record(state[6], level, row),)
-            return out
+            if not trace:
+                return out, None
+            if cfg.mode == "top_down":
+                direction = jnp.int32(0)
+            elif cfg.mode == "bottom_up":
+                direction = jnp.int32(1)
+            else:
+                direction = state[5].astype(jnp.int32)
+            row = flightrec.trace_row(
+                level, t_words, fr.popcount(new), direction, t_branch,
+                t_shipped, jnp.count_nonzero(new).astype(jnp.int32),
+            )
+            return out, (level, row)
 
         init = (
             frontier,
@@ -225,9 +226,10 @@ def build_msbfs_fn(
             jnp.float32(0),
             init_dir,
         )
-        if trace:
-            init = init + (flightrec.zeros(t_levels),)
-        state = lax.while_loop(cond, step, init)
+        state = loop.traced_while(
+            cond, step, init, trace=trace,
+            trace_levels=t_levels if trace else None,
+        )
         frontier, seen, d_owned, level, scanned, _ = state[:6]
         total_scanned = lax.psum(scanned, cfg.axes)
         out = (d_owned[None], level[None], total_scanned[None])
@@ -235,14 +237,7 @@ def build_msbfs_fn(
             out = out + (state[6][None],)
         return out
 
-    shard_fn = jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=({k: spec for k in graph_array_keys(pg)}, P()),
-        out_specs=(spec, spec, spec) + ((spec,) if trace else ()),
-        check_vma=False,
-    )
-    return jax.jit(shard_fn)
+    return loop.jit_shard(body, mesh, graph_array_keys(pg), spec, trace=trace)
 
 
 def assemble_distances(

@@ -139,18 +139,30 @@ def butterfly_reduce_sparse(
     since the last sync (``x != ref``; ``ref`` defaults to the all-identity
     buffer, which for the OR monoid makes "changed" == "nonzero") instead of
     the full buffer, padded with the monoid identity so pads are no-ops on
-    the receive side.  Requires an IDEMPOTENT monoid: a changed word can be
-    re-delivered across rounds, and only idempotence makes re-combining it
-    harmless.
+    the receive side.
 
-    Contract (monotonicity): every rank's input must satisfy
-    ``x == combine(x, ref)`` — each change is a combine-IMPROVEMENT over
-    the shared reference (BFS frontiers only gain bits over the zero
-    reference; SSSP relaxation only lowers distances below the post-last-
-    sync buffer).  Unchanged words are not shipped, so a rank holding the
-    reference value must already be correct for them — which is exactly
-    what monotonicity guarantees.  ``ref`` must be replicated-consistent
-    across the reducing ranks.
+    The idempotence/delta dichotomy (DESIGN.md §19, enforced by
+    ``monoid.check_sparse_ref``) governs what the wire carries:
+
+    * **Idempotent monoid (remerge mode)** — any replicated-consistent
+      ``ref``.  Contract (monotonicity): every rank's input must satisfy
+      ``x == combine(x, ref)`` — each change is a combine-IMPROVEMENT over
+      the shared reference (BFS frontiers only gain bits over the zero
+      reference; SSSP relaxation only lowers distances below the post-last-
+      sync buffer).  Unchanged words are not shipped, so a rank holding the
+      reference value must already be correct for them — which is exactly
+      what monotonicity guarantees.  Re-delivery of a word across rounds
+      re-combines harmlessly because ``combine(x, x) == x``.
+    * **Non-idempotent monoid (delta mode)** — ``ref`` MUST be ``None``
+      (the identity): each rank's input is its own CONTRIBUTION relative to
+      the identity (PageRank: this rank's scatter-added rank mass), never a
+      buffer containing another rank's values.  Each butterfly round ships
+      the pre-round accumulator — a disjoint subcube partial that reaches
+      every destination exactly once — so combining is exact without
+      idempotence, bit-identical to the dense :func:`butterfly_reduce`
+      (identity pads combine as exact no-ops).  A non-identity ``ref``
+      would be double-counted on every receive and is rejected with
+      :class:`~repro.core.monoid.MonoidContractError`.
 
     The per-round send capacity multiplies by the round's digit (clamped at
     the dense size): after merging a round the accumulator differs from
@@ -168,11 +180,7 @@ def butterfly_reduce_sparse(
     lever at low change density: a BFS frontier of a handful of vertices,
     or an SSSP relaxation wave touching a handful of distances.
     """
-    if not monoid.idempotent:
-        raise ValueError(
-            f"sparse butterfly requires an idempotent monoid, got "
-            f"{monoid.name!r} (re-delivered words must re-combine harmlessly)"
-        )
+    monoid.check_sparse_ref(ref)
     axes = _as_axes(axes)
     n_words = x.shape[0]
     if ref is None:
@@ -229,14 +237,20 @@ def butterfly_reduce_adaptive(
     precondition — so the sparse branch needs no inner fallback), dense
     otherwise.  One scalar ``pmax`` rides the wire; both branches live in
     the compiled HLO and ``lax.cond`` picks one per call at run time.
+
+    The §19 idempotence/delta dichotomy applies exactly as in
+    :func:`butterfly_reduce_sparse`: non-idempotent monoids require
+    ``ref=None`` (delta contributions) and are rejected otherwise.
     """
+    monoid.check_sparse_ref(ref)
     axes = _as_axes(axes)
     n_words = x.shape[0]
     cap = min(capacity, n_words)
-    if ref is None:
-        ref = monoid.full(x.shape, x.dtype)
+    # keep the caller's ref (None == delta mode) for the sparse delegate —
+    # materializing the identity here would defeat the dichotomy check
+    ref_arr = monoid.full(x.shape, x.dtype) if ref is None else ref
 
-    changed = fr.changed_count(x, ref)
+    changed = fr.changed_count(x, ref_arr)
     for a in axes:
         changed = lax.pmax(changed, a)
     words_limit = jnp.int32(density_threshold * n_words)

@@ -27,6 +27,15 @@ col   name         meaning
                    bits; MIN: words lowered) — the monoid-changed count
 ====  ===========  =====================================================
 
+§19 convergence programs (``repro.programs``) share the buffer and
+reinterpret the two frontier columns as convergence columns — POP is the
+program's PROGRESS measure (pagerank: L1 residual in ppm of total rank
+mass; cc: labels changed this round; kcore: vertices peeled this wave;
+tri: wedge checks issued) and DIR its phase indicator (kcore: the
+current peel threshold ``k``; others 0).  ``VertexProgram.metrics``
+documents each program's pair; the schema and byte model are otherwise
+identical, so one Perfetto/CLI pipeline reads every algo's trace.
+
 Every cell is replicated across ranks (scalars are ``pmax``-reduced with
 the EXACT predicates the collectives dispatch on), so the host reads row
 ``[0]`` of the ``[P, L, COLS]`` output authoritatively.

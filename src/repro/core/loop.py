@@ -1,0 +1,102 @@
+"""THE while-loop builder for level-synchronous traversals (DESIGN.md §19).
+
+Every traversal in this repo — BFS, MS-BFS, SSSP, betweenness centrality,
+and the §19 vertex programs — compiles to the same shape: ONE
+``jit(shard_map(lax.while_loop))`` program whose carry optionally threads
+the §18 flight-recorder buffer.  Before §19 that scaffolding was
+copy-pasted per algorithm; this module is the single implementation every
+builder delegates to.
+
+Two pieces:
+
+* :func:`traced_while` — the level loop.  The per-algorithm ``step``
+  returns ``(next_state, (index, row))`` where ``row`` is the §18 trace
+  row (or ``None`` untraced); this helper owns the trace-buffer carry
+  slot, the ``record`` write, and the Python-level gating that keeps
+  ``trace=False`` staging the EXACT uninstrumented jaxpr (the §18 cost
+  contract — guarded by the HLO fingerprint test in
+  ``tests/test_programs.py``).
+* :func:`jit_shard` — the ``jit(shard_map(...))`` wrapper with the
+  standard graph-pytree ``in_specs`` every builder uses: a dict of
+  ``[P, ...]`` graph planes sharded over the mesh axes plus replicated
+  scalar/root operands, and ``n_out`` sharded outputs (+1 for the trace
+  buffer).
+
+The helpers are pure code motion from the pre-§19 builders: a delegating
+builder stages a byte-identical StableHLO program (asserted against
+recorded fingerprints), so the refactor is invisible to the compiler.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def traced_while(
+    cond: Callable,
+    step: Callable,
+    init: Tuple,
+    *,
+    trace: bool = False,
+    trace_levels: Optional[int] = None,
+):
+    """Run ``lax.while_loop(cond, step, init)`` with optional §18 tracing.
+
+    ``step(state) -> (next_state, rec)`` where ``rec`` is ``(index, row)``
+    when ``trace=True`` (``row`` an ``int32[TRACE_COLS]`` from
+    ``flightrec.trace_row``; ``index`` the level it records) and ignored —
+    conventionally ``None`` — otherwise.  The trace buffer rides as the
+    LAST carry entry, so ``cond``/``step`` address their own state by
+    prefix (``state[:k]``) exactly as before the refactor.
+
+    Returns the final full state tuple; traced runs carry the filled
+    ``int32[trace_levels, TRACE_COLS]`` buffer in the last slot.
+    """
+    if trace:
+        from repro.core import flightrec
+
+        if trace_levels is None:
+            raise ValueError("trace=True requires trace_levels")
+
+        def body(state):
+            out, rec = step(state)
+            index, row = rec
+            return tuple(out) + (flightrec.record(state[-1], index, row),)
+
+        init = tuple(init) + (flightrec.zeros(trace_levels),)
+        return lax.while_loop(cond, body, init)
+
+    def body(state):
+        out, _ = step(state)
+        return tuple(out)
+
+    return lax.while_loop(cond, body, tuple(init))
+
+
+def jit_shard(
+    body: Callable,
+    mesh: jax.sharding.Mesh,
+    array_keys: Sequence[str],
+    spec: P,
+    *,
+    n_in: int = 1,
+    n_out: int = 3,
+    trace: bool = False,
+):
+    """``jit(shard_map(body))`` with the standard traversal signature:
+    ``body(arrays, *operands)`` where ``arrays`` is the placed graph
+    pytree (every key sharded by ``spec``) and the ``n_in`` trailing
+    operands are replicated; ``n_out`` sharded outputs plus the sharded
+    trace buffer when ``trace=True``."""
+    shard_fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=({k: spec for k in array_keys},) + (P(),) * n_in,
+        out_specs=(spec,) * n_out + ((spec,) if trace else ()),
+        check_vma=False,
+    )
+    return jax.jit(shard_fn)

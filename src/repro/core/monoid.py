@@ -1,21 +1,37 @@
-"""Explicit merge monoids for the butterfly exchange (DESIGN.md §14).
+"""Explicit merge monoids for the butterfly exchange (DESIGN.md §14/§19).
 
 The paper's phase-2 synchronization is "merge my buffer with every
 partner's" — the merge op only has to be associative and commutative for
-the butterfly to be exact, and IDEMPOTENT for the sparse changed-word wire
-format to be exact (duplicate delivery of a word across rounds must be a
-no-op).  PR 1/2 hardwired the OR monoid over frontier bitmaps; factoring
-the monoid out turns the same communication pattern into the carrier for
-weighted traversals:
+the butterfly to be exact.  The SPARSE changed-word wire format adds a
+second axis (the idempotence/delta dichotomy, DESIGN.md §19):
+
+* **remerge** (idempotent monoids — OR/MIN/MAX): each rank ships the full
+  value of every word CHANGED since a shared reference; duplicate delivery
+  of a word across butterfly rounds re-combines harmlessly because
+  ``combine(x, x) == x``.  The reference may be any replicated-consistent
+  buffer (BFS: the zero bitmap; SSSP: the post-last-sync distances).
+* **delta** (non-idempotent monoids — ADD): each rank ships its *own
+  contribution* relative to the monoid IDENTITY (never a merged value).
+  The butterfly delivers each subcube partial exactly once per
+  destination, so summing is exact — but only when the reference IS the
+  identity.  Shipping changed-vs-nonidentity-ref words would double-count
+  the shared reference on every receive.
+
+Because a WRONG ``idempotent`` flag silently corrupts the sparse path
+(an ADD monoid mislabeled idempotent would re-merge partial sums), the
+flag is *validated at construction* against the combine fn on sample
+words; a contradiction raises :class:`MonoidContractError` with the
+counterexample.
 
 * ``OR_U32``  — reachability bitmaps (BFS / MS-BFS): identity ``0``.
 * ``MIN_U32`` — tentative distances (SSSP relaxation): identity
   ``0xFFFFFFFF`` (the unreached sentinel IS the identity, so identity
   padding of sparse messages is free).
 * ``MAX_U32`` — e.g. label propagation toward the largest label.
-* ``ADD_F32`` / ``ADD_U32`` — path-count / dependency accumulation
-  (betweenness centrality).  NOT idempotent: the dense butterfly and
-  Rabenseifner paths carry it; the sparse path rejects it at build time.
+* ``ADD_F32`` / ``ADD_U32`` — path-count / rank-mass / dependency
+  accumulation (betweenness centrality, PageRank).  NOT idempotent: the
+  dense butterfly carries merged buffers; the sparse path carries DELTA
+  contributions only (``ref`` pinned to the identity).
 
 A :class:`Monoid` is pure data + two callables, so host oracles
 (:mod:`repro.core.butterfly`) and the JAX lowering
@@ -27,11 +43,15 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 __all__ = [
     "Monoid",
+    "MonoidContractError",
+    "SPARSE_REMERGE",
+    "SPARSE_DELTA",
     "OR_U32",
     "MIN_U32",
     "MAX_U32",
@@ -39,6 +59,38 @@ __all__ = [
     "ADD_U32",
     "by_name",
 ]
+
+#: Sparse wire modes (the §19 dichotomy).
+SPARSE_REMERGE = "remerge"  # idempotent: changed-vs-ref full values
+SPARSE_DELTA = "delta"  # non-idempotent: contributions vs the identity
+
+
+class MonoidContractError(ValueError):
+    """A monoid's declared contract contradicts its combine fn, or a sparse
+    exchange was requested outside the idempotence/delta dichotomy.
+
+    Structured fields: ``monoid`` (name), ``flag`` (the declared
+    ``idempotent`` value, when the construction probe failed),
+    ``counterexample`` (a sample word ``x`` with ``combine(x, x) != x``,
+    or ``None`` when the probe found none)."""
+
+    def __init__(self, message, *, monoid, flag=None, counterexample=None):
+        super().__init__(message)
+        self.monoid = monoid
+        self.flag = flag
+        self.counterexample = counterexample
+
+
+def _probe_words(identity):
+    """Sample words for the construction-time idempotence probe, typed by
+    the identity: float monoids get float32 probes, integer monoids the
+    uint32 word domain the frontier machinery exchanges."""
+    if isinstance(identity, float):
+        return jnp.asarray([0.0, 1.0, -2.5, 3.25, 1e-3, 7.0], jnp.float32)
+    return jnp.asarray(
+        np.array([0, 1, 7, 0x80000001, 0xFFFFFFFF, 0xDEADBEEF],
+                 dtype=np.uint32)
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,9 +101,15 @@ class Monoid:
     ``scatter`` names the ``jnp.ndarray.at[...]`` method that implements a
     duplicate-combining scatter of values into an identity-filled buffer
     (``"max"`` doubles for OR because indices are unique within one sparse
-    compaction and the identity is 0).  ``idempotent`` gates the sparse
-    changed-word wire format: ``combine(x, x) == x`` means re-delivery of a
-    word across butterfly rounds cannot corrupt the accumulator.
+    compaction and the identity is 0).  ``idempotent`` selects the sparse
+    wire mode (see module docstring): ``combine(x, x) == x`` means
+    re-delivery of a word across butterfly rounds cannot corrupt the
+    accumulator, so changed-vs-ref REMERGE shipping is exact; without it
+    only identity-referenced DELTA shipping is.
+
+    The flag is validated against ``combine`` on sample words at
+    construction — a contradiction raises :class:`MonoidContractError`
+    instead of silently corrupting the sparse path at run time.
     """
 
     name: str
@@ -59,6 +117,59 @@ class Monoid:
     combine: Callable[[jax.Array, jax.Array], jax.Array]
     scatter: str  # "min" | "max" | "add"
     idempotent: bool
+
+    def __post_init__(self):
+        xs = _probe_words(self.identity)
+        cc = np.asarray(self.combine(xs, xs))
+        xs_h = np.asarray(xs)
+        mismatch = np.nonzero(cc != xs_h)[0]
+        if self.idempotent and mismatch.size:
+            x = xs_h[mismatch[0]]
+            raise MonoidContractError(
+                f"monoid {self.name!r} declared idempotent=True but "
+                f"combine(x, x) != x for x={x!r} -> "
+                f"{cc[mismatch[0]]!r}; an idempotence mislabel silently "
+                f"corrupts the sparse changed-word path",
+                monoid=self.name, flag=True, counterexample=x,
+            )
+        if not self.idempotent and not mismatch.size:
+            raise MonoidContractError(
+                f"monoid {self.name!r} declared idempotent=False but "
+                f"combine(x, x) == x on every probe word; a conservative "
+                f"mislabel forces delta-mode shipping where remerge is "
+                f"legal — fix the flag",
+                monoid=self.name, flag=False, counterexample=None,
+            )
+        # identity must be a unit (sparse pads rely on it being a no-op)
+        ce = np.asarray(self.combine(xs, self.identity_like(xs)))
+        bad = np.nonzero(ce != xs_h)[0]
+        if bad.size:
+            raise MonoidContractError(
+                f"monoid {self.name!r}: identity {self.identity!r} is not "
+                f"a unit — combine(x, e) != x for x={xs_h[bad[0]]!r}",
+                monoid=self.name, counterexample=xs_h[bad[0]],
+            )
+
+    @property
+    def sparse_mode(self) -> str:
+        """Which sparse wire format is exact for this monoid:
+        :data:`SPARSE_REMERGE` (idempotent) or :data:`SPARSE_DELTA`."""
+        return SPARSE_REMERGE if self.idempotent else SPARSE_DELTA
+
+    def check_sparse_ref(self, ref) -> None:
+        """Enforce the idempotence/delta dichotomy for a sparse exchange:
+        idempotent monoids may reference any replicated-consistent buffer;
+        non-idempotent monoids may ONLY ship deltas vs the identity
+        (``ref is None``).  Raises :class:`MonoidContractError`."""
+        if not self.idempotent and ref is not None:
+            raise MonoidContractError(
+                f"sparse butterfly over non-idempotent monoid "
+                f"{self.name!r} must ship DELTA contributions vs the "
+                f"identity (ref=None); a changed-vs-ref remerge would "
+                f"double-count the shared reference on every receive "
+                f"(DESIGN.md §19 dichotomy)",
+                monoid=self.name,
+            )
 
     def identity_like(self, x: jax.Array) -> jax.Array:
         return jnp.asarray(self.identity, x.dtype)

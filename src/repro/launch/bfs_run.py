@@ -15,6 +15,13 @@ min-reduce; requires ``--max-weight``, defaulted when omitted) and
 ``--algo bc`` runs Brandes betweenness centrality waves over the root
 queries (DESIGN.md §14).
 
+``--algo {pagerank,cc,tri,kcore}`` runs a §19 vertex program (root-free
+global analytics) on the same butterfly exchange: the run reports rounds,
+edge-examination rate, and an algo-specific summary (top ranks / component
+count / triangle total / degeneracy); ``--trace`` exports the convergence
+flight-recorder rows (POP column = residual ppm, labels changed, or peel
+count — see ``repro.core.flightrec``).
+
 ``--stats-json PATH`` dumps the run's ``EngineStats`` (plus graph/config
 identity and wall timing) as machine-readable JSON — the serving CLI
 (``repro.launch.serve_graph``) emits the same schema extended with service
@@ -72,9 +79,12 @@ def main(argv=None) -> int:
                          "threshold * bitmap bits")
     ap.add_argument("--mode", default="top_down",
                     choices=["top_down", "bottom_up", "direction_optimizing"])
-    ap.add_argument("--algo", default="bfs", choices=["bfs", "sssp", "bc"],
-                    help="traversal workload: unweighted BFS, weighted "
-                         "shortest paths, or betweenness centrality")
+    ap.add_argument("--algo", default="bfs",
+                    choices=["bfs", "sssp", "bc",
+                             "pagerank", "cc", "tri", "kcore"],
+                    help="traversal workload (bfs/sssp/bc) or §19 vertex "
+                         "program (pagerank, connected components, triangle "
+                         "counting, k-core decomposition)")
     ap.add_argument("--max-weight", type=int, default=0,
                     help="uint32 edge weights in [1, max-weight]; 0 = "
                          "unweighted (sssp defaults to 64)")
@@ -296,6 +306,70 @@ def main(argv=None) -> int:
                 devices=args.devices, config=config_doc,
                 timing_ms={"mean": dt * 1e3 / max(n_roots, 1),
                            "total": dt * 1e3},
+                engine_stats=eng.stats,
+                **({"trace": trace_doc} if trace_doc else {}),
+            )
+        return 0
+
+    if args.algo in ("pagerank", "cc", "tri", "kcore"):
+        from repro import programs
+        from repro.analytics.engine import BFSQueryEngine, EngineStats
+
+        if args.sync not in programs.SYNCS:
+            ap.error(f"--algo {args.algo} supports --sync {programs.SYNCS}, "
+                     f"got {args.sync!r}")
+        prog = programs.by_name(args.algo)
+        pcfg = programs.ProgramConfig(
+            axes=("data",), fanout=args.fanout, sync=args.sync,
+            sparse_capacity=args.sparse_capacity,
+            density_threshold=args.density_threshold,
+        )
+        eng = BFSQueryEngine(pg, mesh, cfg)
+        eng.run_program(args.algo, pcfg)  # warmup / compile
+        eng.stats = EngineStats()
+        reps = 3  # programs are root-free: a few reps average the timing
+        times = []
+        for _ in range(reps):
+            t0 = time.time()
+            res, iters, work = eng.run_program(args.algo, pcfg)
+            times.append(time.time() - t0)
+        t = np.array(times)
+        print(
+            f"{args.algo} {args.sync} fanout={args.fanout} "
+            f"devices={args.devices}: {iters} rounds in {t.mean()*1e3:.1f}ms"
+            f"  GEdge/s {work/t.mean()/1e9:.4f} (host-simulated devices)"
+        )
+        if args.algo == "pagerank":
+            top = np.argsort(res)[::-1][:5]
+            print("top-5 ranked vertices:",
+                  ", ".join(f"{v}={res[v]:.2e}" for v in top))
+        elif args.algo == "cc":
+            print(f"components: {np.unique(res[:g.n_real]).size}")
+        elif args.algo == "tri":
+            print(f"total triangles: {programs.total_triangles(res):,}")
+        else:
+            print(f"max core number: {int(res.max())} "
+                  f"(degeneracy of the symmetrized graph)")
+        trace_doc = None
+        if args.trace:
+            from repro.core import flightrec
+
+            n_words = programs.program_msg_words(pg, prog)
+            arrays = bfs.place_arrays(pg, mesh, pcfg.axes)
+            tfn = programs.build_program_fn(pg, mesh, prog, pcfg, trace=True)
+            out = tfn(arrays, prog.default_arg(pg))
+            trace_doc = export_trace(flightrec.TraversalTrace.from_buffer(
+                np.asarray(out[-1]), algo=args.algo, sync=pcfg.sync, p=pg.p,
+                fanout=pcfg.fanout, n_words=n_words,
+                capacity=pcfg.resolved_capacity(n_words),
+                density_threshold=pcfg.density_threshold,
+            ))
+        if args.stats_json:
+            write_stats_json(
+                args.stats_json, algo=args.algo, graph=graph_doc,
+                devices=args.devices, config=config_doc,
+                timing_ms={"mean": float(t.mean() * 1e3),
+                           "total": float(t.sum() * 1e3)},
                 engine_stats=eng.stats,
                 **({"trace": trace_doc} if trace_doc else {}),
             )

@@ -63,7 +63,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-pending", type=int, default=1024,
                     help="admission-control queue bound")
     ap.add_argument("--algos", default="bfs,closeness",
-                    help="comma list drawn per request (bfs,closeness,bc)")
+                    help="comma list drawn per request: traversals "
+                         "(bfs,closeness,sssp,bc) and/or §19 vertex "
+                         "programs (pagerank,cc,tri,kcore — root-free; "
+                         "each gets its own single-result wave class)")
     ap.add_argument("--hot-fraction", type=float, default=0.2,
                     help="fraction of requests hitting one hot root "
                          "(exercises dedup + the result cache)")
@@ -144,6 +147,11 @@ def main(argv=None) -> int:
                          axis_types=(jax.sharding.AxisType.Auto,))
     cfg = bfs.BFSConfig(axes=("data",), fanout=args.fanout, sync=args.sync)
     algos = [a.strip() for a in args.algos.split(",") if a.strip()]
+    from repro.service.queue import ALGOS as _ALGOS
+
+    bad = [a for a in algos if a not in _ALGOS]
+    if bad:
+        ap.error(f"--algos {bad} not servable; expected from {_ALGOS}")
 
     service_kw = dict(
         cache_capacity=args.cache_capacity, max_pending=args.max_pending,

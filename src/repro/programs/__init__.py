@@ -1,0 +1,93 @@
+"""Vertex programs on the butterfly exchange (DESIGN.md §19).
+
+One gather-apply-scatter core (:mod:`repro.programs.core`) serving four
+graph-analytics programs, each a ~100-line :class:`VertexProgram` instance
+compiled onto the SAME ``jit(shard_map(lax.while_loop))`` skeleton and
+density-adaptive butterfly sync as every §13/§14 traversal:
+
+* ``pagerank`` — power iteration; ADD_F32 **delta** sparse mode (the first
+  non-idempotent monoid on the sparse path);
+* ``cc``       — min-label-propagation connected components; MIN_U32
+  remerge mode, bit-exact vs union-find;
+* ``tri``      — triangle counting; one OR exchange replicates neighbor
+  bitmaps, wedge checks finish locally;
+* ``kcore``    — iterative peeling via degree-threshold OR scatter waves.
+"""
+
+from __future__ import annotations
+
+from repro.programs.cc import ConnectedComponentsProgram, cc_reference
+from repro.programs.core import (
+    SYNCS,
+    ProgramConfig,
+    ProgramContext,
+    VertexProgram,
+    build_program_fn,
+    program_msg_words,
+    program_rows,
+    run_program,
+)
+from repro.programs.kcore import KCoreProgram, kcore_reference
+from repro.programs.pagerank import (
+    PageRankProgram,
+    pagerank_reference,
+    rank_arg,
+    repair_rank_rows,
+    uniform_ranks,
+)
+from repro.programs.triangles import (
+    TriangleCountProgram,
+    total_triangles,
+    triangles_reference,
+)
+
+#: The engine/service algo registry: name -> shared program instance
+#: (programs are stateless — all run state lives in the loop carry).
+PROGRAMS = {
+    p.name: p
+    for p in (
+        PageRankProgram(),
+        ConnectedComponentsProgram(),
+        TriangleCountProgram(),
+        KCoreProgram(),
+    )
+}
+
+PROGRAM_ALGOS = tuple(PROGRAMS)
+
+
+def by_name(name: str) -> VertexProgram:
+    try:
+        return PROGRAMS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown vertex program {name!r}; expected one of "
+            f"{sorted(PROGRAMS)}"
+        ) from None
+
+
+__all__ = [
+    "SYNCS",
+    "PROGRAMS",
+    "PROGRAM_ALGOS",
+    "ProgramConfig",
+    "ProgramContext",
+    "VertexProgram",
+    "build_program_fn",
+    "by_name",
+    "program_msg_words",
+    "program_rows",
+    "run_program",
+    "PageRankProgram",
+    "ConnectedComponentsProgram",
+    "TriangleCountProgram",
+    "KCoreProgram",
+    "pagerank_reference",
+    "cc_reference",
+    "triangles_reference",
+    "kcore_reference",
+    "total_triangles",
+    "uniform_ranks",
+    "rank_arg",
+    "repair_rank_rows",
+]

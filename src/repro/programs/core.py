@@ -1,0 +1,350 @@
+"""One gather-apply-scatter core for vertex programs (DESIGN.md §19).
+
+The §13/§14 traversals share one runtime shape — phase-1 local work over
+owned out-edges, phase-2 butterfly merge of a replicated buffer, inside
+``jit(shard_map(lax.while_loop))`` — but each driver (BFS, MS-BFS, SSSP,
+BC) re-states it by hand.  This module factors the shape into a reusable
+**vertex program** contract:
+
+* **gather** — each rank folds its owned edges into a flat message buffer
+  under the program's :class:`~repro.core.monoid.Monoid`;
+* **sync**   — the buffer is merged across ranks by the §5 butterfly
+  (dense full-buffer, sparse changed-word, or density-adaptive dispatch —
+  the SAME collectives every traversal uses, unchanged);
+* **apply**  — each rank folds the merged buffer into the replicated
+  per-vertex state and decides convergence;
+* **scatter** — the program's activity predicate (a changed bitmap, a
+  residual threshold, a peel wave) gates what the next gather touches.
+
+The idempotence/delta dichotomy (``core.monoid``) is enforced here: an
+idempotent program (MIN/OR) ships changed-vs-reference full values
+(*remerge*), a non-idempotent one (ADD) ships per-rank delta contributions
+against ``ref=None`` — each subcube partial is delivered exactly once, so
+the sparse wire is bit-identical to the dense reduce.
+
+Any :class:`VertexProgram` instance compiles through
+:func:`build_program_fn` to ONE XLA program per ``(graph, mesh, algo,
+config)`` — the same compile-once/run-many contract as the traversal
+drivers, and the same ``repro.core.loop`` skeleton, so the §18 flight
+recorder rides along for free (``trace=True``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives
+from repro.core import frontier as fr
+from repro.core import loop
+from repro.core import monoid as mono
+from repro.core.bfs import graph_array_keys, place_arrays
+from repro.graph.partition import PartitionedGraph
+
+SYNCS = ("butterfly", "sparse", "adaptive", "all_to_all", "xla")
+
+#: ``lax``-builtin all-reduce per monoid name (the ``sync="xla"`` baseline).
+_XLA_REDUCERS = {
+    "or": lambda x, a: collectives.xla_allreduce(x, (a,), op="or"),
+    "min": lax.pmin,
+    "max": lax.pmax,
+    "add": lax.psum,
+    "add_u32": lax.psum,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramConfig:
+    """Vertex-program knobs, mirroring :class:`repro.traversal.sssp.SSSPConfig`
+    (the sync family and its sparse/adaptive knobs are shared semantics);
+    ``damping``/``tol`` are read by convergence-style programs (PageRank)."""
+
+    axes: Tuple[str, ...] = ("data",)
+    fanout: int = 2
+    # butterfly | sparse | adaptive | all_to_all | xla
+    sync: str = "butterfly"
+    max_iters: Optional[int] = None
+    # --- sparse/adaptive sync knobs (shared semantics with SSSPConfig) ----
+    sparse_capacity: int = 0  # 0 -> auto-size to n_words // 64 (>= 64)
+    density_threshold: float = 0.02
+    # --- convergence knobs (PageRank; ignored by exact programs) ----------
+    damping: float = 0.85
+    tol: float = 1e-5  # total L1 residual threshold
+
+    def __post_init__(self):
+        if self.sync not in SYNCS:
+            raise ValueError(
+                f"unknown program sync {self.sync!r}; expected one of {SYNCS}"
+            )
+        if not 0.0 < self.damping < 1.0:
+            raise ValueError(f"damping must be in (0, 1), got {self.damping}")
+        if self.tol <= 0:
+            raise ValueError(f"tol must be > 0, got {self.tol}")
+
+    def resolved_capacity(self, n_words: int) -> int:
+        cap = self.sparse_capacity or max(64, n_words // 64)
+        return min(cap, n_words)
+
+
+def program_msg_words(pg: PartitionedGraph, program: "VertexProgram") -> int:
+    """Host-side :meth:`VertexProgram.msg_words`: programs size their
+    exchanged buffer off STATIC context fields only (``n_rows``/``nw``), so
+    a stub context suffices — trace buffers and benchmark wire-byte
+    accounting need the figure outside ``shard_map``."""
+    n_rows = program_rows(pg)
+    ctx = ProgramContext(
+        cfg=ProgramConfig(), n=pg.n, n_rows=n_rows,
+        nw=n_rows // fr.WORD_BITS, vmax=pg.vmax, arrays={},
+        v_start=None, v_count=None, vown_ids=None, owned_mask=None,
+    )
+    return program.msg_words(ctx)
+
+
+def program_rows(pg: PartitionedGraph, *, lane_pad: int = 128) -> int:
+    """Length of a per-vertex replicated buffer: the whole graph plus one
+    device window of slack (every device dynamic-slices its owned
+    ``[v_start, v_start + vmax)`` range without clamping), lane-padded —
+    identical to ``sssp.dist_rows`` / ``msbfs.wave_rows`` sizing."""
+    rows = pg.n + pg.vmax
+    return (rows + lane_pad - 1) // lane_pad * lane_pad
+
+
+@dataclasses.dataclass
+class ProgramContext:
+    """Everything a program's traced callbacks may read.  Static Python
+    ints (``n``, ``n_rows``, ``nw``, ``vmax``) are compile-time; the rest
+    are traced per-device values inside ``shard_map``."""
+
+    cfg: ProgramConfig
+    n: int  # graph vertices (incl. CSR padding)
+    n_rows: int  # replicated per-vertex buffer length (program_rows)
+    nw: int  # words of an n_rows-bit bitmap
+    vmax: int  # owned-window width
+    arrays: dict  # per-device placed graph arrays (leading [P] stripped)
+    v_start: jax.Array
+    v_count: jax.Array
+    vown_ids: jax.Array  # int32[vmax] local owned offsets
+    owned_mask: jax.Array  # bool[vmax]
+
+    @property
+    def edge_mask(self) -> jax.Array:
+        """bool[emax]: real owned out-edges (padding slots masked)."""
+        src = self.arrays["edge_src"]
+        e_ids = jnp.arange(src.shape[0], dtype=jnp.int32)
+        return e_ids < self.arrays["edge_count"]
+
+    def owned_slice(self, buf: jax.Array) -> jax.Array:
+        """This rank's ``[v_start, v_start + vmax)`` window of a replicated
+        per-vertex buffer."""
+        return lax.dynamic_slice(buf, (self.v_start,), (self.vmax,))
+
+
+class VertexProgram:
+    """The gather-apply-scatter contract (DESIGN.md §19).
+
+    Subclasses provide a monoid plus five traced callbacks; everything else
+    (sync dispatch, convergence loop, trace rows, sharding) is shared.
+    All callbacks run INSIDE ``shard_map`` on per-device values.
+
+    * ``name``       — the engine/service algo key;
+    * ``monoid``     — the exchange monoid; its :attr:`sparse_mode`
+      (remerge vs delta) constrains what ``gather`` may return as ``ref``;
+    * ``msg_words(ctx)`` — static length of the exchanged flat buffer;
+    * ``init(ctx, arg)`` — initial state tuple from the replicated operand;
+    * ``gather(ctx, state, it)`` — ``(msg, ref, work)``: the rank's
+      message buffer, the sparse reference (``None`` = delta mode — REQUIRED
+      for non-idempotent monoids), and this round's work units (float32);
+    * ``apply(ctx, state, merged, it)`` — next state from the merged buffer;
+    * ``active(ctx, state, it)`` — keep iterating? (ANDed with
+      ``it < max_iters``); must be replicated-consistent;
+    * ``outputs(ctx, state)`` — tuple of per-device owned result arrays;
+    * ``metrics(ctx, state, merged)`` — ``(pop, direction)`` int32 scalars
+      for the §18 trace row: POP is the program's PROGRESS measure
+      (PageRank: residual mass in ppm; CC: labels changed; k-core:
+      vertices peeled), DIR its phase indicator (k-core: current k).
+
+    Host-side companions: ``default_arg(pg)`` (the cold-start operand) and
+    ``assemble(pg, out)`` (per-device owned outputs -> global result).
+    """
+
+    name: str = "?"
+    monoid: mono.Monoid = mono.OR_U32
+    n_outputs: int = 1
+
+    # --- traced callbacks (inside shard_map) ------------------------------
+
+    def msg_words(self, ctx: ProgramContext) -> int:
+        return ctx.n_rows
+
+    def init(self, ctx: ProgramContext, arg) -> tuple:
+        raise NotImplementedError
+
+    def gather(self, ctx: ProgramContext, state: tuple, it):
+        raise NotImplementedError
+
+    def apply(self, ctx: ProgramContext, state: tuple, merged, it) -> tuple:
+        raise NotImplementedError
+
+    def active(self, ctx: ProgramContext, state: tuple, it):
+        raise NotImplementedError
+
+    def outputs(self, ctx: ProgramContext, state: tuple) -> tuple:
+        raise NotImplementedError
+
+    def metrics(self, ctx: ProgramContext, state: tuple, merged):
+        return jnp.int32(0), jnp.int32(0)
+
+    # --- host-side companions ---------------------------------------------
+
+    def default_max_iters(self, pg: PartitionedGraph) -> int:
+        return 1 << 30
+
+    def default_arg(self, pg: PartitionedGraph):
+        return jnp.int32(0)
+
+    def assemble(self, pg: PartitionedGraph, out) -> np.ndarray:
+        raise NotImplementedError
+
+
+def _sync_program(msg, ref, monoid: mono.Monoid, cfg: ProgramConfig,
+                  capacity: int):
+    """Phase-2 merge of the program's message buffer — the §14 sync
+    dispatch generalized over the monoid.  ``ref=None`` selects delta mode
+    on the sparse paths (enforced against ``monoid.sparse_mode``)."""
+    if cfg.sync == "butterfly":
+        return collectives.butterfly_reduce(
+            msg, cfg.axes, monoid, fanout=cfg.fanout
+        )
+    if cfg.sync == "sparse":
+        return collectives.butterfly_reduce_sparse(
+            msg, cfg.axes, monoid, fanout=cfg.fanout, capacity=capacity,
+            ref=ref,
+        )
+    if cfg.sync == "adaptive":
+        return collectives.butterfly_reduce_adaptive(
+            msg, cfg.axes, monoid, fanout=cfg.fanout, capacity=capacity,
+            density_threshold=cfg.density_threshold, ref=ref,
+        )
+    if cfg.sync == "all_to_all":
+        return collectives.all_to_all_merge(msg, cfg.axes, op=monoid.combine)
+    if cfg.sync == "xla":
+        reducer = _XLA_REDUCERS[monoid.name]
+        out = msg
+        for a in cfg.axes:
+            out = reducer(out, a)
+        return out
+    raise ValueError(f"unknown sync {cfg.sync!r}")
+
+
+def build_program_fn(
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, program: VertexProgram,
+    cfg: ProgramConfig = ProgramConfig(), *,
+    trace: bool = False, trace_levels=None,
+):
+    """Compile ``program`` to the shared traversal skeleton.
+
+    Returns ``run(arrays, arg)`` where ``arrays`` is the SAME placed graph
+    pytree every traversal driver consumes and ``arg`` the program's
+    replicated operand (PageRank: the warm-start rank vector; CC: initial
+    labels; others: an ignored scalar).  Output:
+    ``(*outputs[P, ...], iters int32[P], work float32[P])`` — ``work`` is
+    the global edge-examination count (honest-TEPS numerator).
+
+    ``trace=True`` appends the §18 flight-recorder buffer
+    ``int32[P, trace_levels, TRACE_COLS]`` with the POP/DIR columns
+    reinterpreted per program (see :meth:`VertexProgram.metrics`);
+    ``trace=False`` stages the exact uninstrumented program.
+    """
+    n_rows = program_rows(pg)
+    nw = n_rows // fr.WORD_BITS
+    vmax = pg.vmax
+    max_iters = (cfg.max_iters if cfg.max_iters is not None
+                 else program.default_max_iters(pg))
+    spec = P(cfg.axes if len(cfg.axes) > 1 else cfg.axes[0])
+    if trace:
+        from repro.core import flightrec
+
+        t_levels = flightrec.resolve_trace_levels(trace_levels, max_iters)
+
+    def body(arrays, arg):
+        arrays = jax.tree.map(lambda a: a[0], arrays)
+        vown_ids = jnp.arange(vmax, dtype=jnp.int32)
+        ctx = ProgramContext(
+            cfg=cfg, n=pg.n, n_rows=n_rows, nw=nw, vmax=vmax,
+            arrays=arrays, v_start=arrays["v_start"],
+            v_count=arrays["v_count"], vown_ids=vown_ids,
+            owned_mask=vown_ids < arrays["v_count"],
+        )
+        capacity = cfg.resolved_capacity(program.msg_words(ctx))
+        state0 = tuple(program.init(ctx, arg))
+        k = len(state0)
+
+        def cond(carry):
+            return program.active(ctx, carry[:k], carry[k]) & (
+                carry[k] < max_iters
+            )
+
+        def step(carry):
+            state, it, work = carry[:k], carry[k], carry[k + 1]
+            msg, ref, w = program.gather(ctx, state, it)
+            if trace:
+                ref_arr = (program.monoid.full(msg.shape, msg.dtype)
+                           if ref is None else ref)
+                t_words, t_branch, t_shipped = flightrec.monoid_sync_stats(
+                    msg, ref_arr, cfg, capacity
+                )
+            merged = _sync_program(msg, ref, program.monoid, cfg, capacity)
+            state = tuple(program.apply(ctx, state, merged, it))
+            out = state + (it + 1, work + w.astype(jnp.float32))
+            if not trace:
+                return out, None
+            pop, direction = program.metrics(ctx, state, merged)
+            row = flightrec.trace_row(
+                it, t_words, pop, direction, t_branch, t_shipped,
+                fr.changed_count(merged.reshape(-1), ref_arr.reshape(-1)),
+            )
+            return out, (it, row)
+
+        init = state0 + (jnp.int32(0), jnp.float32(0))
+        carry = loop.traced_while(
+            cond, step, init, trace=trace,
+            trace_levels=t_levels if trace else None,
+        )
+        state, it, work = carry[:k], carry[k], carry[k + 1]
+        total_work = lax.psum(work, cfg.axes)
+        out = tuple(o[None] for o in program.outputs(ctx, state))
+        out = out + (it[None], total_work[None])
+        if trace:
+            out = out + (carry[k + 2][None],)
+        return out
+
+    return loop.jit_shard(
+        body, mesh, graph_array_keys(pg), spec,
+        n_out=program.n_outputs + 2, trace=trace,
+    )
+
+
+def run_program(
+    pg: PartitionedGraph, mesh: jax.sharding.Mesh, program: VertexProgram,
+    cfg: ProgramConfig = ProgramConfig(), *, arg=None,
+) -> Tuple[np.ndarray, int, float]:
+    """End-to-end helper: place arrays, compile, run, assemble.
+
+    Returns ``(result, iters, work)`` — the program's global result (see
+    each program's ``assemble``), rounds executed, and edges examined.
+    """
+    arrays = place_arrays(pg, mesh, cfg.axes)
+    fn = build_program_fn(pg, mesh, program, cfg)
+    if arg is None:
+        arg = program.default_arg(pg)
+    out = fn(arrays, arg)
+    result = program.assemble(pg, np.asarray(out[0]))
+    return result, int(np.max(out[program.n_outputs])), float(
+        np.asarray(out[program.n_outputs + 1])[0]
+    )

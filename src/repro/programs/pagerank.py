@@ -1,0 +1,167 @@
+"""PageRank as a vertex program (DESIGN.md §19) — the first NON-idempotent
+monoid on the sparse butterfly path.
+
+Power iteration in the gather-apply-scatter contract:
+
+* **gather** — each rank scatters ``rank[u] / deg_out[u]`` over its owned
+  out-edges into a per-rank CONTRIBUTION buffer (``ADD_F32``), plus its
+  owned dangling mass into the slack row ``n`` (riding the same exchange —
+  no second collective);
+* **sync** — ADD is not idempotent, so the sparse path runs in **delta
+  mode** (``ref=None``): each rank ships its own nonzero contribution
+  words, identity-padded with exact ``0.0`` no-ops; the butterfly delivers
+  each subcube partial exactly once, so sparse/adaptive results are
+  **bit-identical** to the dense reduce (the §19 dichotomy, verified by
+  ``tests/test_programs.py``);
+* **apply** — ``rank' = (1-d)/n + d * (contrib + dangling/n)`` on every
+  rank from the replicated merged buffer; convergence when the total L1
+  residual drops to ``cfg.tol``.
+
+Warm starts are first-class: ``arg`` is the initial rank vector, so the
+§16 mutation path re-pushes from the cached pre-mutation ranks instead of
+cold-starting from uniform (:func:`repair_rank_rows`) — same compiled
+program, a fraction of the rounds.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import monoid as mono
+from repro.graph.csr import Graph
+from repro.graph.partition import PartitionedGraph
+from repro.programs import core
+
+
+class PageRankProgram(core.VertexProgram):
+    name = "pagerank"
+    monoid = mono.ADD_F32
+
+    def init(self, ctx, arg):
+        # arg: replicated float32[n_rows] initial ranks (uniform cold start,
+        # a cached vector for §16 warm re-push); residual inf => >= 1 round
+        return (arg, jnp.float32(jnp.inf))
+
+    def active(self, ctx, state, it):
+        return state[1] > jnp.float32(ctx.cfg.tol)
+
+    def gather(self, ctx, state, it):
+        rank = state[0]
+        a = ctx.arrays
+        src, dst = a["edge_src"], a["edge_dst"]
+        emask = ctx.edge_mask
+        # out-degree of each owned edge's source (locally indexed; real
+        # owned edges always have deg_out >= 1 — they carry this edge)
+        lidx = jnp.where(emask, src - ctx.v_start, 0)
+        deg = jnp.maximum(a["deg_out"][lidx], 1).astype(jnp.float32)
+        contrib = jnp.where(emask, rank[src] / deg, jnp.float32(0))
+        msg = jnp.zeros((ctx.n_rows,), jnp.float32).at[dst].add(contrib)
+        # owned dangling mass rides the exchange in slack row n (outside
+        # every owned output window, so it never leaks into results)
+        owned_rank = ctx.owned_slice(rank)
+        dangle = jnp.where(
+            ctx.owned_mask & (a["deg_out"] == 0), owned_rank, 0.0
+        ).sum(dtype=jnp.float32)
+        msg = msg.at[ctx.n].add(dangle)
+        return msg, None, emask.sum(dtype=jnp.float32)
+
+    def apply(self, ctx, state, merged, it):
+        rank = state[0]
+        n = ctx.n
+        d = jnp.float32(ctx.cfg.damping)
+        base = (1.0 - d) / n + d * merged[n] / n
+        real = jnp.arange(ctx.n_rows, dtype=jnp.int32) < n
+        new = jnp.where(real, base + d * merged, jnp.float32(0))
+        resid = jnp.abs(new - rank).sum(dtype=jnp.float32)
+        return (new, resid)
+
+    def outputs(self, ctx, state):
+        return (ctx.owned_slice(state[0]),)
+
+    def metrics(self, ctx, state, merged):
+        # POP: residual mass in parts-per-million (int32 trace cell)
+        ppm = jnp.minimum(state[1] * 1e6, jnp.float32(2**31 - 1))
+        return ppm.astype(jnp.int32), jnp.int32(0)
+
+    def default_max_iters(self, pg: PartitionedGraph) -> int:
+        return 200
+
+    def default_arg(self, pg: PartitionedGraph):
+        return uniform_ranks(pg)
+
+    def assemble(self, pg: PartitionedGraph, out) -> np.ndarray:
+        ranks = np.zeros(pg.n, dtype=np.float64)
+        out = np.asarray(out)
+        for i in range(pg.p):
+            s, c = int(pg.v_start[i]), int(pg.v_count[i])
+            ranks[s : s + c] = out[i, :c]
+        return ranks
+
+
+def uniform_ranks(pg: PartitionedGraph) -> jax.Array:
+    """The cold-start operand: ``1/n`` on real vertices, zero pad rows."""
+    n_rows = core.program_rows(pg)
+    rows = jnp.arange(n_rows, dtype=jnp.int32)
+    return jnp.where(rows < pg.n, jnp.float32(1.0 / pg.n), jnp.float32(0))
+
+
+def rank_arg(pg: PartitionedGraph, ranks: np.ndarray) -> jax.Array:
+    """Lift a cached global rank vector back into the replicated operand
+    (the §16 warm-start seed)."""
+    n_rows = core.program_rows(pg)
+    buf = np.zeros(n_rows, dtype=np.float32)
+    buf[: pg.n] = np.asarray(ranks, dtype=np.float32)[: pg.n]
+    return jnp.asarray(buf)
+
+
+def repair_rank_rows(rows, *, pg: PartitionedGraph, fn, arrays):
+    """§16 batch repairer: warm-start re-push of cached rank vectors.
+
+    ``fn`` is the compiled program (same one the cold path runs — warm
+    start is purely a different operand), ``arrays`` the engine's placed
+    pytree (already refreshed for the mutated partition).  Returns
+    ``[(new_row, touched, iters), ...]`` in ``migrate_cache``'s outcome
+    contract: ``touched`` counts vertices whose rank moved, ``iters`` the
+    re-push rounds (the recompute-vs-repair §16 accounting).
+    """
+    program = PageRankProgram()
+    outcomes = []
+    for row in rows:
+        out = fn(arrays, rank_arg(pg, row))
+        new = program.assemble(pg, np.asarray(out[0]))
+        iters = int(np.max(out[1]))
+        touched = int(np.sum(~np.isclose(new, row, rtol=1e-6, atol=1e-12)))
+        outcomes.append((new if touched else row, touched, iters))
+    return outcomes
+
+
+def pagerank_reference(
+    g: Graph, *, damping: float = 0.85, tol: float = 1e-5,
+    max_iters: int = 200, init: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Host power iteration (float64) — the PageRank oracle.  Mirrors the
+    device semantics exactly: per-edge ``rank[u]/deg_out[u]`` pushes,
+    dangling mass redistributed uniformly, total-L1-residual stopping —
+    so device float32 results match to float tolerance (documented in
+    DESIGN.md §19), not bit-exactly."""
+    n = g.n
+    offs, dst = g.row_offsets, g.dst
+    deg = np.diff(offs).astype(np.float64)
+    rank = (np.full(n, 1.0 / n) if init is None
+            else np.asarray(init, dtype=np.float64).copy())
+    src = np.repeat(np.arange(n), np.diff(offs))
+    inv_deg = 1.0 / np.maximum(deg, 1.0)
+    for _ in range(max_iters):
+        contrib = np.zeros(n)
+        np.add.at(contrib, dst, rank[src] * inv_deg[src])
+        dangle = rank[deg == 0].sum()
+        new = (1.0 - damping) / n + damping * (contrib + dangle / n)
+        resid = np.abs(new - rank).sum()
+        rank = new
+        if resid <= tol:
+            break
+    return rank

@@ -2,7 +2,10 @@
 
 The repo's first subsystem whose unit of work is a REQUEST STREAM rather
 than a fixed batch: callers submit single-root queries (``bfs`` /
-``closeness`` / ``sssp`` / ``bc``) with optional deadlines and get
+``closeness`` / ``sssp`` / ``bc``) or graph-global §19 vertex-program
+queries (``pagerank`` / ``cc`` / ``tri`` / ``kcore`` — the root argument
+is normalized to 0, every rider shares one converged result per epoch)
+with optional deadlines and get
 :class:`concurrent.futures.Future`\\ s back; a background wave scheduler
 coalesces compatible requests into full-width §13 lane waves against the
 batched :class:`~repro.analytics.engine.BFSQueryEngine`.
@@ -41,7 +44,8 @@ import numpy as np
 
 from repro.analytics import measures
 from repro.core.tracing import NULL_TRACER
-from repro.analytics.engine import BFSQueryEngine
+from repro import programs as programs_mod
+from repro.analytics.engine import BFSQueryEngine, compiled_program_fn
 from repro.core.bfs import BFSConfig
 from repro.dynamic import delta as delta_mod
 from repro.dynamic import repair as repair_mod
@@ -51,6 +55,7 @@ from repro.graph import partition as partition_mod
 from repro.service.cache import ResultCache, result_key
 from repro.service.queue import (  # noqa: F401  (public API re-exports)
     ALGOS,
+    PROGRAM_ALGOS,
     AdmissionError,
     DeadlineExceeded,
     QueryRequest,
@@ -111,6 +116,7 @@ class GraphQueryService:
             GraphVersion(), BFSQueryEngine(pg, mesh, cfg, lanes=lanes)
         )
         self._sssp_cfg = sssp_cfg
+        self._vp_cfg = None  # §19 knobs, derived from the engine cfg
         # streaming mutations (DESIGN.md §16): overlay built lazily from
         # the served partition on first apply_updates
         self.compact_ratio = compact_ratio
@@ -148,8 +154,20 @@ class GraphQueryService:
             self._sssp_cfg = self.engine._sssp_cfg(None)
         return self._sssp_cfg
 
+    @property
+    def program_cfg(self) -> "programs_mod.ProgramConfig":
+        """The service's §19 vertex-program knobs (engine BFS knobs lifted;
+        raises when the engine sync has no program equivalent)."""
+        if self._vp_cfg is None:
+            self._vp_cfg = self.engine._program_cfg(None)
+        return self._vp_cfg
+
     def _cfg_for(self, algo: str):
-        return self.sssp_cfg if algo == "sssp" else self.engine.cfg
+        if algo == "sssp":
+            return self.sssp_cfg
+        if algo in PROGRAM_ALGOS:
+            return self.program_cfg
+        return self.engine.cfg
 
     # --- submission path --------------------------------------------------
 
@@ -179,6 +197,9 @@ class GraphQueryService:
             if not engine.pg.weighted:
                 raise ValueError("sssp requires a weighted graph")
             self.sssp_cfg  # raises early when the sync has no SSSP analogue
+        if algo in PROGRAM_ALGOS:
+            self.program_cfg  # raises early when the sync has no analogue
+            root = 0  # global result: every rider shares one program run
         self.telemetry.record_submit()
         if self.tracer.enabled and not trace_id:
             trace_id = self.tracer.new_trace_id()
@@ -320,6 +341,7 @@ class GraphQueryService:
         self.mesh, self.cfg, self.lanes = mesh, cfg, lanes
         self.n_real = int(n_real) if n_real is not None else pg.n
         self._sssp_cfg = sssp_cfg
+        self._vp_cfg = None  # re-derived from the new engine cfg
         self._overlay = None  # rebuilt from the new partition on demand
         self.cache.drop_stale(version)
         self.telemetry.record_epoch_bump()
@@ -361,9 +383,12 @@ class GraphQueryService:
         are reused — same shapes, same partition identity), the version
         bumps ``delta_seq``, and every cached ``bfs``/``sssp`` row is
         either proven unchanged (empty repair seeds), repaired to its new
-        exact value on the device, or dropped — only full swaps
-        (slack overflow / compaction threshold) still cold-start the
-        cache, under a fresh epoch.  Returns the new version."""
+        exact value on the device, or dropped; cached ``pagerank`` vectors
+        are repaired by §19 incremental re-push (warm-started from their
+        pre-mutation values), while ``cc``/``tri``/``kcore`` rows drop.
+        Only full swaps (slack overflow / compaction threshold) still
+        cold-start the cache, under a fresh epoch.  Returns the new
+        version."""
         with self.swap_lock:
             old_version, engine = self._state
             overlay = self.overlay
@@ -447,6 +472,33 @@ class GraphQueryService:
                 reps["sssp"] = make(self.sssp_cfg, False)
             except ValueError:
                 pass  # same: sssp rows drop rather than failing the batch
+        try:
+            pcfg = self.program_cfg
+        except ValueError:
+            pcfg = None  # sync has no §19 analogue: pagerank rows drop
+
+        if pcfg is not None:
+            # §19 showcase: cached rank vectors warm-start the SAME
+            # compiled program from their pre-mutation values (incremental
+            # re-push) — a fraction of the cold rounds, counted through
+            # migrate_cache's repair_iters ledger.  cc/tri/kcore rows have
+            # no incremental story yet and drop (no repairer entry).
+            def pagerank_repairer(rows):
+                if budget[0] is not None and budget[0] < len(rows):
+                    return [None] * len(rows)  # budget exhausted: drop
+                fn = compiled_program_fn(
+                    engine.pg, self.mesh, "pagerank", pcfg
+                )
+                outcomes = programs_mod.repair_rank_rows(
+                    rows, pg=engine.pg, fn=fn, arrays=engine._arrays
+                )
+                if budget[0] is not None:
+                    budget[0] -= sum(
+                        1 for o in outcomes if o is not None and o[2] > 0
+                    )
+                return outcomes
+
+            reps["pagerank"] = pagerank_repairer
         return reps
 
     # --- lifecycle --------------------------------------------------------

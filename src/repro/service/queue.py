@@ -18,7 +18,12 @@ import time
 from concurrent.futures import Future, InvalidStateError
 from typing import List, Optional
 
-ALGOS = ("bfs", "closeness", "sssp", "bc")
+# §19 vertex programs (global results — root is normalized to 0 at submit;
+# kept as a literal so importing the queue never drags in jax; asserted
+# against repro.programs.PROGRAM_ALGOS by the test suite)
+PROGRAM_ALGOS = ("pagerank", "cc", "tri", "kcore")
+
+ALGOS = ("bfs", "closeness", "sssp", "bc") + PROGRAM_ALGOS
 
 _UNSET = object()
 

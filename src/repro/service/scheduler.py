@@ -19,7 +19,10 @@ failed without burning a lane (load shedding).  Wave classes: ``bfs`` and
 ``closeness`` share BFS distance waves; ``sssp`` batches through the
 engine's per-root min-reduce program; ``bc`` dispatches one source per
 engine call (per-request Brandes contributions cannot share a wave — the
-compiled program accumulates over lanes) but still dedups repeats.
+compiled program accumulates over lanes) but still dedups repeats; the
+§19 vertex programs (``pagerank``/``cc``/``tri``/``kcore``) are width-1
+classes whose ENTIRE pending group rides one engine run — their result is
+global, so every rider resolves from the same converged vector.
 """
 
 from __future__ import annotations
@@ -30,6 +33,7 @@ from typing import Dict, List, Optional, TYPE_CHECKING
 
 from repro.service.cache import result_key
 from repro.service.queue import (
+    PROGRAM_ALGOS,
     DeadlineExceeded,
     QueryRequest,
     ServiceStopped,
@@ -39,8 +43,14 @@ from repro.service.queue import (
 if TYPE_CHECKING:  # pragma: no cover
     from repro.service import GraphQueryService
 
-# request algo -> wave class sharing one dispatch group
+# request algo -> wave class sharing one dispatch group; §19 vertex
+# programs each form their own class (one global result per graph epoch,
+# so a class's whole pending group folds into a single engine run)
 WAVE_CLASS = {"bfs": "bfs", "closeness": "bfs", "sssp": "sssp", "bc": "bc"}
+WAVE_CLASS.update({algo: algo for algo in PROGRAM_ALGOS})
+
+#: Dispatch groups in drain order (insertion-ordered, deduped).
+WAVE_CLASSES = tuple(dict.fromkeys(WAVE_CLASS.values()))
 
 
 class WaveScheduler:
@@ -65,7 +75,7 @@ class WaveScheduler:
         # EWMA of per-engine-call service time, per wave class (seeds the
         # deadline-pressure trigger before the first measurement)
         self._est: Dict[str, float] = {
-            cls: est_service_s for cls in ("bfs", "sssp", "bc")
+            cls: est_service_s for cls in WAVE_CLASSES
         }
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -102,8 +112,10 @@ class WaveScheduler:
     # --- wave formation policy --------------------------------------------
 
     def wave_width(self, cls: str) -> int:
-        """Distinct roots that fill a wave (the full-wave trigger)."""
-        if not self.coalesce or cls == "bc":
+        """Distinct roots that fill a wave (the full-wave trigger).  §19
+        program classes are width-1: every rider shares ONE global result,
+        so a single pending request already fills the 'wave'."""
+        if not self.coalesce or cls == "bc" or cls in PROGRAM_ALGOS:
             return 1
         return self.service.engine.lanes
 
@@ -146,7 +158,7 @@ class WaveScheduler:
     def _run(self) -> None:
         svc = self.service
         pending: Dict[str, List[QueryRequest]] = {
-            cls: [] for cls in ("bfs", "sssp", "bc")
+            cls: [] for cls in WAVE_CLASSES
         }
         try:
             self._run_loop(svc, pending)
@@ -172,7 +184,7 @@ class WaveScheduler:
             for req in svc.queue.drain():
                 req.drain_t = now  # queue-wait / coalesce boundary (§18)
                 pending[WAVE_CLASS[req.algo]].append(req)
-            for cls in ("bfs", "sssp", "bc"):
+            for cls in WAVE_CLASSES:
                 reqs = pending[cls]
                 if reqs and self._ready(cls, reqs, now):
                     pending[cls] = []
@@ -338,6 +350,16 @@ class WaveScheduler:
                 )
             waves = engine.stats.waves - w0
             offered = engine.lanes * len(roots)
+        elif cls in PROGRAM_ALGOS:
+            # one global result per epoch: every rider (all roots fold to
+            # 0 at submit) resolves from the same converged vector
+            cfg = svc.program_cfg
+            vec = engine.vertex_program(cls, cfg)
+            for root in roots:
+                results[root] = vec
+                svc.cache.put(result_key(epoch, cls, cfg, root), vec)
+            waves = 1
+            offered = 1
         else:  # pragma: no cover
             raise AssertionError(f"unknown wave class {cls!r}")
         return results, waves, offered

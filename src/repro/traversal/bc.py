@@ -36,6 +36,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives
 from repro.core import frontier as fr
+from repro.core import loop
 from repro.core.bfs import (
     INF,
     BFSConfig,
@@ -234,18 +235,19 @@ def build_bc_fn(
                 level + 1,
                 scanned + m_f.astype(jnp.float32),
             )
-            if trace:
-                row = flightrec.trace_row(
-                    level, t_words, fr.popcount(new), jnp.int32(0), t_branch,
-                    t_shipped, jnp.count_nonzero(new).astype(jnp.int32),
-                )
-                out = out + (flightrec.record(state[6], level, row),)
-            return out
+            if not trace:
+                return out, None
+            row = flightrec.trace_row(
+                level, t_words, fr.popcount(new), jnp.int32(0), t_branch,
+                t_shipped, jnp.count_nonzero(new).astype(jnp.int32),
+            )
+            return out, (level, row)
 
         finit = (seen0, seen0, lvl0, sigma0, jnp.int32(0), jnp.float32(0))
-        if trace:
-            finit = finit + (flightrec.zeros(t_levels),)
-        fstate = lax.while_loop(fcond, fstep, finit)
+        fstate = loop.traced_while(
+            fcond, fstep, finit, trace=trace,
+            trace_levels=t_levels if trace else None,
+        )
         _, _, lvl, sigma, depth, scanned = fstate[:6]
 
         # ---- backward replay: dependency accumulation, deepest first ----
@@ -268,10 +270,10 @@ def build_bc_fn(
             )
             partial = jnp.zeros((n_rows, n_lanes), jnp.float32).at[osrc].add(c)
             inc = _sync_add(partial.reshape(-1), cfg).reshape(n_rows, n_lanes)
-            return delta + inc, level - 1
+            return (delta + inc, level - 1), None
 
         delta0 = jnp.zeros((n_rows, n_lanes), jnp.float32)
-        delta, _ = lax.while_loop(bcond, bstep, (delta0, depth))
+        delta, _ = loop.traced_while(bcond, bstep, (delta0, depth))
 
         # a source never scores its own lane (Brandes excludes s)
         delta = delta.at[seed_rows, lane_ids].set(0.0)
@@ -284,14 +286,7 @@ def build_bc_fn(
             out = out + (fstate[6][None],)
         return out
 
-    shard_fn = jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=({k: spec for k in graph_array_keys(pg)}, P()),
-        out_specs=(spec, spec, spec) + ((spec,) if trace else ()),
-        check_vma=False,
-    )
-    return jax.jit(shard_fn)
+    return loop.jit_shard(body, mesh, graph_array_keys(pg), spec, trace=trace)
 
 
 def assemble_bc(pg: PartitionedGraph, bc_owned: np.ndarray) -> np.ndarray:

@@ -37,6 +37,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives
 from repro.core import frontier as fr
+from repro.core import loop
 from repro.core import monoid as mono
 from repro.core.bfs import graph_array_keys, place_arrays
 from repro.graph.csr import Graph
@@ -236,18 +237,19 @@ def build_sssp_fn(
                 it + 1,
                 relaxed + src_active.sum(dtype=jnp.float32),
             )
-            if trace:
-                row = flightrec.trace_row(
-                    it, t_words, fr.popcount(improved), jnp.int32(0),
-                    t_branch, t_shipped, fr.changed_count(synced, dist),
-                )
-                out = out + (flightrec.record(state[5], it, row),)
-            return out
+            if not trace:
+                return out, None
+            row = flightrec.trace_row(
+                it, t_words, fr.popcount(improved), jnp.int32(0),
+                t_branch, t_shipped, fr.changed_count(synced, dist),
+            )
+            return out, (it, row)
 
         init = (dist, changed, jnp.uint32(0), jnp.int32(0), jnp.float32(0))
-        if trace:
-            init = init + (flightrec.zeros(t_levels),)
-        state = lax.while_loop(cond, step, init)
+        state = loop.traced_while(
+            cond, step, init, trace=trace,
+            trace_levels=t_levels if trace else None,
+        )
         dist, changed, _, it, relaxed = state[:5]
         total_relaxed = lax.psum(relaxed, cfg.axes)
         d_owned = lax.dynamic_slice(dist, (v_start,), (vmax,))
@@ -256,14 +258,7 @@ def build_sssp_fn(
             out = out + (state[5][None],)
         return out
 
-    shard_fn = jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=({k: spec for k in graph_array_keys(pg)}, P()),
-        out_specs=(spec, spec, spec) + ((spec,) if trace else ()),
-        check_vma=False,
-    )
-    return jax.jit(shard_fn)
+    return loop.jit_shard(body, mesh, graph_array_keys(pg), spec, trace=trace)
 
 
 def assemble_distances(pg: PartitionedGraph, d_owned: np.ndarray) -> np.ndarray:

@@ -248,10 +248,43 @@ if HAS_HYPOTHESIS:
         _check_identity_padding_noop(name, capacity, seed)
 
 
-def test_sparse_rejects_non_idempotent_monoid():
+def test_sparse_dichotomy_rejects_non_idempotent_remerge():
+    """§19 dichotomy: a non-idempotent monoid may only ship DELTA
+    contributions (ref=None); changed-vs-ref remerge raises the structured
+    error at build time for both the sparse and adaptive entry points."""
     x = jnp.zeros(8, jnp.float32)
-    with pytest.raises(ValueError, match="idempotent"):
-        coll.butterfly_reduce_sparse(x, "data", mono.ADD_F32)
+    with pytest.raises(mono.MonoidContractError, match="DELTA"):
+        coll.butterfly_reduce_sparse(
+            x, "data", mono.ADD_F32, ref=jnp.ones(8, jnp.float32)
+        )
+    with pytest.raises(mono.MonoidContractError, match="DELTA"):
+        coll.butterfly_reduce_adaptive(
+            x, "data", mono.ADD_F32, ref=jnp.ones(8, jnp.float32)
+        )
+
+
+def test_monoid_validates_idempotence_flag_at_construction():
+    """A wrong ``idempotent`` flag is a silent sparse-path corruptor —
+    construction must probe combine on sample words and raise the
+    structured :class:`MonoidContractError` either way."""
+    with pytest.raises(mono.MonoidContractError) as ei:
+        mono.Monoid("bad_add", 0.0, jnp.add, "add", idempotent=True)
+    assert ei.value.monoid == "bad_add"
+    assert ei.value.flag is True
+    assert ei.value.counterexample is not None
+    with pytest.raises(mono.MonoidContractError) as ei:
+        mono.Monoid("bad_or", 0, jnp.bitwise_or, "max", idempotent=False)
+    assert ei.value.flag is False
+    # a broken identity (not a unit) is also rejected
+    with pytest.raises(mono.MonoidContractError, match="unit"):
+        mono.Monoid("bad_id", 7, jnp.minimum, "min", idempotent=True)
+
+
+def test_sparse_mode_property():
+    assert mono.OR_U32.sparse_mode == mono.SPARSE_REMERGE
+    assert mono.MIN_U32.sparse_mode == mono.SPARSE_REMERGE
+    assert mono.ADD_F32.sparse_mode == mono.SPARSE_DELTA
+    assert mono.ADD_U32.sparse_mode == mono.SPARSE_DELTA
 
 
 def test_monoid_registry():

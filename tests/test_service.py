@@ -327,7 +327,7 @@ def test_submit_validation(pgraph, mesh8, graph):
     svc = _service(pgraph, mesh8, graph, start=False)
     try:
         with pytest.raises(ValueError, match="unknown algo"):
-            svc.submit("pagerank", 0)
+            svc.submit("eigentrust", 0)  # pagerank et al are servable now
         with pytest.raises(ValueError, match="out of range"):
             svc.submit("bfs", -1)
         with pytest.raises(ValueError, match="out of range"):
