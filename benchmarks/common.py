@@ -14,7 +14,9 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import json  # noqa: E402
+import subprocess  # noqa: E402
 import time  # noqa: E402
+from datetime import datetime, timezone  # noqa: E402
 from typing import Callable, Dict, List  # noqa: E402
 
 import jax  # noqa: E402
@@ -22,6 +24,28 @@ import numpy as np  # noqa: E402
 
 CAVEAT = ("host-simulated devices: wall-times are relative-comparison-only; "
           "roofline numbers are in EXPERIMENTS.md")
+
+
+def run_meta() -> Dict:
+    """Provenance stamped on every freshly-emitted ``BENCH_bfs.json`` row:
+    which tree produced the number, when, and on what host shape — the
+    regression sentinel (``benchmarks.regress``) uses ``host_cpus`` to
+    refuse cross-environment comparisons."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    return {
+        "git_sha": sha,
+        "timestamp": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+        "host_cpus": os.cpu_count(),
+        "jax": jax.__version__,
+    }
 
 
 def mesh8():

@@ -1,0 +1,325 @@
+"""Perf-regression sentinel over the BENCH_bfs.json trajectory (§20).
+
+``python -m benchmarks.regress`` diffs the fresh ``BENCH_bfs.json`` rows
+against the committed ``BENCH_baseline.json`` and emits a machine-readable
+verdict; tier-2 CI gates on its exit status.
+
+Design constraints baked in:
+
+* **Stdlib only, no jax import** — the sentinel must run in seconds on any
+  checkout, including ones where the accelerator stack is broken (that is
+  exactly when you want it to still speak).
+* **Direction-aware**: only metrics with a known better-direction are
+  compared (timings and latency percentiles are lower-better, throughput
+  rates higher-better).  Deterministic model outputs (wire bytes, level
+  counts) and identity fields are informational and never flagged.
+* **Noise-tolerant min-of-k**: the baseline keeps a HISTORY of up to
+  ``HISTORY_K`` values per metric (each ``--seed`` appends).  A fresh
+  value is compared against the BEST of the history (min for lower-better,
+  max for higher-better) — the one-shot CI timing only has to beat the
+  best the environment has ever shown, scaled by the threshold, so a
+  single slow baseline sample never hides a regression and a single fast
+  one never flags noise at default thresholds.
+* **Geomean-ratio gating**: a single metric past ``--threshold`` is only
+  FLAGGED; the run FAILS when a whole category's geomean ratio drifts past
+  ``--geomean-threshold`` or any single metric blows through
+  ``--hard-threshold``.  One noisy cell cannot fail CI; a real slowdown
+  (which moves every cell of its category) cannot hide.
+* **Env-matched**: comparisons are skipped (verdict ``ok`` with
+  ``env_matched: false``) when the baseline was seeded on a host with a
+  different ``host_cpus``, unless ``--ignore-env`` forces them.
+
+``--seed`` (re)writes the baseline from the current rows; ``--self-test``
+injects a synthetic 2x slowdown into every comparable metric and asserts
+the sentinel flags it (exits 0 iff the slowdown FAILS the gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+BASELINE_SCHEMA = "bench_baseline/v1"
+VERDICT_SCHEMA = "bench_regress/v1"
+HISTORY_K = 5  # min-of-k window per metric
+
+_DEFAULT_BENCH = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_bfs.json"))
+_DEFAULT_BASELINE = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_baseline.json"))
+
+# better-direction vocabulary over the BENCH_bfs.json leaf metric names
+_LOWER_NAMES = {"ms", "p50", "p95", "p99", "p99_inflation"}
+_HIGHER_NAMES = {
+    "mteps", "agg_mteps", "single_mteps", "medges_s", "mrelax_per_s",
+    "qps", "achieved_qps", "qps_coalesced", "qps_per_request", "qps_vs_n1",
+    "qps_speedup", "searches_per_s", "single_searches_per_s",
+    "agg_speedup_vs_single", "speedup", "speedup_warm", "repair_speedup",
+    "repair_speedup_warm",
+}
+
+
+def metric_direction(name: str) -> Optional[str]:
+    """'lower' / 'higher' when smaller/larger is better; None = skip
+    (identity fields, deterministic byte/level counts, hit rates)."""
+    if name in _LOWER_NAMES or name.endswith("_ms"):
+        return "lower"
+    if name in _HIGHER_NAMES or name.endswith("_per_s"):
+        return "higher"
+    return None
+
+
+def flatten(bench: Dict) -> Dict[str, float]:
+    """``{"category/row/.../metric": value}`` for every numeric leaf,
+    skipping provenance (``meta``) subtrees."""
+    out: Dict[str, float] = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if k == "meta":
+                    continue
+                walk(v, path + (k,))
+        elif isinstance(node, (int, float)) and not isinstance(node, bool):
+            out["/".join(path)] = float(node)
+
+    walk(bench, ())
+    return out
+
+
+def collect_meta(bench: Dict) -> Dict:
+    """The most recent per-row provenance stamp found in the tree (rows
+    carry their own ``meta``; the newest one describes this run's host)."""
+    best: Dict = {}
+
+    def walk(node):
+        nonlocal best
+        if isinstance(node, dict):
+            m = node.get("meta")
+            if (isinstance(m, dict) and
+                    m.get("timestamp", "") >= best.get("timestamp", "")):
+                best = m
+            for v in node.values():
+                walk(v)
+
+    walk(bench)
+    return best
+
+
+def seed_baseline(bench: Dict, baseline_path: str) -> Dict:
+    """(Re)seed the committed baseline from the current rows: every
+    comparable metric's history gains this run's value (capped at
+    ``HISTORY_K``, oldest dropped); provenance is carried along."""
+    prior_rows: Dict[str, List[float]] = {}
+    if os.path.exists(baseline_path):
+        try:
+            with open(baseline_path) as f:
+                prior = json.load(f)
+            if prior.get("schema") == BASELINE_SCHEMA:
+                prior_rows = prior.get("rows", {})
+        except (OSError, ValueError):
+            pass
+    rows: Dict[str, List[float]] = {}
+    for key, value in sorted(flatten(bench).items()):
+        if metric_direction(key.rsplit("/", 1)[-1]) is None:
+            continue
+        hist = list(prior_rows.get(key, []))
+        hist.append(value)
+        rows[key] = hist[-HISTORY_K:]
+    doc = {"schema": BASELINE_SCHEMA, "meta": collect_meta(bench),
+           "rows": rows}
+    with open(baseline_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc
+
+
+def compare(
+    bench: Dict,
+    baseline: Dict,
+    *,
+    threshold: float = 1.5,
+    geomean_threshold: float = 1.15,
+    hard_threshold: float = 2.0,
+    env_matched: bool = True,
+) -> Dict:
+    """Diff fresh rows against the baseline histories; returns the
+    verdict document (see module docstring for the gate)."""
+    fresh = flatten(bench)
+    rows: Dict[str, List[float]] = baseline.get("rows", {})
+    compared: List[Dict] = []
+    flagged: List[Dict] = []
+    failures: List[Dict] = []
+    ratios_by_cat: Dict[str, List[float]] = {}
+    for key, hist in sorted(rows.items()):
+        if key not in fresh or not hist:
+            continue
+        metric = key.rsplit("/", 1)[-1]
+        direction = metric_direction(metric)
+        if direction is None:
+            continue
+        value = fresh[key]
+        if direction == "lower":
+            ref = min(hist)
+            ratio = value / ref if ref > 0 else 1.0
+        else:
+            ref = max(hist)
+            ratio = ref / value if value > 0 else math.inf
+        entry = {"key": key, "direction": direction, "value": value,
+                 "baseline": ref, "ratio": ratio}
+        compared.append(entry)
+        ratios_by_cat.setdefault(key.split("/", 1)[0], []).append(ratio)
+        if ratio > hard_threshold:
+            failures.append({**entry, "why": "hard_threshold"})
+        elif ratio > threshold:
+            flagged.append(entry)
+    categories = {}
+    for cat, ratios in sorted(ratios_by_cat.items()):
+        gm = math.exp(sum(math.log(max(r, 1e-12)) for r in ratios)
+                      / len(ratios))
+        categories[cat] = {"geomean_ratio": gm, "n": len(ratios)}
+        if gm > geomean_threshold:
+            failures.append({"key": cat, "direction": "category",
+                             "ratio": gm, "why": "geomean_threshold"})
+    ok = not env_matched or not failures
+    return {
+        "schema": VERDICT_SCHEMA,
+        "ok": ok,
+        "env_matched": env_matched,
+        "compared": len(compared),
+        "thresholds": {"per_metric": threshold,
+                       "geomean": geomean_threshold,
+                       "hard": hard_threshold},
+        "categories": categories,
+        "flagged": flagged,
+        "failures": failures if env_matched else [],
+        "skipped_failures": failures if not env_matched else [],
+    }
+
+
+def degrade(bench: Dict, factor: float = 2.0) -> Dict:
+    """A synthetically regressed copy: every comparable metric is made
+    ``factor``x worse in its bad direction (self-test input)."""
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif (isinstance(v, (int, float)) and not isinstance(v, bool)
+                    and metric_direction(k) is not None):
+                out[k] = v * factor if metric_direction(k) == "lower" \
+                    else v / factor
+            else:
+                out[k] = v
+        return out
+
+    return walk(bench)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="perf-regression sentinel over BENCH_bfs.json")
+    ap.add_argument("--bench", default=_DEFAULT_BENCH,
+                    help="fresh benchmark rows (default: repo "
+                         "BENCH_bfs.json)")
+    ap.add_argument("--baseline", default=_DEFAULT_BASELINE,
+                    help="committed baseline (default: repo "
+                         "BENCH_baseline.json)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the machine-readable verdict JSON here")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="per-metric flag ratio (default 1.5)")
+    ap.add_argument("--geomean-threshold", type=float, default=1.15,
+                    help="per-category geomean fail ratio (default 1.15)")
+    ap.add_argument("--hard-threshold", type=float, default=2.0,
+                    help="single-metric fail ratio (default 2.0)")
+    ap.add_argument("--seed", action="store_true",
+                    help="(re)seed the baseline from the fresh rows "
+                         "instead of comparing")
+    ap.add_argument("--self-test", action="store_true",
+                    help="inject a synthetic 2x slowdown and assert the "
+                         "sentinel fails it (exit 0 iff flagged)")
+    ap.add_argument("--ignore-env", action="store_true",
+                    help="compare even when baseline host_cpus differs "
+                         "from this host")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.bench) as f:
+            bench = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"cannot read bench rows {args.bench}: {exc}",
+              file=sys.stderr)
+        return 2
+
+    if args.seed:
+        doc = seed_baseline(bench, args.baseline)
+        print(f"baseline seeded: {len(doc['rows'])} metric histories -> "
+              f"{args.baseline}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"cannot read baseline {args.baseline}: {exc} "
+              f"(seed one with --seed)", file=sys.stderr)
+        return 2
+    if baseline.get("schema") != BASELINE_SCHEMA:
+        print(f"baseline schema {baseline.get('schema')!r} != "
+              f"{BASELINE_SCHEMA!r}", file=sys.stderr)
+        return 2
+
+    base_cpus = (baseline.get("meta") or {}).get("host_cpus")
+    env_matched = (args.ignore_env or base_cpus is None
+                   or base_cpus == os.cpu_count())
+
+    if args.self_test:
+        verdict = compare(
+            degrade(bench), baseline, threshold=args.threshold,
+            geomean_threshold=args.geomean_threshold,
+            hard_threshold=args.hard_threshold, env_matched=True,
+        )
+        caught = bool(verdict["failures"])
+        print(f"self-test: synthetic 2x slowdown over "
+              f"{verdict['compared']} metrics -> "
+              f"{'CAUGHT' if caught else 'MISSED'} "
+              f"({len(verdict['failures'])} failures)")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({**verdict, "self_test": True}, f, indent=1)
+        return 0 if caught else 1
+
+    verdict = compare(
+        bench, baseline, threshold=args.threshold,
+        geomean_threshold=args.geomean_threshold,
+        hard_threshold=args.hard_threshold, env_matched=env_matched,
+    )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(verdict, f, indent=1)
+    status = "OK" if verdict["ok"] else "REGRESSION"
+    if not env_matched:
+        status += (f" (env mismatch: baseline host_cpus={base_cpus} vs "
+                   f"{os.cpu_count()}; comparisons skipped — "
+                   f"--ignore-env to force)")
+    print(f"{status}: {verdict['compared']} metrics compared, "
+          f"{len(verdict['flagged'])} flagged, "
+          f"{len(verdict['failures'])} failures")
+    for fail in verdict["failures"]:
+        print(f"  FAIL [{fail['why']}] {fail['key']} "
+              f"ratio={fail['ratio']:.3f}")
+    for fl in verdict["flagged"]:
+        print(f"  flag {fl['key']} ratio={fl['ratio']:.3f} "
+              f"({fl['value']:.4g} vs best {fl['baseline']:.4g})")
+    return 0 if verdict["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

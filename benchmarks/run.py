@@ -107,6 +107,14 @@ def main(argv=None) -> int:
         "dynamic_update": extras.get("dynamic_update", {}),
         "vertex_program": extras.get("vertex_program", {}),
     }
+    # provenance on every freshly-emitted row (meta rides the per-row
+    # merge below, so stale rows keep the meta of the run that made them)
+    meta = common.run_meta()
+    for rows in bench.values():
+        if isinstance(rows, dict):
+            for row in rows.values():
+                if isinstance(row, dict):
+                    row["meta"] = meta
     bench_out = os.path.join(os.path.dirname(__file__), "..", "BENCH_bfs.json")
     bench_out = os.path.abspath(bench_out)
     # merge into the existing trajectory file PER ROW: benchmarks that did

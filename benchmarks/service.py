@@ -453,7 +453,13 @@ def main(argv=None) -> int:
     # merge per row for EVERY emitted key (service_latency,
     # service_replicas, service_chaos, ...): a smoke run must not erase
     # recorded full-scale cells
+    from benchmarks.common import run_meta
+
+    meta = run_meta()
     for key, rows in rep.extra.items():
+        for row in rows.values():
+            if isinstance(row, dict):
+                row["meta"] = meta
         bench.setdefault(key, {}).update(rows)
     with open(path, "w") as f:
         json.dump(bench, f, indent=1)

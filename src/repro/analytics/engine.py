@@ -24,8 +24,9 @@ Four query families share the placed arrays and the cache:
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -33,12 +34,34 @@ import jax.numpy as jnp
 
 from repro import programs
 from repro.analytics import msbfs
+from repro.core import metrics as metrics_mod
 from repro.core.bfs import BFSConfig, place_arrays
 from repro.core.devlock import device_lock
 from repro.graph.partition import PartitionedGraph
 from repro.traversal import bc as bc_mod
 from repro.traversal import sssp as sssp_mod
 from repro.traversal.sssp import SSSPConfig
+
+# Registry-backed engine observability (DESIGN.md §20).  Host-side only:
+# none of these touch staged programs, so lowered HLO is byte-identical
+# with metrics enabled or absent (tests/test_metrics.py proves it).
+_REG = metrics_mod.default_registry()
+_CACHE_EVENTS = _REG.counter(
+    "engine_program_cache_total",
+    "compiled-program cache events (hit / miss / evict)", ("event",))
+_BUILDS = _REG.counter(
+    "engine_program_builds_total",
+    "program constructions on cache miss (the compile events), by algo",
+    ("algo",))
+_BUILD_SECONDS = _REG.histogram(
+    "engine_program_build_seconds", "wall time of each program build",
+    buckets=(0.001, 0.01, 0.1, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0))
+_WAVES = _REG.counter(
+    "engine_waves_total", "compiled-program invocations, by algo",
+    ("algo",))
+_DEDUPED = _REG.counter(
+    "engine_deduped_roots_total",
+    "duplicate roots folded out of waves before lane packing")
 
 # Compiled-program cache: (graph identity, mesh identity, algo, cfg, lanes)
 # -> (fn, pg, mesh).  Configs are frozen dataclasses, so they hash by value;
@@ -53,14 +76,25 @@ _PROGRAM_CACHE: "OrderedDict[Tuple, Tuple]" = OrderedDict()
 _PROGRAM_CACHE_MAX = 32
 
 
+_REG.gauge(
+    "engine_program_cache_size", "live entries in the program cache"
+).set_function(lambda: len(_PROGRAM_CACHE))
+
+
 def _cached(pg, mesh, key: Tuple, build: Callable[[], object]):
     entry = _PROGRAM_CACHE.get(key)
     if entry is not None and entry[1] is pg and entry[2] is mesh:
         _PROGRAM_CACHE.move_to_end(key)
+        _CACHE_EVENTS.inc(event="hit")
         return entry[0]
+    _CACHE_EVENTS.inc(event="miss")
+    t0 = time.perf_counter()
     fn = build()
+    _BUILD_SECONDS.observe(time.perf_counter() - t0)
+    _BUILDS.inc(algo=str(key[2]) if len(key) > 2 else "?")
     while len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_MAX:
         _PROGRAM_CACHE.popitem(last=False)
+        _CACHE_EVENTS.inc(event="evict")
     _PROGRAM_CACHE[key] = (fn, pg, mesh)
     return fn
 
@@ -170,6 +204,7 @@ class BFSQueryEngine:
                 np.asarray(d_owned), np.asarray(levels), np.asarray(scanned)
             )
         self.stats.waves += 1
+        _WAVES.inc(algo="bfs")
         self.stats.scanned_edges += float(np.asarray(scanned)[0])
         self.stats.max_levels = max(self.stats.max_levels, int(np.max(levels)))
         dist = msbfs.assemble_distances(self.pg, d_owned, self.lanes)
@@ -201,11 +236,28 @@ class BFSQueryEngine:
             out.append(self._run_wave(uniq[lo : lo + self.lanes]))
         self.stats.queries += int(roots.size)
         self.stats.deduped_roots += int(roots.size - uniq.size)
+        _DEDUPED.inc(int(roots.size - uniq.size))
         return np.concatenate(out, axis=0)[inverse]
 
     def query_one(self, root: int) -> np.ndarray:
         """Single-root convenience: ``int64[n]`` distances."""
         return self.query([root])[0]
+
+    def profile(self, root: int = 0, *, iters: int = 3) -> Dict:
+        """§20 cost-model profile: a deep (timed + HLO-reconciled) profile
+        of the single-source program from ``root``, plus the static
+        analytic-vs-HLO byte reconciliation of every program cached for
+        this graph.  Returns ``{"program": ProgramProfile,
+        "cache": [CacheEntryReport, ...]}``."""
+        from repro.core import profiler
+
+        with device_lock(self.mesh):
+            prof = profiler.profile_bfs(
+                self.pg, self.mesh, self.cfg, int(root), iters=iters,
+                arrays=self._arrays,
+            )
+            cache = profiler.cache_report(self)
+        return {"program": prof, "cache": cache}
 
     # --- weighted traversals (DESIGN.md §14) ------------------------------
 
@@ -244,6 +296,7 @@ class BFSQueryEngine:
                 d_owned, relaxed = np.asarray(d_owned), np.asarray(relaxed)
             out[i] = sssp_mod.assemble_distances(self.pg, d_owned)
             self.stats.relaxed_edges += float(np.asarray(relaxed)[0])
+            _WAVES.inc(algo="sssp")
         self.stats.sssp_queries += int(roots.size)
         return out
 
@@ -269,6 +322,7 @@ class BFSQueryEngine:
                 )
             bc += bc_mod.assemble_bc(self.pg, bc_owned)
             self.stats.waves += 1
+            _WAVES.inc(algo="bc")
             self.stats.scanned_edges += float(np.asarray(scanned)[0])
             self.stats.max_levels = max(
                 self.stats.max_levels, int(np.max(depth))
@@ -337,4 +391,5 @@ class BFSQueryEngine:
         self.stats.program_runs += 1
         self.stats.program_iters += iters
         self.stats.program_edges += work
+        _WAVES.inc(algo="vp:" + algo)
         return prog.assemble(self.pg, out[0]), iters, work

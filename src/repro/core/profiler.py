@@ -1,0 +1,327 @@
+"""Per-program cost-model profiler (DESIGN.md §20).
+
+Joins three sources of truth about one compiled traversal program:
+
+* the §12 ANALYTIC byte model (``flightrec.TraversalTrace``) — what the
+  butterfly exchange *should* move per level;
+* the COMPILED HLO (``launch.hlo_stats``) — what the program is staged to
+  move and compute, branch-attributed for adaptive programs;
+* HOST-TIMED wall clock — the fused program min-of-k (honest absolute)
+  plus §18 per-level segmented times (relative weights).
+
+The join yields achieved-vs-modeled GTEPS, a wire-efficiency ratio
+(analytic bytes / branch-attributed HLO bytes — exactly 1.0 when the
+model reconciles, the acceptance bar), and a per-level time×bytes
+attribution table.  ``cache_report`` applies the same reconciliation to
+every program in the engine's module-wide cache WITHOUT running them:
+the byte model is a pure function of the program's static config, so a
+data-empty trace suffices.
+
+Everything here is host-side analysis; no staged program is altered.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = [
+    "LevelRow",
+    "ProgramProfile",
+    "CacheEntryReport",
+    "profile_bfs",
+    "cache_report",
+    "format_profile",
+]
+
+
+@dataclasses.dataclass
+class LevelRow:
+    """One level of the time×bytes attribution table."""
+
+    level: int
+    branch: str  # dense / sparse / fallback
+    direction: str  # push / pull
+    pop: int
+    density: float
+    bytes_per_node: float
+    wall_ms: float
+    time_frac: float  # share of segmented wall clock
+    bytes_frac: float  # share of analytic wire bytes
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ProgramProfile:
+    """The profiler's verdict on one compiled single-source BFS program."""
+
+    algo: str
+    sync: str
+    p: int
+    fanout: int
+    levels: int
+    n_words: int
+    capacity: int
+    scanned_edges: float
+    wall_ms: float  # fused program, min of k timed runs
+    wall_ms_levels: float  # segmented per-level total (host sync inflated)
+    achieved_gteps: float
+    modeled_gteps: float
+    model_bytes: Dict[str, float]  # analytic dense/sparse bytes per node
+    hlo_bytes: Dict[str, float]  # compiled branch-attributed bytes per node
+    reconciled: bool  # model == HLO exactly, per branch
+    wire_efficiency: float  # Σ analytic level bytes / Σ HLO level bytes
+    roofline: Dict  # hlo_stats.Roofline as a dict
+    per_level: List[LevelRow]
+
+    def to_dict(self) -> Dict:
+        out = dataclasses.asdict(self)
+        out["per_level"] = [r.to_dict() for r in self.per_level]
+        return out
+
+    def table(self) -> str:
+        return format_profile(self)
+
+
+@dataclasses.dataclass
+class CacheEntryReport:
+    """Static reconciliation of one cached engine program (no execution)."""
+
+    algo: str
+    sync: str
+    lanes: Optional[int]
+    n_words: int
+    capacity: int
+    supported: bool  # byte model stated for this program shape
+    reconciled: bool
+    model_bytes: Dict[str, float]
+    hlo_bytes: Dict[str, float]
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+_BRANCH_NAMES = {0: "dense", 1: "sparse", 2: "fallback"}
+
+
+def _per_level_rows(trace, rec: Dict) -> List[LevelRow]:
+    from repro.core import flightrec
+
+    bytes_per_node = trace.level_bytes_per_node()
+    density = trace.word_density()
+    total_bytes = float(bytes_per_node.sum()) or 1.0
+    walls = (
+        np.asarray(trace.wall_ms, dtype=np.float64)
+        if trace.wall_ms is not None
+        else np.zeros(trace.levels)
+    )
+    total_wall = float(walls.sum()) or 1.0
+    rows = []
+    for i in range(trace.levels):
+        branch = int(trace.data[i, flightrec.COL_BRANCH])
+        rows.append(LevelRow(
+            level=int(trace.data[i, flightrec.COL_LEVEL]),
+            branch=_BRANCH_NAMES.get(branch, str(branch)),
+            direction="pull" if trace.data[i, flightrec.COL_DIR] else "push",
+            pop=int(trace.data[i, flightrec.COL_POP]),
+            density=float(density[i]),
+            bytes_per_node=float(bytes_per_node[i]),
+            wall_ms=float(walls[i]) if i < walls.size else 0.0,
+            time_frac=float(walls[i]) / total_wall if i < walls.size else 0.0,
+            bytes_frac=float(bytes_per_node[i]) / total_bytes,
+        ))
+    return rows
+
+
+def _hlo_level_bytes(trace, rec: Dict) -> float:
+    """Total branch-attributed compiled bytes for the levels the traversal
+    actually took (dense and overflow-fallback levels pay the compiled
+    dense branch, sparse levels the compiled sparse branch)."""
+    from repro.core import flightrec
+
+    hlo = rec.get("hlo", {})
+    dense = float(hlo.get("dense", 0.0))
+    sparse = float(hlo.get("sparse", dense))
+    branch = trace.data[:, flightrec.COL_BRANCH]
+    per = np.where(branch == flightrec.BRANCH_SPARSE, sparse, dense)
+    return float(per.sum())
+
+
+def profile_bfs(
+    pg, mesh, cfg, root: int, *, iters: int = 3, arrays=None,
+) -> ProgramProfile:
+    """Profile the single-source §3 BFS program for ``(pg, mesh, cfg)``.
+
+    Compiles the UNINSTRUMENTED program (trace=False — byte-identical to
+    production), times it min-of-``iters`` with ``block_until_ready``,
+    re-runs segmented for per-level wall clock, and reconciles the
+    analytic byte model against the compiled HLO exactly.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import bfs as bfs_mod
+    from repro.core import flightrec
+    from repro.launch import hlo_stats
+
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    if arrays is None:
+        arrays = bfs_mod.place_arrays(pg, mesh, cfg.axes)
+    fn = bfs_mod.build_bfs_fn(pg, mesh, cfg)
+    compiled = fn.lower(arrays, jnp.int32(root)).compile()
+    hlo = compiled.as_text()
+
+    jax.block_until_ready(compiled(arrays, jnp.int32(root)))  # warm
+    best = float("inf")
+    levels = scanned = 0
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _, levels, scanned = jax.block_until_ready(
+            compiled(arrays, jnp.int32(root))
+        )
+        best = min(best, time.perf_counter() - t0)
+    levels = int(np.max(levels))
+    scanned = float(np.asarray(scanned).reshape(-1)[0])
+
+    _, trace = flightrec.timed_bfs_levels(pg, mesh, cfg, root, arrays=arrays)
+    rec = flightrec.reconcile_bytes(trace, hlo)
+    rf = hlo_stats.roofline_from(compiled, hlo)
+    roofline = dataclasses.asdict(rf)
+    roofline["dominant"] = rf.dominant
+    roofline["step_time"] = rf.step_time
+
+    # modeled time: per level one roofline-bound local phase plus the
+    # analytic wire bytes over the ICI (§12 cost model)
+    bytes_per_node = trace.level_bytes_per_node()
+    t_local = max(rf.t_compute, rf.t_memory)
+    t_model = trace.levels * t_local + float(
+        bytes_per_node.sum()
+    ) / hlo_stats.ICI_BW
+    hlo_total = _hlo_level_bytes(trace, rec)
+    analytic_total = float(bytes_per_node.sum())
+
+    return ProgramProfile(
+        algo="bfs",
+        sync=cfg.sync,
+        p=int(pg.p),
+        fanout=int(cfg.fanout),
+        levels=trace.levels,
+        n_words=int(trace.n_words),
+        capacity=int(trace.capacity),
+        scanned_edges=scanned,
+        wall_ms=best * 1e3,
+        wall_ms_levels=float(np.asarray(trace.wall_ms).sum()),
+        achieved_gteps=scanned / best / 1e9 if best > 0 else 0.0,
+        modeled_gteps=scanned / t_model / 1e9 if t_model > 0 else 0.0,
+        model_bytes={k: float(v) for k, v in rec["model"].items()},
+        hlo_bytes={k: float(v) for k, v in rec.get("hlo", {}).items()},
+        reconciled=bool(rec["matches"]),
+        wire_efficiency=analytic_total / hlo_total if hlo_total else 0.0,
+        roofline=roofline,
+        per_level=_per_level_rows(trace, rec),
+    )
+
+
+def _empty_trace(algo: str, sync: str, p: int, fanout: int, n_words: int,
+                 capacity: int, density_threshold: float):
+    """A data-empty TraversalTrace: the §12 byte model is a pure function
+    of the static exchange config, so reconciliation needs no run."""
+    from repro.core import flightrec
+
+    return flightrec.TraversalTrace(
+        algo=algo, sync=sync, p=p, fanout=fanout,
+        n_words=n_words, capacity=capacity,
+        density_threshold=density_threshold,
+    )
+
+
+def cache_report(engine) -> List[CacheEntryReport]:
+    """Reconcile the analytic sync-byte model against the compiled HLO for
+    EVERY program in the module-wide cache belonging to ``engine``'s graph.
+
+    Each cached program is re-lowered (jit tracing is cached; XLA
+    compilation is re-run once per report) and its branch-attributed
+    collective-permute wire bytes compared exactly against the model.
+    Wave programs (MS-BFS, betweenness) exchange the flattened
+    ``wave_rows × lane_words`` lane buffer; SSSP exchanges the padded
+    distance buffer.  §19 vertex programs use monoid all-reduces without
+    an adaptive branch structure the model covers, so they are reported
+    ``supported=False`` rather than given a fabricated verdict.
+    """
+    import jax.numpy as jnp
+    from repro.analytics import engine as engine_mod
+    from repro.analytics import msbfs
+    from repro.core import flightrec
+    from repro.traversal import sssp as sssp_mod
+
+    pg, mesh = engine.pg, engine.mesh
+    reports: List[CacheEntryReport] = []
+    for key, (fn, e_pg, e_mesh) in list(engine_mod._PROGRAM_CACHE.items()):
+        if e_pg is not pg or e_mesh is not mesh:
+            continue
+        algo = str(key[2])
+        cfg = key[3]
+        if algo in ("bfs", "bc"):
+            lanes = int(key[4])
+            n_words = msbfs.wave_rows(pg) * msbfs.lane_words(lanes)
+            roots = jnp.asarray(np.full(lanes, -1, dtype=np.int32))
+            lower_args = (engine._arrays, roots)
+        elif algo == "sssp":
+            lanes = None
+            n_words = sssp_mod.dist_rows(pg)
+            lower_args = (engine._arrays, jnp.int32(0))
+        else:  # vp:* — no branch-attributed frontier sync to reconcile
+            reports.append(CacheEntryReport(
+                algo=algo, sync=getattr(cfg, "sync", "?"), lanes=None,
+                n_words=0, capacity=0, supported=False, reconciled=False,
+                model_bytes={}, hlo_bytes={},
+            ))
+            continue
+        capacity = cfg.resolved_capacity(n_words)
+        trace = _empty_trace(algo, cfg.sync, int(pg.p), int(cfg.fanout),
+                             int(n_words), int(capacity),
+                             float(cfg.density_threshold))
+        hlo = fn.lower(*lower_args).compile().as_text()
+        rec = flightrec.reconcile_bytes(trace, hlo)
+        reports.append(CacheEntryReport(
+            algo=algo, sync=cfg.sync, lanes=lanes,
+            n_words=int(n_words), capacity=int(capacity),
+            supported=True, reconciled=bool(rec["matches"]),
+            model_bytes={k: float(v) for k, v in rec["model"].items()},
+            hlo_bytes={k: float(v) for k, v in rec.get("hlo", {}).items()},
+        ))
+    return reports
+
+
+def format_profile(prof: ProgramProfile) -> str:
+    """Human-facing report: header lines plus the per-level time×bytes
+    attribution table."""
+    lines = [
+        f"program {prof.algo} sync={prof.sync} p={prof.p} "
+        f"fanout={prof.fanout} n_words={prof.n_words} "
+        f"capacity={prof.capacity}",
+        f"levels={prof.levels} scanned_edges={prof.scanned_edges:.0f} "
+        f"wall={prof.wall_ms:.3f}ms (fused min-of-k; segmented "
+        f"{prof.wall_ms_levels:.3f}ms)",
+        f"achieved {prof.achieved_gteps:.4f} GTEPS vs modeled "
+        f"{prof.modeled_gteps:.4f} GTEPS",
+        f"wire efficiency (analytic/HLO bytes) = "
+        f"{prof.wire_efficiency:.4f}  reconciled={prof.reconciled}",
+        f"roofline dominant={prof.roofline.get('dominant', '?')}",
+        "",
+        f"{'lvl':>4} {'branch':>8} {'dir':>4} {'pop':>10} {'density':>8} "
+        f"{'B/node':>12} {'wall_ms':>9} {'t%':>6} {'B%':>6}",
+    ]
+    for r in prof.per_level:
+        lines.append(
+            f"{r.level:>4} {r.branch:>8} {r.direction:>4} {r.pop:>10} "
+            f"{r.density:>8.4f} {r.bytes_per_node:>12.1f} "
+            f"{r.wall_ms:>9.3f} {r.time_frac * 100:>5.1f}% "
+            f"{r.bytes_frac * 100:>5.1f}%"
+        )
+    return "\n".join(lines)

@@ -111,9 +111,22 @@ def main(argv=None) -> int:
                          "trace_event JSON; --algo bfs additionally "
                          "host-times every level so spans carry real "
                          "durations")
+    ap.add_argument("--profile", default=None, metavar="FILE", nargs="?",
+                    const="-",
+                    help="run the §20 cost-model profiler on the compiled "
+                         "single-source BFS program: reconcile analytic "
+                         "sync bytes against the compiled HLO, report "
+                         "achieved-vs-modeled GTEPS and the per-level "
+                         "time×bytes table; FILE (optional) also receives "
+                         "the profile as JSON")
     args = ap.parse_args(argv)
     if args.trace and args.pallas:
         ap.error("--trace instruments the XLA path; drop --pallas")
+    if args.profile and args.pallas:
+        ap.error("--profile times the XLA path; drop --pallas")
+    if args.profile and args.algo != "bfs":
+        ap.error("--profile profiles the single-source BFS program; "
+                 "use --algo bfs")
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}"
@@ -191,6 +204,25 @@ def main(argv=None) -> int:
                   "fanout": args.fanout, "lanes": args.num_sources,
                   "delta": args.delta, "max_weight": max_weight,
                   "use_pallas": bool(args.pallas)}
+
+    def emit_profile(report: dict) -> None:
+        """Print the §20 profile table (+ cached-program reconciliation)
+        and optionally persist the whole report as JSON."""
+        prof = report["program"]
+        print()
+        print(prof.table())
+        for ent in report.get("cache", []):
+            verdict = ("reconciled" if ent.reconciled else
+                       "MISMATCH" if ent.supported else "unsupported")
+            print(f"cached {ent.algo} sync={ent.sync} "
+                  f"lanes={ent.lanes} n_words={ent.n_words}: {verdict}")
+        if args.profile != "-":
+            doc = {"schema": "bfs_profile/v1",
+                   "program": prof.to_dict(),
+                   "cache": [e.to_dict() for e in report.get("cache", [])]}
+            with open(args.profile, "w") as f:
+                json.dump(doc, f, indent=1)
+            print(f"profile -> {args.profile}")
 
     def export_trace(trace) -> dict:
         """Write the Perfetto doc and return the JSON trace table (lands
@@ -409,6 +441,8 @@ def main(argv=None) -> int:
                 capacity=cfg.resolved_capacity(n_flat),
                 density_threshold=cfg.density_threshold,
             ))
+        if args.profile:
+            emit_profile(eng.profile(roots[0]))
         if args.stats_json:
             write_stats_json(
                 args.stats_json, algo="bfs", graph=graph_doc,
@@ -463,6 +497,12 @@ def main(argv=None) -> int:
             pg, mesh, cfg, roots[0], arrays=arrays
         )
         trace_doc = export_trace(tr)
+    if args.profile:
+        from repro.core import profiler
+
+        emit_profile({"program": profiler.profile_bfs(
+            pg, mesh, cfg, roots[0], arrays=arrays
+        ), "cache": []})
     if args.stats_json:
         from repro.analytics.engine import EngineStats
 

@@ -99,6 +99,15 @@ def main(argv=None) -> int:
                          "with a stall chaos spec to see the hedge in a "
                          "short --trace run")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the §20 metrics registry over HTTP while "
+                         "the load runs: GET /metrics is Prometheus text "
+                         "exposition, GET /healthz reports per-replica "
+                         "health state and replication lag (0 = pick a "
+                         "free port; printed at startup)")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="append a JSONL snapshot of every registry series "
+                         "at exit (machine-readable metrics artifact)")
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump telemetry + engine stats as JSON")
     ap.add_argument("--trace", default=None, metavar="FILE",
@@ -196,6 +205,34 @@ def main(argv=None) -> int:
     print(f"serving: replicas={args.replicas} lanes={args.lanes} "
           f"sync={args.sync} linger={args.linger_ms}ms qps={args.qps} "
           f"deadline={args.deadline_ms or 'none'}ms")
+
+    metrics_server = None
+    if args.metrics_port is not None:
+        from repro.core import metrics as metrics_mod
+
+        def health_fn():
+            if replicated:
+                head = router.latest_seq
+                reps = [
+                    {"replica": r.id, "state": r.state,
+                     "applied_seq": int(r.applied_seq),
+                     "lag": max(0, head - int(r.applied_seq))}
+                    for r in router.replicas
+                ]
+                serving = sum(1 for r in reps if r["state"] != "DEAD")
+                return {"status": "ok" if serving else "unavailable",
+                        "head_seq": int(head), "replicas": reps}
+            return {"status": "ok", "replicas": [
+                {"replica": 0, "state": "HEALTHY", "applied_seq": 0,
+                 "lag": 0}]}
+
+        metrics_server = metrics_mod.MetricsServer(
+            metrics_mod.default_registry(), port=args.metrics_port,
+            health_fn=health_fn,
+        )
+        metrics_server.start()
+        print(f"metrics: {metrics_server.url}/metrics  "
+              f"{metrics_server.url}/healthz")
 
     n = max(int(args.qps * args.duration), 1)
     futs = []
@@ -316,6 +353,15 @@ def main(argv=None) -> int:
             telemetry=snap,
         )
         print(f"stats -> {args.stats_json}")
+    if args.metrics_jsonl:
+        from repro.core import metrics as metrics_mod
+
+        n_series = metrics_mod.default_registry().write_jsonl(
+            args.metrics_jsonl)
+        print(f"metrics snapshot ({n_series} series) -> "
+              f"{args.metrics_jsonl}")
+    if metrics_server is not None:
+        metrics_server.stop()
     if replicated:
         router.stop()
     else:

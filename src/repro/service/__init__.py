@@ -125,6 +125,7 @@ class GraphQueryService:
         self.queue = SubmissionQueue(max_pending)
         self.cache = ResultCache(cache_capacity)
         self.telemetry = Telemetry()
+        self._register_gauges()
         self.scheduler = WaveScheduler(
             self, max_linger_s=max_linger_s, coalesce=coalesce
         )
@@ -223,8 +224,8 @@ class GraphQueryService:
                 args={"algo": algo, "root": root}, t=req.submit_t,
             )
             return req.future
-        except AdmissionError:
-            self.telemetry.record_rejected()
+        except AdmissionError as exc:
+            self.telemetry.record_rejected(reason=exc.reason)
             self.tracer.instant(
                 "admission-reject", track="queue", trace_id=trace_id,
                 args={"algo": algo, "root": root},
@@ -421,12 +422,14 @@ class GraphQueryService:
             version = old_version.bump_delta()
             self._state = (version, engine)
             t_rep = time.monotonic()
+            budget = [self.repair_budget]
             stats = versioning.migrate_cache(
                 self.cache, old_version, version,
-                repairers=self._repairers(update, engine),
+                repairers=self._repairers(update, engine, budget),
                 derive_closeness=self._closeness,
             )
             dt_rep = time.monotonic() - t_rep
+            self._record_repair_metrics(engine, budget)
             self.telemetry.record_stage("repair", dt_rep)
             if self.tracer.enabled:
                 self.tracer.add_span(
@@ -439,12 +442,39 @@ class GraphQueryService:
             self.telemetry.record_mutation(stats)
             return version
 
-    def _repairers(self, update, engine):
+    def _record_repair_metrics(self, engine, budget) -> None:
+        """§20 dynamic-repair series: repair budget actually spent on this
+        batch and the partition's post-batch slack occupancy (the worst
+        shard's ``edge_count / emax`` — 1.0 means the next insert that
+        lands there forces a compaction)."""
+        reg = self.telemetry.registry
+        if self.repair_budget is not None and budget[0] is not None:
+            reg.counter(
+                "repair_budget_spent_total",
+                "device repairs charged against the per-batch budget",
+                ("service",),
+            ).inc(self.repair_budget - budget[0],
+                  service=self.telemetry.name)
+        pg = engine.pg
+        occ = float(
+            max(
+                np.max(pg.edge_count / max(1, pg.emax)),
+                np.max(pg.in_count / max(1, pg.emax)),
+            )
+        )
+        reg.gauge(
+            "repair_slack_occupancy",
+            "worst-shard fraction of static edge slack in use",
+            ("service",),
+        ).set(occ, service=self.telemetry.name)
+
+    def _repairers(self, update, engine, budget=None):
         """Per-algo BATCH repairers for :func:`versioning.migrate_cache`,
         sharing one device-repair budget (``None`` = unlimited).  Suspect
         rows within the budget share lane-packed §16 repair waves; rows
         past it drop."""
-        budget = [self.repair_budget]
+        if budget is None:
+            budget = [self.repair_budget]
 
         def make(cfg, unit_weight):
             def repairer(rows):
@@ -533,8 +563,27 @@ class GraphQueryService:
 
     def reset_telemetry(self) -> None:
         """Fresh counters/latency reservoir — call after warmup so compile
-        time never pollutes the measured latency/QPS/occupancy."""
+        time never pollutes the measured latency/QPS/occupancy.  The new
+        Telemetry starts fresh registry series under a new ``service``
+        label; the pull gauges re-bind to it."""
         self.telemetry = Telemetry()
+        self._register_gauges()
+
+    def _register_gauges(self) -> None:
+        """Pull-based §20 gauges evaluated at scrape time (queue depth and
+        result-cache hit rate track the live objects, not a snapshot)."""
+        reg = self.telemetry.registry
+        reg.gauge(
+            "service_queue_depth", "requests waiting in the submission "
+            "queue", ("service",),
+        ).set_function(lambda: len(self.queue),
+                       service=self.telemetry.name)
+        reg.gauge(
+            "service_result_cache_hit_rate",
+            "epoch-keyed result-cache hit rate since construction",
+            ("service",),
+        ).set_function(lambda: self.cache.snapshot().get("hit_rate", 0.0),
+                       service=self.telemetry.name)
 
     def snapshot(self) -> dict:
         """JSON-serializable telemetry + cache + queue state."""

@@ -156,6 +156,8 @@ class FaultInjector:
     function of the schedule and how far the event streams ran."""
 
     def __init__(self, faults: List[Fault]):
+        from repro.core import metrics as metrics_mod
+
         self.faults = list(faults)
         self.injected: Dict[str, int] = {k: 0 for k in KINDS}
         self._by_op: Dict[int, List[Fault]] = {}
@@ -163,6 +165,12 @@ class FaultInjector:
         for f in self.faults:
             group = self._by_op if f.kind in OP_KINDS else self._by_batch
             group.setdefault(f.at, []).append(f)
+        # registry mirror of the deterministic ``injected`` counters
+        # (DESIGN.md §20): one labeled series per fault kind
+        self._metric = metrics_mod.default_registry().counter(
+            "chaos_faults_injected_total",
+            "faults actually fired by the deterministic injector",
+            ("kind",))
 
     @classmethod
     def from_spec(
@@ -175,6 +183,7 @@ class FaultInjector:
         fired = self._by_op.get(op_index, [])
         for f in fired:
             self.injected[f.kind] += 1
+            self._metric.inc(kind=f.kind)
         return fired
 
     def on_batch(self, seq: int, replica_index: int) -> Optional[Fault]:
@@ -183,6 +192,7 @@ class FaultInjector:
         for f in self._by_batch.get(seq, []):
             if f.victim == replica_index:
                 self.injected[f.kind] += 1
+                self._metric.inc(kind=f.kind)
                 return f
         return None
 

@@ -58,7 +58,10 @@ class AdmissionError(RuntimeError):
     * ``retryable`` — True for transient overload (backpressure: try
       again later), False for requests that can never be admitted as
       submitted (e.g. a deadline already unmeetable at submit time);
-    * ``tenant`` — the quota bucket charged, when tenancy applies.
+    * ``tenant`` — the quota bucket charged, when tenancy applies;
+    * ``reason`` — a short machine-readable slug (``queue_full`` /
+      ``deadline_unmeetable`` / ``overload`` / ``tenant_quota``), the
+      label on the §20 ``service_admission_rejects_total`` series.
     """
 
     def __init__(
@@ -69,12 +72,14 @@ class AdmissionError(RuntimeError):
         quota: Optional[int] = None,
         retryable: bool = True,
         tenant: Optional[str] = None,
+        reason: str = "unspecified",
     ):
         super().__init__(message)
         self.occupancy = occupancy
         self.quota = quota
         self.retryable = retryable
         self.tenant = tenant
+        self.reason = reason
 
 
 class DeadlineExceeded(TimeoutError):
@@ -138,6 +143,7 @@ class SubmissionQueue:
                 f"deadline_s={deadline_s} is unmeetable at submission",
                 occupancy=len(self), quota=self.max_pending,
                 retryable=False,  # resubmitting the same deadline is futile
+                reason="deadline_unmeetable",
             )
         with self._cond:
             if self._closed:
@@ -147,6 +153,7 @@ class SubmissionQueue:
                     f"queue full ({self.max_pending} pending): overloaded",
                     occupancy=len(self._items), quota=self.max_pending,
                     retryable=True,  # backpressure: retry after a backoff
+                    reason="queue_full",
                 )
             req = QueryRequest(
                 algo=algo,

@@ -43,10 +43,11 @@ import heapq
 import itertools
 import threading
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core import metrics as metrics_mod
 from repro.core.tracing import NULL_TRACER
 from repro.service import faults as faults_mod
 from repro.service.queue import (
@@ -61,7 +62,7 @@ from repro.service.replica import (
     SUSPECT,
     ReplicaUnavailable,
 )
-from repro.service.telemetry import percentiles
+from repro.service.telemetry import PercentileReservoir
 
 
 class NoQuorumError(RuntimeError):
@@ -110,70 +111,103 @@ class _Ticket:
         self.trace_id = trace_id
 
 
-class RouterTelemetry:
-    """Front-door counters + latency reservoir (lock-protected, JSON-safe
-    snapshot).  The ``faults`` block merges the injector's deterministic
-    ``injected`` schedule counters with the router's response counters."""
+#: every RouterTelemetry counter, as events of ONE registry family
+#: (``router_events_total{router=..., event=...}``)
+_ROUTER_EVENTS = (
+    "submitted", "completed", "failed",
+    "shed",  # front-door admission rejections
+    "stale_serves",  # degraded-mode cache serves
+    "retries",  # failover resubmissions after a failure
+    "hedges",  # timeout-triggered duplicate dispatches
+    "failovers",  # replicas declared dead under traffic
+    "recoveries",  # dead replicas rebuilt via log replay
+    "catch_up_batches",  # log batches redelivered by catch-up
+    "suspect_marks",
+)
 
-    def __init__(self, latency_window: int = 65536):
+_ROUTER_IDS = itertools.count()
+
+
+class RouterTelemetry:
+    """Front-door counters + latency reservoir, registry-backed
+    (DESIGN.md §20) with a JSON-safe snapshot.  The ``faults`` block
+    merges the injector's deterministic ``injected`` schedule counters
+    with the router's response counters."""
+
+    def __init__(self, latency_window: int = 65536, *,
+                 registry=None, name: Optional[str] = None):
         self._lock = threading.Lock()
         self._t0 = time.monotonic()
-        self._latencies = deque(maxlen=latency_window)
-        self.submitted = 0
-        self.completed = 0
-        self.failed = 0
-        self.shed = 0  # front-door admission rejections
-        self.stale_serves = 0  # degraded-mode cache serves
-        self.retries = 0  # failover resubmissions after a failure
-        self.hedges = 0  # timeout-triggered duplicate dispatches
-        self.failovers = 0  # replicas declared dead under traffic
-        self.recoveries = 0  # dead replicas rebuilt via log replay
-        self.catch_up_batches = 0  # log batches redelivered by catch-up
-        self.suspect_marks = 0
+        self.registry = (registry if registry is not None
+                         else metrics_mod.default_registry())
+        self.name = (name if name is not None
+                     else f"router{next(_ROUTER_IDS)}")
+        events = self.registry.counter(
+            "router_events_total",
+            "front-door request / failover / recovery events",
+            ("router", "event"))
+        self._events = {e: events.labels(router=self.name, event=e)
+                        for e in _ROUTER_EVENTS}
+        self._transitions = self.registry.counter(
+            "router_health_transitions_total",
+            "replica health-state transitions observed by the router",
+            ("router", "replica", "to"))
+        self._lat_hist = self.registry.histogram(
+            "router_latency_ms", "end-to-end routed-request latency",
+            ("router",)).labels(router=self.name)
+        exact = max(1, min(int(latency_window), 1024))
+        self._latencies = PercentileReservoir(exact_limit=exact)
 
     def bump(self, name: str, by: int = 1) -> None:
-        with self._lock:
-            setattr(self, name, getattr(self, name) + by)
+        self._events[name].inc(by)
 
     def record_latency(self, seconds: float) -> None:
+        self._lat_hist.observe(seconds * 1e3)
         with self._lock:
-            self._latencies.append(seconds)
+            self._latencies.add(seconds)
+
+    def record_transition(self, replica_id: int, to: str) -> None:
+        """One replica health-state change (HEALTHY→SUSPECT→DEAD→…)."""
+        self._transitions.inc(router=self.name, replica=str(replica_id),
+                              to=to)
+
+    def __getattr__(self, name: str) -> int:
+        events = self.__dict__.get("_events")
+        if events is not None and name in events:
+            return int(events[name].value)
+        raise AttributeError(name)
 
     def faults_block(self, injector) -> Dict[str, Any]:
-        with self._lock:
-            return {
-                "injected": (injector.snapshot() if injector is not None
-                             else {k: 0 for k in faults_mod.KINDS}),
-                "schedule": (injector.schedule_json()
-                             if injector is not None else []),
-                "retries": self.retries,
-                "hedges": self.hedges,
-                "failovers": self.failovers,
-                "recoveries": self.recoveries,
-                "shed": self.shed,
-                "stale_serves": self.stale_serves,
-                "catch_up_batches": self.catch_up_batches,
-                "suspect_marks": self.suspect_marks,
-            }
+        return {
+            "injected": (injector.snapshot() if injector is not None
+                         else {k: 0 for k in faults_mod.KINDS}),
+            "schedule": (injector.schedule_json()
+                         if injector is not None else []),
+            "retries": self.retries,
+            "hedges": self.hedges,
+            "failovers": self.failovers,
+            "recoveries": self.recoveries,
+            "shed": self.shed,
+            "stale_serves": self.stale_serves,
+            "catch_up_batches": self.catch_up_batches,
+            "suspect_marks": self.suspect_marks,
+        }
 
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             elapsed = max(time.monotonic() - self._t0, 1e-9)
-            lat_ms = [v * 1e3 for v in self._latencies]
-            return {
-                "uptime_s": elapsed,
-                "submitted": self.submitted,
-                "completed": self.completed,
-                "failed": self.failed,
-                # empty window (no completions, e.g. right after a warmup
-                # telemetry reset): exactly 0.0, never a denormal ratio
-                "qps": self.completed / elapsed if self.completed else 0.0,
-                "latency_ms": {
-                    **percentiles(lat_ms),
-                    "mean": sum(lat_ms) / len(lat_ms) if lat_ms else 0.0,
-                    "count": len(lat_ms),
-                },
-            }
+            lat_block = self._latencies.summary(scale=1e3)
+        completed = self.completed
+        return {
+            "uptime_s": elapsed,
+            "submitted": self.submitted,
+            "completed": completed,
+            "failed": self.failed,
+            # empty window (no completions, e.g. right after a warmup
+            # telemetry reset): exactly 0.0, never a denormal ratio
+            "qps": completed / elapsed if completed else 0.0,
+            "latency_ms": lat_block,
+        }
 
 
 class ReplicaRouter:
@@ -218,6 +252,17 @@ class ReplicaRouter:
         # so every layer's spans land on a single timeline)
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.telemetry = RouterTelemetry()
+        # pull-based replication-lag gauges: evaluated at scrape time so
+        # /metrics always reports the live ``head_seq - applied_seq``
+        lag = self.telemetry.registry.gauge(
+            "router_replication_lag",
+            "replication lag (head_seq - applied_seq) per replica",
+            ("router", "replica"))
+        for r in replicas:
+            lag.set_function(
+                (lambda rep: lambda: max(
+                    0, self.latest_seq - rep.applied_seq))(r),
+                router=self.telemetry.name, replica=str(r.id))
         # replication log: batches in seq order (seq = 1-based index)
         self._log: List[Any] = []
         self._log_lock = threading.Lock()
@@ -348,6 +393,7 @@ class ReplicaRouter:
                     quota=self.max_inflight,
                     retryable=True,
                     tenant=tenant,
+                    reason="overload",
                 )
             quota = self._quota_for(tenant)
             used = self._inflight_tenant.get(tenant, 0)
@@ -359,6 +405,7 @@ class ReplicaRouter:
                     quota=quota,
                     retryable=True,
                     tenant=tenant,
+                    reason="tenant_quota",
                 )
             self._inflight_total += 1
             self._inflight_tenant[tenant] = used + 1
@@ -590,7 +637,7 @@ class ReplicaRouter:
         exc = fut.exception()
         self._attempt_span(ticket, replica, t_att, exc)
         if exc is None:
-            replica.mark_healthy()
+            self._state_change(replica, replica.mark_healthy)
             resolve_future(ticket.client, result=RoutedResult(
                 value=fut.result(),
                 stale=False,
@@ -650,14 +697,23 @@ class ReplicaRouter:
             return
         resolve_future(ticket.client, exception=fallback)
 
+    def _state_change(self, replica, fn, *args) -> None:
+        """Run one health-state mutator and count the transition it
+        actually caused (no-ops — already in that state — don't count)."""
+        before = replica.state
+        fn(*args)
+        if replica.state != before:
+            self.telemetry.record_transition(replica.id, replica.state)
+
     def _suspect(self, replica) -> None:
         self.telemetry.bump("suspect_marks")
-        replica.mark_suspect(self.suspect_backoff_s, time.monotonic())
+        self._state_change(replica, replica.mark_suspect,
+                           self.suspect_backoff_s, time.monotonic())
 
     def _kill(self, victim: int) -> None:
         r = self.replicas[victim]
         if r.state != DEAD:
-            r.kill()
+            self._state_change(r, r.kill)
             self.telemetry.bump("failovers")
 
     # --- timeout/hedge monitor --------------------------------------------
@@ -748,19 +804,20 @@ class ReplicaRouter:
                             cat="recovery",
                             args={"log_seq": self.latest_seq},
                         ):
-                            r.recover(self.log_entries())
+                            self._state_change(r, r.recover,
+                                               self.log_entries())
                         self.telemetry.bump("recoveries")
                     except Exception:
                         pass  # stays DEAD; retried next sweep
             elif r.state == SUSPECT and now >= r.suspect_until:
                 if r.heartbeat():
-                    r.mark_healthy()
+                    self._state_change(r, r.mark_healthy)
                 else:
-                    r.mark_dead()
+                    self._state_change(r, r.mark_dead)
                     self.telemetry.bump("failovers")
             elif r.state == HEALTHY and not r.heartbeat():
                 # scheduler thread died underneath a healthy replica
-                r.mark_dead()
+                self._state_change(r, r.mark_dead)
                 self.telemetry.bump("failovers")
         self.catch_up_now()
 

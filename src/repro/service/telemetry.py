@@ -1,20 +1,39 @@
 """Service telemetry: latency percentiles, QPS, wave occupancy (DESIGN.md §15).
 
-One lock-protected accumulator shared by the submission path (caller
-threads) and the dispatch path (scheduler thread).  Latencies land in a
-bounded ring so a long-lived process keeps O(window) memory; percentiles
-are computed lazily at :meth:`snapshot` time.  Everything in the snapshot
-is plain ``int``/``float``/``str`` — ``json.dumps`` safe by construction
-(``launch/serve_graph.py --stats-json`` and the load generator persist it
-verbatim).
+Since PR 9 the counters are **registry-backed series** (DESIGN.md §20):
+every ``record_*`` call increments a labeled series in a
+:class:`repro.core.metrics.MetricsRegistry` (the module default unless
+one is injected), so a live ``/metrics`` scrape and the JSON
+:meth:`Telemetry.snapshot` read the same numbers.  The snapshot API —
+shape, collision check, warmup-reset contract — is unchanged.
+
+Latency reservoirs use :class:`PercentileReservoir`, the documented
+estimator required by ISSUE 9:
+
+* **exact mode** — the first ``exact_limit`` (default 1024) samples are
+  kept verbatim and quantiles use the same linear interpolation as
+  :func:`percentiles` (numpy's default ``linear`` method), so small
+  windows are *exact*;
+* **sketch mode** — past the limit, samples fold into log-spaced
+  buckets with ratio ``gamma = (1+alpha)/(1-alpha)`` (the DDSketch
+  construction): any reported quantile is within ``alpha`` relative
+  error (default 1%) of an actual sample at that rank.  ``count`` and
+  ``mean`` stay exact in both modes.
+
+Everything in the snapshot is plain ``int``/``float``/``str`` —
+``json.dumps`` safe by construction (``launch/serve_graph.py
+--stats-json`` and the load generator persist it verbatim).
 """
 
 from __future__ import annotations
 
+import itertools
+import math
 import threading
 import time
-from collections import deque
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Sequence
+
+from repro.core import metrics as metrics_mod
 
 
 def percentiles(values, points=(50.0, 95.0, 99.0)) -> Dict[str, float]:
@@ -35,67 +54,203 @@ def percentiles(values, points=(50.0, 95.0, 99.0)) -> Dict[str, float]:
     return out
 
 
+class PercentileReservoir:
+    """Exact-then-sketch quantile estimator (see module docstring).
+
+    Unsynchronized on purpose: callers (``Telemetry`` /
+    ``RouterTelemetry``) already serialize access under their own lock.
+    """
+
+    _TINY = 1e-12  # values at or below this land in the zero bucket
+
+    __slots__ = ("exact_limit", "alpha", "_gamma", "_lg", "_exact",
+                 "_buckets", "_zero", "_count", "_sum")
+
+    def __init__(self, exact_limit: int = 1024, alpha: float = 0.01):
+        if exact_limit < 1:
+            raise ValueError(f"exact_limit must be >= 1: {exact_limit}")
+        if not 0.0 < alpha < 1.0:
+            raise ValueError(f"alpha must be in (0, 1): {alpha}")
+        self.exact_limit = int(exact_limit)
+        self.alpha = float(alpha)
+        self._gamma = (1.0 + alpha) / (1.0 - alpha)
+        self._lg = math.log(self._gamma)
+        self._exact: Optional[list] = []
+        self._buckets: Dict[int, int] = {}
+        self._zero = 0
+        self._count = 0
+        self._sum = 0.0
+
+    def __len__(self) -> int:
+        return self._count
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def exact(self) -> bool:
+        """True while every sample is still stored verbatim."""
+        return self._exact is not None
+
+    def mean(self) -> float:
+        return self._sum / self._count if self._count else 0.0
+
+    def _fold(self, v: float) -> None:
+        if v <= self._TINY:
+            self._zero += 1
+        else:
+            k = math.ceil(math.log(v) / self._lg)
+            self._buckets[k] = self._buckets.get(k, 0) + 1
+
+    def add(self, value: float) -> None:
+        v = float(value)
+        self._count += 1
+        self._sum += v
+        if self._exact is not None:
+            self._exact.append(v)
+            if len(self._exact) > self.exact_limit:
+                for x in self._exact:
+                    self._fold(x)
+                self._exact = None
+            return
+        self._fold(v)
+
+    def quantile(self, q: float) -> float:
+        """The q-th percentile (``q`` in [0, 100]).  Exact mode: linear
+        interpolation between order statistics.  Sketch mode:
+        nearest-rank lookup into the gamma buckets; the returned bucket
+        midpoint is within ``alpha`` relative error of the sample at
+        that rank."""
+        if self._count == 0:
+            return 0.0
+        if self._exact is not None:
+            xs = sorted(self._exact)
+            n = len(xs)
+            rank = (q / 100.0) * (n - 1)
+            lo = int(rank)
+            hi = min(lo + 1, n - 1)
+            frac = rank - lo
+            return xs[lo] * (1.0 - frac) + xs[hi] * frac
+        rank = round((q / 100.0) * (self._count - 1))
+        if rank < self._zero:
+            return 0.0
+        cum = self._zero
+        est = 0.0
+        for k in sorted(self._buckets):
+            cum += self._buckets[k]
+            est = 2.0 * self._gamma ** k / (self._gamma + 1.0)
+            if rank < cum:
+                return est
+        return est
+
+    def summary(self, points: Sequence[float] = (50.0, 95.0, 99.0),
+                scale: float = 1.0) -> Dict[str, float]:
+        """The snapshot block shape: ``{"p50", "p95", "p99", "mean",
+        "count"}`` with values multiplied by ``scale`` (relative-error
+        bounds are scale-invariant)."""
+        out = {}
+        for p in points:
+            key = f"p{int(p) if float(p).is_integer() else p}"
+            out[key] = self.quantile(p) * scale
+        out["mean"] = self.mean() * scale
+        out["count"] = self._count
+        return out
+
+
 #: per-request lifecycle stages with their own latency reservoirs
 #: (DESIGN.md §18): time spent queued before the scheduler drained the
 #: request, linger inside the coalescing window, the engine-execution
 #: window of its wave, and the device-repair portion of a mutation batch.
 STAGES = ("queue_wait", "coalesce", "engine", "repair")
 
+#: every counter a Telemetry carries, as events of ONE registry family
+#: (``service_events_total{service=..., event=...}``)
+_EVENTS = (
+    "submitted", "completed", "rejected", "expired", "failed",
+    "deadline_misses", "dispatches", "engine_waves", "lanes_used",
+    "lanes_offered", "coalesced_roots", "epoch_bumps", "mutations",
+    "compactions", "rows_kept", "rows_repaired", "rows_dropped",
+)
+
+_SVC_IDS = itertools.count()
+_ROUTER_IDS = itertools.count()
+
+
+def _service_families(reg: metrics_mod.MetricsRegistry):
+    return (
+        reg.counter("service_events_total",
+                    "request/dispatch/mutation lifecycle events per "
+                    "service instance", ("service", "event")),
+        reg.counter("service_admission_rejects_total",
+                    "admission-control rejections by structured reason",
+                    ("service", "reason")),
+        reg.histogram("service_latency_ms",
+                      "end-to-end and per-stage request latency",
+                      ("service", "stage")),
+        reg.histogram("service_wave_width",
+                      "unique roots per dispatched engine wave",
+                      ("service",), buckets=metrics_mod.WIDTH_BUCKETS),
+    )
+
 
 class Telemetry:
-    """Counters + latency reservoir for one :class:`GraphQueryService`."""
+    """Counters + latency reservoirs for one :class:`GraphQueryService`,
+    stored as labeled series in ``registry`` (module default when None).
+    Each instance gets a fresh ``service="svc<N>"`` label, so the
+    warmup-reset contract (replace the Telemetry wholesale) starts new
+    series instead of diluting measured ones."""
 
-    def __init__(self, *, latency_window: int = 65536, clock=time.monotonic):
+    def __init__(self, *, latency_window: int = 65536, clock=time.monotonic,
+                 registry: Optional[metrics_mod.MetricsRegistry] = None,
+                 name: Optional[str] = None):
         self._lock = threading.Lock()
         self._clock = clock
         self._t0 = clock()
-        self._latencies = deque(maxlen=latency_window)
-        self._stages = {s: deque(maxlen=latency_window) for s in STAGES}
-        # request lifecycle
-        self.submitted = 0
-        self.completed = 0
-        self.rejected = 0  # admission control turned it away
-        self.expired = 0  # deadline passed before dispatch (load shed)
-        self.failed = 0  # engine/dispatch exception
-        self.deadline_misses = 0  # served, but past its deadline
-        # dispatch-side accounting
-        self.dispatches = 0  # scheduler engine calls
-        self.engine_waves = 0  # compiled-program invocations underneath
-        self.lanes_used = 0  # unique roots actually occupying lanes
-        self.lanes_offered = 0  # lanes the dispatched waves provided
-        self.coalesced_roots = 0  # duplicate roots folded into one lane
-        self.epoch_bumps = 0
-        # streaming-mutation accounting (DESIGN.md §16)
-        self.mutations = 0  # apply_updates batches folded in place
-        self.compactions = 0  # overlay merges that forced a full swap
-        self.rows_kept = 0  # cached rows proven unchanged across a batch
-        self.rows_repaired = 0  # cached rows repaired to their new value
-        self.rows_dropped = 0  # cached rows cold-started by a batch
+        self.registry = (registry if registry is not None
+                         else metrics_mod.default_registry())
+        self.name = name if name is not None else f"svc{next(_SVC_IDS)}"
+        events, rejects, latency, width = _service_families(self.registry)
+        self._events = {e: events.labels(service=self.name, event=e)
+                        for e in _EVENTS}
+        self._rejects = rejects
+        self._lat_hist = {
+            s: latency.labels(service=self.name, stage=s)
+            for s in ("total",) + STAGES
+        }
+        self._width_hist = width.labels(service=self.name)
+        # exact storage is bounded at 1024 regardless of the legacy
+        # window size — beyond that the sketch's error bound takes over
+        exact = max(1, min(int(latency_window), 1024))
+        self._latencies = PercentileReservoir(exact_limit=exact)
+        self._stages = {s: PercentileReservoir(exact_limit=exact)
+                        for s in STAGES}
+
+    def _count(self, event: str) -> int:
+        return int(self._events[event].value)
 
     # --- submission path --------------------------------------------------
 
     def record_submit(self) -> None:
-        with self._lock:
-            self.submitted += 1
+        self._events["submitted"].inc()
 
-    def record_rejected(self) -> None:
-        with self._lock:
-            self.rejected += 1
+    def record_rejected(self, reason: str = "unspecified") -> None:
+        self._events["rejected"].inc()
+        self._rejects.inc(service=self.name, reason=reason)
 
     def record_expired(self) -> None:
-        with self._lock:
-            self.expired += 1
+        self._events["expired"].inc()
 
     def record_failed(self) -> None:
-        with self._lock:
-            self.failed += 1
+        self._events["failed"].inc()
 
     def record_completed(self, latency_s: float, deadline_met: bool) -> None:
+        self._events["completed"].inc()
+        self._lat_hist["total"].observe(latency_s * 1e3)
         with self._lock:
-            self.completed += 1
-            self._latencies.append(latency_s)
-            if not deadline_met:
-                self.deadline_misses += 1
+            self._latencies.add(latency_s)
+        if not deadline_met:
+            self._events["deadline_misses"].inc()
 
     def record_stage(self, stage: str, seconds: float) -> None:
         """Add one sample to a per-stage latency reservoir (§18 request
@@ -104,8 +259,9 @@ class Telemetry:
             raise ValueError(
                 f"unknown stage {stage!r}; expected one of {STAGES}"
             )
+        self._lat_hist[stage].observe(seconds * 1e3)
         with self._lock:
-            self._stages[stage].append(seconds)
+            self._stages[stage].add(seconds)
 
     # --- dispatch path ----------------------------------------------------
 
@@ -113,29 +269,26 @@ class Telemetry:
         self, *, engine_waves: int, lanes_used: int, lanes_offered: int,
         coalesced_roots: int = 0,
     ) -> None:
-        with self._lock:
-            self.dispatches += 1
-            self.engine_waves += engine_waves
-            self.lanes_used += lanes_used
-            self.lanes_offered += lanes_offered
-            self.coalesced_roots += coalesced_roots
+        self._events["dispatches"].inc()
+        self._events["engine_waves"].inc(engine_waves)
+        self._events["lanes_used"].inc(lanes_used)
+        self._events["lanes_offered"].inc(lanes_offered)
+        self._events["coalesced_roots"].inc(coalesced_roots)
+        self._width_hist.observe(lanes_used)
 
     def record_epoch_bump(self) -> None:
-        with self._lock:
-            self.epoch_bumps += 1
+        self._events["epoch_bumps"].inc()
 
     def record_mutation(self, stats) -> None:
         """Fold one :class:`~repro.dynamic.versioning.InvalidationStats`
         (an ``apply_updates`` batch) into the counters."""
-        with self._lock:
-            self.mutations += 1
-            self.rows_kept += stats.kept
-            self.rows_repaired += stats.repaired
-            self.rows_dropped += stats.dropped
+        self._events["mutations"].inc()
+        self._events["rows_kept"].inc(stats.kept)
+        self._events["rows_repaired"].inc(stats.repaired)
+        self._events["rows_dropped"].inc(stats.dropped)
 
     def record_compaction(self) -> None:
-        with self._lock:
-            self.compactions += 1
+        self._events["compactions"].inc()
 
     # --- reporting --------------------------------------------------------
 
@@ -150,57 +303,47 @@ class Telemetry:
         wholesale after warmup (``reset_telemetry``) so compile time never
         dilutes the rate.  An empty window — zero completions — reports
         ``qps: 0.0`` exactly, never a denormal from a near-zero uptime."""
+        c = {e: self._count(e) for e in _EVENTS}
         with self._lock:
             elapsed = max(self._clock() - self._t0, 1e-9)
-            lat_ms = [v * 1e3 for v in self._latencies]
-            rows_total = self.rows_kept + self.rows_repaired + self.rows_dropped
-            snap: Dict[str, Any] = {
-                "uptime_s": elapsed,
-                "submitted": self.submitted,
-                "completed": self.completed,
-                "rejected": self.rejected,
-                "expired": self.expired,
-                "failed": self.failed,
-                "deadline_misses": self.deadline_misses,
-                "qps": self.completed / elapsed if self.completed else 0.0,
-                "latency_ms": {
-                    **percentiles(lat_ms),
-                    "mean": sum(lat_ms) / len(lat_ms) if lat_ms else 0.0,
-                    "count": len(lat_ms),
-                },
-                "stages_ms": {
-                    s: {
-                        **percentiles(ms),
-                        "mean": sum(ms) / len(ms) if ms else 0.0,
-                        "count": len(ms),
-                    }
-                    for s, ms in (
-                        (s, [v * 1e3 for v in d])
-                        for s, d in self._stages.items()
-                    )
-                },
-                "dispatches": self.dispatches,
-                "engine_waves": self.engine_waves,
-                "wave_occupancy": (
-                    self.lanes_used / self.lanes_offered
-                    if self.lanes_offered else 0.0
+            lat_block = self._latencies.summary(scale=1e3)
+            stage_blocks = {s: r.summary(scale=1e3)
+                            for s, r in self._stages.items()}
+        rows_total = (c["rows_kept"] + c["rows_repaired"]
+                      + c["rows_dropped"])
+        snap: Dict[str, Any] = {
+            "uptime_s": elapsed,
+            "submitted": c["submitted"],
+            "completed": c["completed"],
+            "rejected": c["rejected"],
+            "expired": c["expired"],
+            "failed": c["failed"],
+            "deadline_misses": c["deadline_misses"],
+            "qps": c["completed"] / elapsed if c["completed"] else 0.0,
+            "latency_ms": lat_block,
+            "stages_ms": stage_blocks,
+            "dispatches": c["dispatches"],
+            "engine_waves": c["engine_waves"],
+            "wave_occupancy": (
+                c["lanes_used"] / c["lanes_offered"]
+                if c["lanes_offered"] else 0.0
+            ),
+            "coalesced_roots": c["coalesced_roots"],
+            "epoch_bumps": c["epoch_bumps"],
+            "mutations": {
+                "batches": c["mutations"],
+                "compactions": c["compactions"],
+                "rows_kept": c["rows_kept"],
+                "rows_repaired": c["rows_repaired"],
+                "rows_dropped": c["rows_dropped"],
+                # the §16 partial-invalidation hit-rate: cached rows
+                # that stayed servable across mutation batches
+                "survival_rate": (
+                    (c["rows_kept"] + c["rows_repaired"]) / rows_total
+                    if rows_total else 1.0
                 ),
-                "coalesced_roots": self.coalesced_roots,
-                "epoch_bumps": self.epoch_bumps,
-                "mutations": {
-                    "batches": self.mutations,
-                    "compactions": self.compactions,
-                    "rows_kept": self.rows_kept,
-                    "rows_repaired": self.rows_repaired,
-                    "rows_dropped": self.rows_dropped,
-                    # the §16 partial-invalidation hit-rate: cached rows
-                    # that stayed servable across mutation batches
-                    "survival_rate": (
-                        (self.rows_kept + self.rows_repaired) / rows_total
-                        if rows_total else 1.0
-                    ),
-                },
-            }
+            },
+        }
         collisions = sorted(set(snap) & set(extra))
         if collisions:
             raise ValueError(
@@ -208,3 +351,10 @@ class Telemetry:
             )
         snap.update(extra)
         return snap
+
+    # legacy attribute access (telemetry.submitted etc.) kept working
+    def __getattr__(self, name: str) -> int:
+        events = self.__dict__.get("_events")
+        if events is not None and name in events:
+            return int(events[name].value)
+        raise AttributeError(name)

@@ -1,0 +1,352 @@
+"""§20 metrics registry, exposition, percentile estimator, HLO purity.
+
+Covers the observability tentpole's contracts:
+
+* registry semantics — register-or-get, type/label conflict rejection,
+  counter monotonicity, pull gauges, histogram bucketing;
+* thread safety — a concurrent hammer (scheduler-like + router-like +
+  chaos-like threads) must land EXACT totals, not approximately-correct
+  ones;
+* Prometheus text exposition — round-trips through the hand-rolled
+  validator, histogram cumulative invariants hold, malformed exposition
+  is rejected;
+* the HTTP endpoint — /metrics parses, /healthz degrades to 503;
+* JSONL snapshot export;
+* the PercentileReservoir estimator — exact (numpy-equal) under the
+  small-sample limit, bounded relative error above it;
+* instrumentation purity — enabling the registry must not perturb the
+  staged trace=False HLO by a single byte.
+"""
+
+import json
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.metrics import (
+    MetricsRegistry,
+    MetricsServer,
+    parse_exposition,
+)
+from repro.service.telemetry import PercentileReservoir, percentiles
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_counter_register_or_get_and_inc():
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", "requests", ("algo",))
+    assert reg.counter("requests_total", "requests", ("algo",)) is c
+    c.inc(algo="bfs")
+    c.inc(2, algo="bfs")
+    c.inc(algo="sssp")
+    assert c.value(algo="bfs") == 3
+    assert c.value(algo="sssp") == 1
+    assert c.value(algo="bc") == 0  # never-touched series reads zero
+
+
+def test_counter_rejects_negative_and_type_conflicts():
+    reg = MetricsRegistry()
+    c = reg.counter("events_total", "events")
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    with pytest.raises(ValueError):
+        reg.gauge("events_total", "now a gauge")  # same name, other type
+    with pytest.raises(ValueError):
+        reg.counter("events_total", "events", ("other",))  # label mismatch
+
+
+def test_gauge_set_inc_and_pull_callback():
+    reg = MetricsRegistry()
+    g = reg.gauge("depth", "queue depth")
+    g.set(5)
+    g.labels().inc(2)
+    g.labels().dec(3)
+    assert g.value() == 4
+    backing = {"v": 0.25}
+    reg.gauge("hit_rate", "cache").set_function(lambda: backing["v"])
+    assert reg.gauge("hit_rate", "cache").value() == 0.25
+    backing["v"] = 0.75  # pull-based: evaluated at read time
+    assert reg.gauge("hit_rate", "cache").value() == 0.75
+
+
+def test_gauge_callback_failure_reads_nan():
+    reg = MetricsRegistry()
+    reg.gauge("broken", "x").set_function(lambda: 1 / 0)
+    assert np.isnan(reg.gauge("broken", "x").value())
+
+
+def test_histogram_buckets_sum_count():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_ms", "latency", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    snap = h.labels().value
+    assert snap["count"] == 4
+    assert snap["sum"] == pytest.approx(555.5)
+    # raw per-bucket counts (<=1, <=10, <=100); the 500.0 observation only
+    # lands in +Inf, which exists as count - sum(buckets) at exposition time
+    assert snap["buckets"] == [1, 1, 1]
+
+
+def test_unregister_and_reset():
+    reg = MetricsRegistry()
+    reg.counter("a_total", "a").inc()
+    reg.gauge("b", "b").set(1)
+    reg.unregister("a_total")
+    assert "a_total" not in {f["name"] for f in reg.snapshot()}
+    reg.reset()
+    assert reg.snapshot() == []
+
+
+# ---------------------------------------------------------------------------
+# thread-safety hammer: exact totals under contention
+# ---------------------------------------------------------------------------
+
+
+def test_hammer_exact_totals_under_contention():
+    reg = MetricsRegistry()
+    c = reg.counter("ops_total", "ops", ("src", "kind"))
+    h = reg.histogram("dur_ms", "durations", buckets=(1.0, 5.0, 25.0))
+    n_threads, n_iter = 8, 2500
+    start = threading.Barrier(n_threads)
+
+    def worker(tid):
+        # mixed roles on shared series: scheduler-like, router-like,
+        # chaos-like writers all hit the same children
+        src = ("sched", "router", "chaos")[tid % 3]
+        start.wait()
+        for i in range(n_iter):
+            c.inc(src=src, kind="a")
+            if i % 2 == 0:
+                c.inc(2, src=src, kind="b")
+            h.observe(float(i % 30))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    per_src = {"sched": 0, "router": 0, "chaos": 0}
+    for tid in range(n_threads):
+        per_src[("sched", "router", "chaos")[tid % 3]] += 1
+    for src, n in per_src.items():
+        assert c.value(src=src, kind="a") == n * n_iter
+        assert c.value(src=src, kind="b") == n * n_iter  # 2 * n_iter/2
+    snap = h.labels().value
+    assert snap["count"] == n_threads * n_iter
+    assert snap["sum"] == pytest.approx(
+        n_threads * sum(float(i % 30) for i in range(n_iter)))
+
+
+# ---------------------------------------------------------------------------
+# exposition + validator
+# ---------------------------------------------------------------------------
+
+
+def _loaded_registry():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests", ("algo",))
+    c.inc(3, algo="bfs")
+    c.inc(1, algo='we"ird\\lab\nel')  # exercises label escaping
+    reg.gauge("depth", "queue depth").set(7)
+    h = reg.histogram("lat_ms", "latency", buckets=(1.0, 10.0))
+    h.observe(0.5)
+    h.observe(99.0)
+    return reg
+
+
+def test_expose_text_round_trips_through_validator():
+    reg = _loaded_registry()
+    fams = parse_exposition(reg.expose_text())
+    assert set(fams) == {"req_total", "depth", "lat_ms"}
+    assert fams["req_total"]["type"] == "counter"
+    assert fams["lat_ms"]["type"] == "histogram"
+    samples = {s[0]: s for s in fams["req_total"]["samples"]}
+    assert any(v == 3.0 for _, _, v in fams["req_total"]["samples"])
+    # histogram invariants checked inside the parser; spot-check +Inf
+    infs = [s for s in fams["lat_ms"]["samples"]
+            if s[0].endswith("_bucket") and s[1].get("le") == "+Inf"]
+    assert infs and infs[0][2] == 2.0
+    assert samples  # non-empty
+
+
+def test_validator_rejects_malformed_exposition():
+    with pytest.raises(ValueError):
+        parse_exposition("no_type_declared 1\n# TYPE no_type_declared "
+                         "counter\n")  # TYPE after samples
+    with pytest.raises(ValueError):
+        parse_exposition("undeclared_family 1\n")
+    bad_hist = (
+        "# TYPE h histogram\n"
+        'h_bucket{le="1"} 5\n'
+        'h_bucket{le="+Inf"} 3\n'  # cumulative counts must not decrease
+        "h_sum 1\n"
+        "h_count 3\n"
+    )
+    with pytest.raises(ValueError):
+        parse_exposition(bad_hist)
+
+
+def test_metrics_cli_validates_scrape(tmp_path, capsys):
+    path = tmp_path / "scrape.txt"
+    path.write_text(_loaded_registry().expose_text())
+    assert metrics.main([str(path), "--require", "req_total"]) == 0
+    assert metrics.main([str(path), "--require", "missing_family"]) == 1
+    path.write_text("garbage{ 1\n")
+    assert metrics.main([str(path)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoint
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_server_scrape_and_health():
+    reg = _loaded_registry()
+    health = {"status": "ok", "replicas": [{"replica": 0, "lag": 0}]}
+    srv = MetricsServer(reg, port=0, health_fn=lambda: dict(health))
+    srv.start()
+    try:
+        with urllib.request.urlopen(srv.url + "/metrics", timeout=10) as r:
+            assert r.status == 200
+            fams = parse_exposition(r.read().decode())
+        assert "req_total" in fams
+        with urllib.request.urlopen(srv.url + "/healthz", timeout=10) as r:
+            assert r.status == 200
+            doc = json.loads(r.read().decode())
+        assert doc["replicas"][0]["lag"] == 0
+        health["status"] = "unavailable"
+        try:
+            urllib.request.urlopen(srv.url + "/healthz", timeout=10)
+            raise AssertionError("expected 503")
+        except urllib.error.HTTPError as e:
+            assert e.code == 503
+    finally:
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# JSONL export
+# ---------------------------------------------------------------------------
+
+
+def test_write_jsonl_snapshot(tmp_path):
+    reg = _loaded_registry()
+    path = tmp_path / "metrics.jsonl"
+    n = reg.write_jsonl(str(path))
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(rows) == n and n > 0
+    by_name = {}
+    for row in rows:
+        assert {"ts", "name", "type", "labels", "value"} <= set(row)
+        by_name.setdefault(row["name"], []).append(row)
+    assert any(r["value"] == 3 for r in by_name["req_total"])
+    hist = by_name["lat_ms"][0]
+    assert hist["value"]["count"] == 2
+    reg.write_jsonl(str(path))  # append, not truncate
+    assert len(path.read_text().splitlines()) == 2 * n
+
+
+# ---------------------------------------------------------------------------
+# PercentileReservoir estimator (satellite: documented + property-tested)
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_exact_mode_matches_percentiles_helper():
+    rng = np.random.default_rng(7)
+    vals = rng.lognormal(0.0, 1.5, size=800)
+    res = PercentileReservoir()
+    for v in vals:
+        res.add(float(v))
+    assert res.exact
+    want = percentiles(list(vals), (50.0, 90.0, 99.0))
+    got = res.summary(points=(50.0, 90.0, 99.0))
+    for k in ("p50", "p90", "p99"):
+        assert got[k] == pytest.approx(want[k], rel=0, abs=0)
+    assert res.count == 800
+    assert res.mean() == pytest.approx(float(vals.mean()))
+
+
+@pytest.mark.parametrize("dist", ["lognormal", "uniform", "bimodal"])
+def test_reservoir_sketch_mode_bounded_relative_error(dist):
+    rng = np.random.default_rng(11)
+    n = 20000
+    if dist == "lognormal":
+        vals = rng.lognormal(1.0, 2.0, size=n)
+    elif dist == "uniform":
+        vals = rng.uniform(0.001, 5.0, size=n)
+    else:
+        # asymmetric 40/60 split so no tested quantile straddles the gap
+        # between modes (a 50/50 split makes p50 ill-conditioned: numpy
+        # interpolates across the gap while any rank estimator snaps to
+        # one mode)
+        k = int(n * 0.4)
+        vals = np.concatenate([rng.normal(1.0, 0.05, k),
+                               np.abs(rng.normal(100.0, 5.0, n - k))])
+        vals = np.abs(vals) + 1e-6
+    res = PercentileReservoir(alpha=0.01)
+    for v in vals:
+        res.add(float(v))
+    assert not res.exact  # past the exact limit -> sketch mode
+    for q in (50.0, 90.0, 95.0, 99.0):
+        ref = float(np.quantile(vals, q / 100.0, method="linear"))
+        got = res.quantile(q)
+        # alpha-relative-error bucket estimate, plus slack for the
+        # nearest-rank vs interpolated reference disagreement
+        assert got == pytest.approx(ref, rel=0.05), (dist, q)
+    assert res.count == n
+    assert res.mean() == pytest.approx(float(vals.mean()))  # always exact
+
+
+def test_reservoir_handles_zeros_and_constants():
+    res = PercentileReservoir()
+    for _ in range(3000):
+        res.add(0.0)
+    assert res.quantile(99.0) == pytest.approx(0.0, abs=1e-9)
+    res2 = PercentileReservoir()
+    for _ in range(5000):
+        res2.add(42.0)
+    assert res2.quantile(50.0) == pytest.approx(42.0, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# instrumentation purity: registry on != HLO changed
+# ---------------------------------------------------------------------------
+
+
+def test_registry_activity_leaves_staged_hlo_byte_identical(mesh8):
+    """The §20 instrumentation is host-side only: heavy registry traffic
+    (engine queries recording cache/wave/build metrics) must not change
+    the trace=False staged program by one byte."""
+    import jax  # noqa: F401
+    import numpy as _np
+
+    from repro.analytics.engine import BFSQueryEngine
+    from repro.core import bfs
+    from repro.graph import generators, partition
+
+    g = generators.kronecker(9, 8, seed=3)
+    pg = partition.partition_1d(g, 8)
+    cfg = bfs.BFSConfig(axes=("data",), sync="adaptive", fanout=4)
+    arrays = bfs.place_arrays(pg, mesh8, cfg.axes)
+    before = bfs.build_bfs_fn(pg, mesh8, cfg, trace=False).lower(
+        arrays, _np.int32(3)).as_text()
+
+    eng = BFSQueryEngine(pg, mesh8, cfg, lanes=8)
+    eng.query([1, 2, 3, 3, 3])  # cache miss+hits, waves, dedup counters
+    assert metrics.default_registry().counter(
+        "engine_waves_total", "waves per algo", ("algo",)
+    ).value(algo="bfs") > 0
+
+    after = bfs.build_bfs_fn(pg, mesh8, cfg, trace=False).lower(
+        arrays, _np.int32(3)).as_text()
+    assert before == after

@@ -1,0 +1,107 @@
+"""Cost-model profiler invariants (DESIGN.md §20).
+
+The profiler joins three sources of truth — the §12 analytic byte model,
+the compiled HLO, and host wall clock — so the tests pin the join:
+
+1. the analytic sync bytes reconcile EXACTLY with the compiled HLO's
+   branch-attributed collective bytes (wire efficiency 1.0), for the
+   profiled program and for every supported cached engine program;
+2. the per-level attribution table is self-consistent (fractions sum to
+   one, levels match the trace);
+3. the whole report round-trips through JSON (machine-readable output
+   for ``bfs_run --profile``).
+"""
+
+import json
+
+import pytest
+
+from repro.core import bfs, profiler
+from repro.graph import generators, partition
+
+GRAPHS = {
+    "kron9": lambda: generators.kronecker(9, 8, seed=1),
+    "torus": lambda: generators.torus_2d(20),
+}
+
+
+def _pg(name="kron9"):
+    return partition.partition_1d(GRAPHS[name](), 8)
+
+
+@pytest.mark.parametrize("sync", ["butterfly", "adaptive"])
+def test_profile_bfs_reconciles_exactly(mesh8, sync):
+    pg = _pg()
+    cfg = bfs.BFSConfig(axes=("data",), sync=sync, fanout=4)
+    prof = profiler.profile_bfs(pg, mesh8, cfg, root=3, iters=2)
+    # the acceptance bar: analytic model == compiled HLO, exactly
+    assert prof.reconciled
+    assert prof.wire_efficiency == pytest.approx(1.0)
+    assert prof.algo == "bfs" and prof.sync == sync and prof.p == 8
+    assert prof.levels == len(prof.per_level) > 0
+    assert prof.scanned_edges > 0
+    assert prof.wall_ms > 0 and prof.wall_ms_levels > 0
+    assert prof.achieved_gteps > 0 and prof.modeled_gteps > 0
+
+
+def test_per_level_table_self_consistent(mesh8):
+    pg = _pg("torus")
+    cfg = bfs.BFSConfig(axes=("data",), sync="adaptive", fanout=4)
+    prof = profiler.profile_bfs(pg, mesh8, cfg, root=0, iters=1)
+    rows = prof.per_level
+    assert [r.level for r in rows] == list(range(1, prof.levels + 1))
+    assert sum(r.time_frac for r in rows) == pytest.approx(1.0)
+    assert sum(r.bytes_frac for r in rows) == pytest.approx(1.0)
+    for r in rows:
+        assert r.branch in ("dense", "sparse", "fallback")
+        assert r.direction in ("push", "pull")
+        assert r.bytes_per_node > 0
+        assert 0.0 <= r.density <= 1.0
+
+
+def test_profile_round_trips_through_json(mesh8):
+    pg = _pg()
+    cfg = bfs.BFSConfig(axes=("data",), sync="adaptive", fanout=4)
+    prof = profiler.profile_bfs(pg, mesh8, cfg, root=1, iters=1)
+    blob = json.loads(json.dumps(prof.to_dict()))
+    assert blob["reconciled"] is True
+    assert len(blob["per_level"]) == blob["levels"]
+    assert blob["roofline"]["dominant"] in ("compute", "memory", "network")
+    table = prof.table()
+    assert "wire efficiency" in table
+    assert table.count("\n") >= prof.levels  # one row per level
+
+
+def test_engine_cache_report_reconciles_every_supported_program(mesh8):
+    from repro.analytics.engine import BFSQueryEngine
+
+    pg = partition.partition_1d(
+        generators.kronecker(9, 8, seed=1, max_weight=8), 8
+    )
+    cfg = bfs.BFSConfig(axes=("data",), sync="adaptive", fanout=4)
+    eng = BFSQueryEngine(pg, mesh8, cfg, lanes=8)
+    eng.query([1, 2, 3])
+    eng.sssp([2])
+
+    report = eng.profile(root=1, iters=1)
+    assert report["program"].reconciled
+    cache = report["cache"]
+    algos = {c.algo for c in cache}
+    assert "bfs" in algos and "sssp" in algos
+    for entry in cache:
+        if entry.supported:
+            # every supported cached program must reconcile exactly
+            assert entry.reconciled, entry
+            assert entry.model_bytes == entry.hlo_bytes
+            assert entry.n_words > 0 and entry.capacity > 0
+        else:
+            assert entry.algo.startswith("vp:")
+        blob = json.loads(json.dumps(entry.to_dict()))
+        assert blob["algo"] == entry.algo
+
+
+def test_profile_rejects_bad_iters(mesh8):
+    pg = _pg("torus")
+    cfg = bfs.BFSConfig(axes=("data",), sync="adaptive")
+    with pytest.raises(ValueError, match="iters"):
+        profiler.profile_bfs(pg, mesh8, cfg, root=0, iters=0)

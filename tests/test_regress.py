@@ -1,0 +1,195 @@
+"""Perf-regression sentinel (DESIGN.md §20, ``benchmarks/regress.py``).
+
+Stdlib-only tests — the sentinel itself must never import jax, and these
+tests exercise it the way tier-2 CI does: seed a baseline, compare an
+unchanged tree (zero failures), inject a synthetic 2x slowdown (gate
+fires), and check the env-mismatch skip plus the min-of-k history cap.
+"""
+
+import json
+import math
+import os
+
+import pytest
+
+from benchmarks import regress
+
+
+BENCH = {
+    "teps_per_sync": {
+        "kron12/butterfly": {"mteps": 120.0, "ms": 8.0, "levels": 6,
+                             "wire_bytes": 4096,
+                             "meta": {"host_cpus": 8,
+                                      "timestamp": "2026-08-08T00:00:00"}},
+        "kron12/adaptive": {"mteps": 150.0, "ms": 6.5, "levels": 6},
+    },
+    "service_latency": {
+        "coalesced": {"qps": 900.0, "p50": 2.0, "p99": 9.0,
+                      "reject_rate": 0.01},
+    },
+}
+
+
+def test_metric_direction_vocabulary():
+    assert regress.metric_direction("ms") == "lower"
+    assert regress.metric_direction("queue_ms") == "lower"
+    assert regress.metric_direction("p99") == "lower"
+    assert regress.metric_direction("mteps") == "higher"
+    assert regress.metric_direction("mrelax_per_s") == "higher"
+    assert regress.metric_direction("searches_per_s") == "higher"
+    # identity / deterministic fields are never compared
+    assert regress.metric_direction("levels") is None
+    assert regress.metric_direction("wire_bytes") is None
+    assert regress.metric_direction("reject_rate") is None
+
+
+def test_flatten_skips_meta_and_keeps_numeric_leaves():
+    flat = regress.flatten(BENCH)
+    assert flat["teps_per_sync/kron12/butterfly/mteps"] == 120.0
+    assert flat["service_latency/coalesced/p99"] == 9.0
+    assert not any("meta" in k.split("/") for k in flat)
+    assert all(isinstance(v, float) for v in flat.values())
+
+
+def test_collect_meta_returns_newest_stamp():
+    doc = {
+        "a": {"r1": {"ms": 1.0, "meta": {"timestamp": "2026-01-01T00:00:00",
+                                         "host_cpus": 4}}},
+        "b": {"r2": {"ms": 2.0, "meta": {"timestamp": "2026-06-01T00:00:00",
+                                         "host_cpus": 8}}},
+    }
+    assert regress.collect_meta(doc)["host_cpus"] == 8
+
+
+def test_seed_then_compare_unchanged_tree_is_clean(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    doc = regress.seed_baseline(BENCH, path)
+    assert doc["schema"] == regress.BASELINE_SCHEMA
+    # only direction-aware metrics get histories
+    assert "teps_per_sync/kron12/butterfly/mteps" in doc["rows"]
+    assert "teps_per_sync/kron12/butterfly/levels" not in doc["rows"]
+    verdict = regress.compare(BENCH, doc)
+    assert verdict["ok"] and not verdict["failures"]
+    assert not verdict["flagged"]
+    assert verdict["compared"] == len(doc["rows"])
+    for cat in verdict["categories"].values():
+        assert cat["geomean_ratio"] == pytest.approx(1.0)
+
+
+def test_degraded_tree_fails_the_gate(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    doc = regress.seed_baseline(BENCH, path)
+    bad = regress.degrade(BENCH, factor=3.0)
+    # a slowdown multiplies timings and divides rates, nothing else
+    assert bad["teps_per_sync"]["kron12/butterfly"]["ms"] == 24.0
+    assert bad["teps_per_sync"]["kron12/butterfly"]["mteps"] == 40.0
+    assert bad["teps_per_sync"]["kron12/butterfly"]["levels"] == 6
+    verdict = regress.compare(bad, doc)
+    assert not verdict["ok"]
+    whys = {f["why"] for f in verdict["failures"]}
+    assert "hard_threshold" in whys  # 3.0 blows through the single gate
+    assert "geomean_threshold" in whys  # and moves every category
+
+
+def test_exact_2x_relies_on_geomean_gate(tmp_path):
+    """ratio == hard_threshold exactly does not trip the single-metric
+    gate (strict >); the category geomean gate is what catches a uniform
+    2x slowdown, which is precisely why both exist."""
+    path = str(tmp_path / "baseline.json")
+    doc = regress.seed_baseline(BENCH, path)
+    bad = regress.degrade(BENCH, factor=2.0)
+    verdict = regress.compare(bad, doc, hard_threshold=2.5)
+    geo = [f for f in verdict["failures"] if f["why"] == "geomean_threshold"]
+    assert geo and not verdict["ok"]
+    for cat in verdict["categories"].values():
+        assert cat["geomean_ratio"] == pytest.approx(2.0)
+
+
+def test_min_of_k_history_tolerates_one_slow_seed(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    slow = regress.degrade(BENCH, factor=1.4)  # one noisy seed run
+    regress.seed_baseline(slow, path)
+    doc = regress.seed_baseline(BENCH, path)  # then a clean one
+    hist = doc["rows"]["teps_per_sync/kron12/butterfly/ms"]
+    assert hist == [pytest.approx(8.0 * 1.4), 8.0]
+    # fresh == clean run compares against the BEST of the history
+    verdict = regress.compare(BENCH, doc)
+    assert verdict["ok"] and not verdict["flagged"]
+
+
+def test_history_capped_at_k(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    for i in range(regress.HISTORY_K + 3):
+        doc = regress.seed_baseline(
+            {"a": {"r": {"ms": float(i + 1)}}}, path)
+    hist = doc["rows"]["a/r/ms"]
+    assert len(hist) == regress.HISTORY_K
+    assert hist[-1] == float(regress.HISTORY_K + 3)  # newest kept
+
+
+def test_env_mismatch_skips_failures():
+    doc = {"schema": regress.BASELINE_SCHEMA, "meta": {"host_cpus": 999},
+           "rows": {"a/r/ms": [1.0]}}
+    bad = {"a": {"r": {"ms": 10.0}}}
+    verdict = regress.compare(bad, doc, env_matched=False)
+    assert verdict["ok"] and not verdict["env_matched"]
+    assert not verdict["failures"] and verdict["skipped_failures"]
+
+
+def test_main_exit_codes_and_verdict_file(tmp_path):
+    bench_path = str(tmp_path / "bench.json")
+    base_path = str(tmp_path / "baseline.json")
+    out_path = str(tmp_path / "verdict.json")
+    with open(bench_path, "w") as f:
+        json.dump(BENCH, f)
+    # no baseline yet -> usage error
+    assert regress.main(["--bench", bench_path,
+                         "--baseline", base_path]) == 2
+    assert regress.main(["--bench", bench_path, "--baseline", base_path,
+                         "--seed"]) == 0
+    assert regress.main(["--bench", bench_path, "--baseline", base_path,
+                         "--out", out_path, "--ignore-env"]) == 0
+    with open(out_path) as f:
+        verdict = json.load(f)
+    assert verdict["schema"] == regress.VERDICT_SCHEMA and verdict["ok"]
+    # regressed tree fails with exit 1
+    bad_path = str(tmp_path / "bad.json")
+    with open(bad_path, "w") as f:
+        json.dump(regress.degrade(BENCH, 3.0), f)
+    assert regress.main(["--bench", bad_path, "--baseline", base_path,
+                         "--ignore-env"]) == 1
+    # self-test: the sentinel must catch its own injected slowdown
+    assert regress.main(["--bench", bench_path, "--baseline", base_path,
+                         "--self-test"]) == 0
+
+
+def test_sentinel_never_imports_jax():
+    import subprocess
+    import sys
+    code = ("import sys; import benchmarks.regress; "
+            "sys.exit(1 if 'jax' in sys.modules else 0)")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.dirname(os.path.dirname(os.path.abspath(__file__)))]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", code], env=env)
+    assert proc.returncode == 0, "regress.py must not pull in jax"
+
+
+def test_committed_baseline_matches_committed_bench():
+    """The repo ships BENCH_baseline.json seeded from BENCH_bfs.json —
+    an unchanged tree must always compare clean (ignoring env since CI
+    hosts differ)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bench_p = os.path.join(root, "BENCH_bfs.json")
+    base_p = os.path.join(root, "BENCH_baseline.json")
+    if not (os.path.exists(bench_p) and os.path.exists(base_p)):
+        pytest.skip("committed trajectory files not present")
+    with open(bench_p) as f:
+        bench = json.load(f)
+    with open(base_p) as f:
+        base = json.load(f)
+    assert base["schema"] == regress.BASELINE_SCHEMA
+    verdict = regress.compare(bench, base)
+    assert verdict["ok"], verdict["failures"]
+    assert verdict["compared"] > 50  # the committed tree is well-covered
