@@ -31,16 +31,26 @@ def run_meta() -> Dict:
     which tree produced the number, when, and on what host shape — the
     regression sentinel (``benchmarks.regress``) uses ``host_cpus`` to
     refuse cross-environment comparisons."""
+    here = os.path.dirname(os.path.abspath(__file__))
     try:
         sha = subprocess.run(
             ["git", "rev-parse", "--short", "HEAD"],
-            capture_output=True, text=True, timeout=10,
-            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10, cwd=here,
         ).stdout.strip() or "unknown"
     except (OSError, subprocess.SubprocessError):
         sha = "unknown"
+    try:
+        # dirty-tree flag: regress --update-baseline refuses rows whose
+        # provenance can't tie the number to a committed tree state
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=10, cwd=here,
+        ).stdout.strip())
+    except (OSError, subprocess.SubprocessError):
+        dirty = None
     return {
         "git_sha": sha,
+        "git_dirty": dirty,
         "timestamp": datetime.now(timezone.utc).isoformat(
             timespec="seconds"),
         "host_cpus": os.cpu_count(),

@@ -32,6 +32,13 @@ Design constraints baked in:
 ``--seed`` (re)writes the baseline from the current rows; ``--self-test``
 injects a synthetic 2x slowdown into every comparable metric and asserts
 the sentinel flags it (exits 0 iff the slowdown FAILS the gate).
+
+``--update-baseline`` is the provenance-gated refresh: like ``--seed`` it
+appends the fresh rows into the min-of-k histories, but it REFUSES (exit
+2, baseline untouched) when the rows' provenance lacks ``host_cpus`` or
+the git dirty-tree flag (``git_dirty``), or when ``host_cpus`` differs
+from the existing baseline's (``--ignore-env`` overrides) — a refreshed
+baseline must always be traceable to a known tree on a known host shape.
 """
 
 from __future__ import annotations
@@ -242,6 +249,11 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", action="store_true",
                     help="(re)seed the baseline from the fresh rows "
                          "instead of comparing")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="refresh the baseline histories from the fresh "
+                         "rows, refusing when provenance (host_cpus, "
+                         "git_dirty) is missing or the host shape "
+                         "changed (see module docstring)")
     ap.add_argument("--self-test", action="store_true",
                     help="inject a synthetic 2x slowdown and assert the "
                          "sentinel fails it (exit 0 iff flagged)")
@@ -262,6 +274,39 @@ def main(argv=None) -> int:
         doc = seed_baseline(bench, args.baseline)
         print(f"baseline seeded: {len(doc['rows'])} metric histories -> "
               f"{args.baseline}")
+        return 0
+
+    if args.update_baseline:
+        meta = collect_meta(bench)
+        missing = [k for k in ("host_cpus", "git_dirty")
+                   if meta.get(k) is None]
+        if missing:
+            print(f"refusing --update-baseline: bench rows' provenance "
+                  f"is missing {missing} — re-emit the rows so "
+                  f"benchmarks.common.run_meta stamps them",
+                  file=sys.stderr)
+            return 2
+        if os.path.exists(args.baseline) and not args.ignore_env:
+            try:
+                with open(args.baseline) as f:
+                    prior_cpus = (json.load(f).get("meta") or {}).get(
+                        "host_cpus")
+            except (OSError, ValueError):
+                prior_cpus = None
+            if prior_cpus is not None and prior_cpus != meta["host_cpus"]:
+                print(f"refusing --update-baseline: baseline was seeded "
+                      f"on host_cpus={prior_cpus}, rows came from "
+                      f"host_cpus={meta['host_cpus']} — mixing hosts in "
+                      f"one min-of-k history makes the best-of reference "
+                      f"meaningless (--ignore-env to force)",
+                      file=sys.stderr)
+                return 2
+        if meta.get("git_dirty"):
+            print("note: rows were emitted from a dirty tree "
+                  f"(git_sha={meta.get('git_sha')}+)", file=sys.stderr)
+        doc = seed_baseline(bench, args.baseline)
+        print(f"baseline updated: {len(doc['rows'])} metric histories "
+              f"(min-of-{HISTORY_K} preserved) -> {args.baseline}")
         return 0
 
     try:

@@ -204,22 +204,32 @@ class Gauge(_Family):
 
 
 class _HistogramChild:
-    __slots__ = ("_lock", "_buckets", "_counts", "_sum", "_count")
+    __slots__ = ("_lock", "_buckets", "_counts", "_sum", "_count",
+                 "_exemplars")
 
-    def __init__(self, lock: threading.Lock, buckets: Sequence[float]):
+    def __init__(self, lock: threading.Lock, buckets: Sequence[float],
+                 exemplars: bool = False):
         self._lock = lock
         self._buckets = buckets
         self._counts = [0] * len(buckets)
         self._sum = 0.0
         self._count = 0
+        # one slot per bucket INCLUDING the +Inf overflow bucket; each
+        # holds the most recent (value, trace_id, ts) observed there
+        self._exemplars: Optional[List[Optional[Dict[str, object]]]] = (
+            [None] * (len(buckets) + 1) if exemplars else None)
 
-    def observe(self, value: float) -> None:
+    def observe(self, value: float, trace_id: str = "") -> None:
         i = bisect.bisect_left(self._buckets, value)
         with self._lock:
             if i < len(self._counts):
                 self._counts[i] += 1
             self._sum += value
             self._count += 1
+            if self._exemplars is not None and trace_id:
+                self._exemplars[i] = {"value": float(value),
+                                      "trace_id": trace_id,
+                                      "ts": time.time()}
 
     @property
     def value(self) -> Dict[str, object]:
@@ -227,23 +237,62 @@ class _HistogramChild:
             return {"buckets": list(self._counts), "sum": self._sum,
                     "count": self._count}
 
+    def exemplars(self) -> Optional[List[Optional[Dict[str, object]]]]:
+        """Per-bucket exemplar slots (last slot = +Inf overflow), or
+        ``None`` when the family was registered without exemplars."""
+        with self._lock:
+            return None if self._exemplars is None else list(self._exemplars)
+
+    def exemplar_near_quantile(self, q: float) -> Optional[Dict[str, object]]:
+        """The retained exemplar closest (from below) to the bucket the
+        ``q``-quantile falls in — ``exemplar_near_quantile(0.99)`` is the
+        'show me a p99 request' hook the ops console uses."""
+        with self._lock:
+            if self._exemplars is None or self._count == 0:
+                return None
+            target = q * self._count
+            cum = 0
+            idx = len(self._counts)  # default: +Inf overflow bucket
+            for i, n in enumerate(self._counts):
+                cum += n
+                if cum >= target:
+                    idx = i
+                    break
+            for i in range(idx, -1, -1):
+                if self._exemplars[i] is not None:
+                    ex = dict(self._exemplars[i])
+                    ex["bucket_le"] = (self._buckets[i]
+                                       if i < len(self._buckets)
+                                       else math.inf)
+                    return ex
+            return None
+
 
 class Histogram(_Family):
     kind = "histogram"
 
     def __init__(self, name: str, help: str, labelnames: Sequence[str] = (),
-                 buckets: Sequence[float] = LATENCY_BUCKETS_MS):
+                 buckets: Sequence[float] = LATENCY_BUCKETS_MS,
+                 exemplars: bool = False):
         super().__init__(name, help, labelnames)
         b = sorted(float(x) for x in buckets)
         if not b:
             raise ValueError("histogram needs at least one bucket bound")
         self.buckets = tuple(b)
+        # exemplars (§21): when on, each bucket retains the trace_id of a
+        # recent sample so a latency spike links to a concrete request
+        # trace.  Raw counts/sums are untouched, exposition text is
+        # byte-identical, and the write path adds one slot assignment
+        # under the same family lock — the §20 exact-total contention
+        # contract (tests/test_metrics.py hammer) holds unchanged.
+        self.exemplars_enabled = bool(exemplars)
 
     def _make_child(self) -> _HistogramChild:
-        return _HistogramChild(self._lock, self.buckets)
+        return _HistogramChild(self._lock, self.buckets,
+                               exemplars=self.exemplars_enabled)
 
-    def observe(self, value: float, **labels) -> None:
-        self.labels(**labels).observe(value)
+    def observe(self, value: float, trace_id: str = "", **labels) -> None:
+        self.labels(**labels).observe(value, trace_id=trace_id)
 
 
 class MetricsRegistry:
@@ -277,9 +326,12 @@ class MetricsRegistry:
 
     def histogram(self, name: str, help: str,
                   labelnames: Sequence[str] = (),
-                  buckets: Sequence[float] = LATENCY_BUCKETS_MS) -> Histogram:
+                  buckets: Sequence[float] = LATENCY_BUCKETS_MS,
+                  exemplars: bool = False) -> Histogram:
+        # register-or-get: the FIRST registration fixes buckets and the
+        # exemplar setting; later callers get the existing family.
         return self._register(Histogram, name, help, labelnames,
-                              buckets=buckets)
+                              buckets=buckets, exemplars=exemplars)
 
     def get(self, name: str) -> Optional[_Family]:
         with self._lock:
@@ -342,6 +394,8 @@ class MetricsRegistry:
                 if fam.kind == "histogram":
                     v = child.value
                     v["bounds"] = list(fam.buckets)
+                    if fam.exemplars_enabled:
+                        v["exemplars"] = child.exemplars()
                     value: object = v
                 else:
                     value = child.value
@@ -378,17 +432,36 @@ class MetricsServer:
     """Serves ``GET /metrics`` (Prometheus text 0.0.4) and ``GET
     /healthz`` (JSON from ``health_fn``; HTTP 503 unless the payload's
     ``"status"`` is ``"ok"``) on a daemon thread.  ``port=0`` binds an
-    ephemeral port, reported by :attr:`port` after :meth:`start`."""
+    ephemeral port, reported by :attr:`port` after :meth:`start`.
+
+    Extra endpoints (the §21 ops console) register through ``routes`` /
+    :meth:`add_route`: ``fn(query) -> payload`` where ``query`` maps
+    parameter name to a list of values.  A payload that is a
+    ``(content_type, bytes_or_str)`` pair is sent verbatim (how
+    ``/dashboard`` serves HTML); anything else is JSON-encoded.  A route
+    that raises returns HTTP 500 with a JSON error body — never a
+    traceback page.  Unknown paths 404.  :meth:`stop` is idempotent and
+    joins the serving thread with a bounded timeout."""
 
     def __init__(self, registry: Optional[MetricsRegistry] = None, *,
                  port: int = 0, host: str = "127.0.0.1",
-                 health_fn: Optional[Callable[[], Dict[str, object]]] = None):
+                 health_fn: Optional[Callable[[], Dict[str, object]]] = None,
+                 routes: Optional[Dict[str, Callable]] = None):
         self.registry = registry if registry is not None else _DEFAULT
         self.health_fn = health_fn
+        self._routes: Dict[str, Callable] = dict(routes or {})
         self._host = host
         self._port = port
         self._httpd = None
         self._thread: Optional[threading.Thread] = None
+        self._lifecycle = threading.Lock()  # start/stop idempotence
+
+    def add_route(self, path: str, fn: Callable) -> None:
+        """Register (or replace) an extra GET endpoint; safe to call
+        after :meth:`start` — the handler reads the table per request."""
+        if not path.startswith("/"):
+            raise ValueError(f"route path must start with '/': {path!r}")
+        self._routes[path] = fn
 
     def start(self) -> "MetricsServer":
         from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -407,7 +480,10 @@ class MetricsServer:
                 self.wfile.write(body)
 
             def do_GET(self):
-                path = self.path.split("?", 1)[0]
+                from urllib.parse import parse_qs, urlsplit
+
+                parts = urlsplit(self.path)
+                path = parts.path
                 if path == "/metrics":
                     body = server.registry.expose_text().encode()
                     self._send(200, "text/plain; version=0.0.4", body)
@@ -421,16 +497,35 @@ class MetricsServer:
                     code = 200 if payload.get("status") == "ok" else 503
                     self._send(code, "application/json",
                                json.dumps(payload).encode())
+                elif path in server._routes:
+                    try:
+                        payload = server._routes[path](parse_qs(parts.query))
+                    except Exception as e:
+                        self._send(500, "application/json",
+                                   json.dumps({"error": repr(e)}).encode())
+                        return
+                    if (isinstance(payload, tuple) and len(payload) == 2):
+                        ctype, body = payload
+                        if isinstance(body, str):
+                            body = body.encode()
+                        self._send(200, ctype, body)
+                    else:
+                        self._send(200, "application/json",
+                                   json.dumps(payload).encode())
                 else:
                     self._send(404, "text/plain", b"not found\n")
 
-        self._httpd = ThreadingHTTPServer((self._host, self._port), Handler)
-        self._httpd.daemon_threads = True
-        self._port = self._httpd.server_address[1]
-        self._thread = threading.Thread(
-            target=self._httpd.serve_forever, daemon=True,
-            name="metrics-server")
-        self._thread.start()
+        with self._lifecycle:
+            if self._httpd is not None:
+                return self  # already serving
+            self._httpd = ThreadingHTTPServer(
+                (self._host, self._port), Handler)
+            self._httpd.daemon_threads = True
+            self._port = self._httpd.server_address[1]
+            self._thread = threading.Thread(
+                target=self._httpd.serve_forever, daemon=True,
+                name="metrics-server")
+            self._thread.start()
         return self
 
     @property
@@ -442,13 +537,14 @@ class MetricsServer:
         return f"http://{self._host}:{self._port}"
 
     def stop(self) -> None:
-        if self._httpd is not None:
-            self._httpd.shutdown()
-            self._httpd.server_close()
-            self._httpd = None
-        if self._thread is not None:
-            self._thread.join(timeout=5)
-            self._thread = None
+        with self._lifecycle:
+            if self._httpd is not None:
+                self._httpd.shutdown()
+                self._httpd.server_close()
+                self._httpd = None
+            if self._thread is not None:
+                self._thread.join(timeout=5)
+                self._thread = None
 
 
 # ---------------------------------------------------------------------------

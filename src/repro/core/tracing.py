@@ -31,7 +31,11 @@ Event model (deliberately smaller than OpenTelemetry):
 * ``trace_id`` is a 16-hex string minted per request at the front door
   (:meth:`Tracer.new_trace_id`); every downstream span carries it in
   ``args["trace_id"]`` after export, so Perfetto's query/filter box finds
-  a request's full path across tracks.
+  a request's full path across tracks;
+* every recorded event additionally carries a ``span_id`` — an 8-hex id
+  unique within the tracer — so two same-named events on one trace (the
+  original attempt and its hedged retry, say) stay distinguishable after
+  export (``args["span_id"]``).
 """
 
 from __future__ import annotations
@@ -91,6 +95,7 @@ class Tracer:
         self._lock = threading.Lock()
         self._events: List[Dict[str, Any]] = []
         self._t0 = clock()
+        self._next_span = 0  # span_id allocator (8-hex, unique per tracer)
 
     enabled = True
 
@@ -107,6 +112,11 @@ class Tracer:
 
     def _us(self, t: float) -> int:
         return int(round((t - self._t0) * 1e6))
+
+    def _new_span_id(self) -> str:
+        # caller holds self._lock
+        self._next_span += 1
+        return f"{self._next_span:08x}"
 
     # --- recording --------------------------------------------------------
 
@@ -133,6 +143,7 @@ class Tracer:
             "args": dict(args or {}),
         }
         with self._lock:
+            ev["span_id"] = self._new_span_id()
             self._events.append(ev)
 
     def span(
@@ -171,6 +182,7 @@ class Tracer:
             "args": dict(args or {}),
         }
         with self._lock:
+            ev["span_id"] = self._new_span_id()
             self._events.append(ev)
 
     # --- access / export --------------------------------------------------
@@ -202,6 +214,8 @@ class Tracer:
             args = dict(ev["args"])
             if ev["trace_id"]:
                 args["trace_id"] = ev["trace_id"]
+            if ev.get("span_id"):
+                args["span_id"] = ev["span_id"]
             rec = {
                 "name": ev["name"],
                 "cat": ev["cat"] or "serve",

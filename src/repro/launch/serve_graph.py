@@ -31,6 +31,17 @@ failovers, recoveries, shed, stale serves — zeroed on the single-service
 path so the ``--stats-json`` schema is uniform).  ``--chaos SPEC`` arms
 the deterministic fault injector (``--chaos-seed`` fixes the victim
 draws), e.g. ``--chaos 'kill-one@op=20;corrupt-batch@batch=2'``.
+
+The §21 ops plane rides on top: ``--events PATH`` streams the structured
+event log (``ops_events/v1`` JSONL, validate with ``python -m
+repro.core.events``); ``--slo-config PATH`` loads declarative SLOs and
+evaluates Google-SRE multi-window burn-rate alerts live, folding the
+machine-readable verdict into ``--stats-json`` (schema
+``serve_graph_stats/v2``) and, with ``--slo-verdict PATH``, its own JSON;
+``--metrics-port`` additionally serves the live console
+(``/debug/requests|replicas|cache|slo|events`` + ``/dashboard``);
+``--dashboard-html PATH`` saves the self-contained dashboard page as a CI
+artifact.
 """
 
 from __future__ import annotations
@@ -109,7 +120,23 @@ def main(argv=None) -> int:
                     help="append a JSONL snapshot of every registry series "
                          "at exit (machine-readable metrics artifact)")
     ap.add_argument("--stats-json", default=None, metavar="PATH",
-                    help="dump telemetry + engine stats as JSON")
+                    help="dump telemetry + engine stats as JSON "
+                         "(serve_graph_stats/v2; adds an `slo` block when "
+                         "--slo-config is active)")
+    ap.add_argument("--events", default=None, metavar="PATH",
+                    help="stream the §21 structured event log as "
+                         "ops_events/v1 JSONL (validate: python -m "
+                         "repro.core.events PATH --schema "
+                         "tests/event_schema.json)")
+    ap.add_argument("--slo-config", default=None, metavar="PATH",
+                    help="slo_config/v1 JSON: declarative SLOs evaluated "
+                         "live with multi-window burn-rate alerting")
+    ap.add_argument("--slo-verdict", default=None, metavar="PATH",
+                    help="write the slo_verdict/v1 JSON at exit (assert "
+                         "with python -m repro.core.slo)")
+    ap.add_argument("--dashboard-html", default=None, metavar="PATH",
+                    help="save the self-contained /dashboard page (no "
+                         "server needed; CI uploads it as an artifact)")
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="export a §18 cross-stack request trace as "
                          "Perfetto/Chrome trace_event JSON (load at "
@@ -146,9 +173,13 @@ def main(argv=None) -> int:
         g = generators.kronecker(args.scale, args.edge_factor, seed=seed)
         return g, partition.partition_1d(g, args.devices)
 
+    from repro.core import events as events_mod
     from repro.core.tracing import NULL_TRACER, Tracer
 
     tracer = Tracer() if args.trace else NULL_TRACER
+    event_log = events_mod.default_event_log()
+    if args.events:
+        event_log.attach_sink(args.events)
 
     g, pg = build(args.seed)
     print(f"graph: n={g.n_real:,} m={g.n_edges:,}")
@@ -206,6 +237,57 @@ def main(argv=None) -> int:
           f"sync={args.sync} linger={args.linger_ms}ms qps={args.qps} "
           f"deadline={args.deadline_ms or 'none'}ms")
 
+    slo_mgr = None
+    if args.slo_config:
+        from repro.core import metrics as metrics_mod
+        from repro.core import slo as slo_mod
+
+        reg = metrics_mod.default_registry()
+        slo_config = slo_mod.load_config(args.slo_config)
+
+        def source_for(obj):
+            if obj.type == "latency":
+                if replicated:
+                    return slo_mod.latency_threshold_source(
+                        reg, "router_latency_ms", obj.threshold_ms)
+                return slo_mod.latency_threshold_source(
+                    reg, "service_latency_ms", obj.threshold_ms,
+                    {"stage": "total"})
+            if obj.type == "staleness":
+                if replicated:
+                    return slo_mod.counter_events_source(
+                        reg, "router_events_total",
+                        good=("completed",), bad=("stale_serves",))
+                return lambda: (0.0, 0.0)  # no degraded path to go stale
+            # availability = served cleanly: a retry/hedge/stale fallback
+            # burns budget even when the client future still succeeds
+            if replicated:
+                return slo_mod.counter_events_source(
+                    reg, "router_events_total",
+                    good=("completed",),
+                    bad=("failed", "retries", "hedges", "stale_serves"))
+            return slo_mod.counter_events_source(
+                reg, "service_events_total",
+                good=("completed",),
+                bad=("failed", "expired", "deadline_misses"))
+
+        def exemplar_for(obj):
+            if obj.type == "latency":
+                return slo_mod.histogram_exemplar(
+                    reg, "router_latency_ms" if replicated
+                    else "service_latency_ms")
+            # chaos-first: when a fault was injected, the exemplar is the
+            # request the fault hit (its trace holds kill + hedge); retry
+            # events cover organic degradation without chaos
+            return slo_mod.event_log_exemplar(
+                event_log, kinds=("chaos", "retry"))
+
+        slo_mgr = slo_mod.build_from_config(
+            slo_config, source_for, exemplar_for, events=event_log)
+        print(f"slo: {len(slo_mgr.trackers)} objectives, "
+              f"time_scale={slo_config.get('time_scale', 1.0)} "
+              f"({args.slo_config})")
+
     metrics_server = None
     if args.metrics_port is not None:
         from repro.core import metrics as metrics_mod
@@ -234,14 +316,39 @@ def main(argv=None) -> int:
         print(f"metrics: {metrics_server.url}/metrics  "
               f"{metrics_server.url}/healthz")
 
+        from repro.service import console as console_mod
+
+        if replicated:
+            console_mod.install_console(
+                metrics_server, events=event_log,
+                debug_requests=router.debug_requests,
+                replicas_fn=console_mod.replicas_feed(router),
+                cache_fn=console_mod.cache_feed(router=router),
+                slo=slo_mgr)
+        else:
+            console_mod.install_console(
+                metrics_server, events=event_log,
+                debug_requests=svc.debug_requests,
+                replicas_fn=console_mod.single_service_replicas_feed(svc),
+                cache_fn=console_mod.cache_feed(svc=svc),
+                slo=slo_mgr)
+        print(f"console: {metrics_server.url}/dashboard")
+
     n = max(int(args.qps * args.duration), 1)
     futs = []
     rejected = 0
     batches = []  # injected mutation batches (for --record-updates)
     n_mut = 0
     min_seq = router.latest_seq if replicated else 0
+    slo_tick_s = 0.05  # burn-rate evaluation cadence while driving load
+    next_slo = 0.0
     t0 = time.perf_counter()
     for i in range(n):
+        if slo_mgr is not None:
+            nowm = time.monotonic()
+            if nowm >= next_slo:
+                slo_mgr.tick(nowm)
+                next_slo = nowm + slo_tick_s
         target = t0 + i / args.qps
         now = time.perf_counter()
         if target > now:
@@ -283,6 +390,23 @@ def main(argv=None) -> int:
         except Exception:
             err += 1
     elapsed = time.perf_counter() - t0
+    slo_verdict = None
+    if slo_mgr is not None:
+        # final ticks AFTER every future resolved: the closing evaluation
+        # sees all retries/hedges, and a PENDING alert gets its chance to
+        # cross its hold-down into FIRING
+        nowm = time.monotonic()
+        slo_mgr.tick(nowm)
+        slo_mgr.tick(nowm + slo_tick_s)
+        slo_verdict = slo_mgr.verdict()
+        fired = [a for a in slo_verdict["alerts"] if a["fired_count"] > 0]
+        print(f"slo: ok={slo_verdict['ok']} "
+              f"any_fired={slo_verdict['any_fired']}" + "".join(
+                  f"  [{a['severity']}] {a['slo']}/{a['rule']} "
+                  f"{a['state']} burn={a['burn_short']:.2f}x"
+                  + (f" exemplar={a['exemplar']['trace_id']}"
+                     if a.get("exemplar") else "")
+                  for a in fired))
 
     if replicated:
         snap = router.snapshot()
@@ -336,6 +460,8 @@ def main(argv=None) -> int:
     if args.stats_json:
         from repro.launch.bfs_run import write_stats_json
 
+        # serve_graph_stats/v2 = v1 plus the optional `slo` block; every
+        # v1 key keeps its name and shape, so v1 readers keep working
         write_stats_json(
             args.stats_json, algo="service",
             graph={"name": "kronecker", "scale": args.scale,
@@ -351,8 +477,24 @@ def main(argv=None) -> int:
             timing_ms={"mean": lat["mean"], "total": elapsed * 1e3},
             engine_stats=svc.engine.stats,
             telemetry=snap,
+            schema="serve_graph_stats/v2",
+            slo=slo_verdict,
         )
         print(f"stats -> {args.stats_json}")
+    if args.slo_verdict:
+        if slo_verdict is None:
+            print("slo-verdict requested without --slo-config; skipping",
+                  file=sys.stderr)
+        else:
+            with open(args.slo_verdict, "w") as f:
+                json.dump(slo_verdict, f, indent=1)
+            print(f"slo verdict -> {args.slo_verdict}")
+    if args.dashboard_html:
+        from repro.service.console import DASHBOARD_HTML
+
+        with open(args.dashboard_html, "w") as f:
+            f.write(DASHBOARD_HTML)
+        print(f"dashboard -> {args.dashboard_html}")
     if args.metrics_jsonl:
         from repro.core import metrics as metrics_mod
 
@@ -366,6 +508,10 @@ def main(argv=None) -> int:
         router.stop()
     else:
         svc.stop()
+    if args.events:
+        event_log.close_sink()
+        print(f"event log ({len(event_log)} resident, "
+              f"{event_log.snapshot()['emitted']} emitted) -> {args.events}")
     if args.trace:
         n_ev = tracer.write_chrome(args.trace)
         tracer.write_jsonl(args.trace + "l")  # FILE.json -> FILE.jsonl

@@ -43,6 +43,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.analytics import measures
+from repro.core import events as events_mod
 from repro.core.tracing import NULL_TRACER
 from repro import programs as programs_mod
 from repro.analytics.engine import BFSQueryEngine, compiled_program_fn
@@ -100,6 +101,7 @@ class GraphQueryService:
         compact_ratio: float = 0.25,
         repair_budget: Optional[int] = None,
         tracer=None,
+        events=None,
     ):
         self.mesh = mesh
         self.cfg = cfg
@@ -122,9 +124,15 @@ class GraphQueryService:
         self.compact_ratio = compact_ratio
         self.repair_budget = repair_budget
         self._overlay: Optional[delta_mod.DeltaOverlay] = None
+        # §21 structured event log (module default unless injected) —
+        # admission rejects, scheduler decisions, waves, repairs, and
+        # cache evictions land here stamped with the request's trace_id
+        self.events = (events if events is not None
+                       else events_mod.default_event_log())
         self.queue = SubmissionQueue(max_pending)
         self.cache = ResultCache(cache_capacity)
         self.telemetry = Telemetry()
+        self.cache.bind_events(self.events, self.telemetry.name)
         self._register_gauges()
         self.scheduler = WaveScheduler(
             self, max_linger_s=max_linger_s, coalesce=coalesce
@@ -210,11 +218,14 @@ class GraphQueryService:
         if hit:
             fut: Future = Future()
             fut.set_result(value)
-            self.telemetry.record_completed(0.0, True)
+            self.telemetry.record_completed(0.0, True, trace_id=trace_id)
             self.tracer.instant(
                 f"cache-hit:{algo}", track="queue", trace_id=trace_id,
                 args={"algo": algo, "root": root},
             )
+            self.events.emit(
+                "request", "cache-hit", subsystem=self.telemetry.name,
+                trace_id=trace_id, args={"algo": algo, "root": root})
             return fut
         try:
             req = self.queue.submit(algo, root, deadline_s,
@@ -230,6 +241,10 @@ class GraphQueryService:
                 "admission-reject", track="queue", trace_id=trace_id,
                 args={"algo": algo, "root": root},
             )
+            self.events.emit(
+                "admission", "reject", subsystem=self.telemetry.name,
+                trace_id=trace_id,
+                args={"algo": algo, "root": root, "reason": exc.reason})
             raise
 
     def query(
@@ -409,6 +424,11 @@ class GraphQueryService:
                     "compaction", track="mutation",
                     args={"epoch": str(old_version)},
                 )
+                self.events.emit(
+                    "repair", "compaction",
+                    subsystem=self.telemetry.name,
+                    args={"epoch": str(old_version),
+                          "rows_dropped": len(self.cache)})
                 self.telemetry.record_compaction()
                 self.telemetry.record_mutation(InvalidationStats(
                     rows_before=len(self.cache), dropped=len(self.cache),
@@ -438,6 +458,12 @@ class GraphQueryService:
                           "repaired": stats.repaired,
                           "dropped": stats.dropped},
                 )
+            self.events.emit(
+                "repair", "repair", subsystem=self.telemetry.name,
+                args={"version": str(version), "kept": stats.kept,
+                      "repaired": stats.repaired,
+                      "dropped": stats.dropped,
+                      "duration_ms": round(dt_rep * 1e3, 3)})
             self.cache.drop_stale(version)
             self.telemetry.record_mutation(stats)
             return version
@@ -584,6 +610,21 @@ class GraphQueryService:
             ("service",),
         ).set_function(lambda: self.cache.snapshot().get("hit_rate", 0.0),
                        service=self.telemetry.name)
+
+    def debug_requests(self, recent: int = 50) -> dict:
+        """Queued (not yet dispatched) requests + the newest completed
+        ones from the event log, each with its trace_id — the
+        single-service feed for ``/debug/requests``."""
+        now = time.monotonic()
+        queued = [
+            {"algo": r.algo, "root": r.root, "trace_id": r.trace_id,
+             "age_ms": round((now - r.submit_t) * 1e3, 3)}
+            for r in self.queue.pending()
+        ]
+        return {
+            "inflight": sorted(queued, key=lambda d: -d["age_ms"]),
+            "recent": self.events.query(kind="request", limit=recent),
+        }
 
     def snapshot(self) -> dict:
         """JSON-serializable telemetry + cache + queue state."""

@@ -19,6 +19,8 @@ import threading
 from collections import OrderedDict
 from typing import Any, Dict, Hashable, Tuple
 
+from repro.core.events import NULL_EVENTS
+
 # sentinel distinguishing "cached None" from "absent"
 _MISS = object()
 
@@ -49,6 +51,15 @@ class ResultCache:
         self.misses = 0
         self.evictions = 0
         self.stale_dropped = 0
+        # §21 event-log binding (off until bind_events); eviction and
+        # stale-drop sweeps emit ``kind="cache"`` events when bound
+        self._events = NULL_EVENTS
+        self._subsystem = ""
+
+    def bind_events(self, events, subsystem: str) -> None:
+        """Attach the §21 event log this cache reports evictions to."""
+        self._events = events
+        self._subsystem = subsystem
 
     @property
     def enabled(self) -> bool:
@@ -80,15 +91,22 @@ class ResultCache:
     def put(self, key: Tuple, value: Any) -> None:
         if not self.enabled:
             return
+        evicted = []
         with self._lock:
             if key in self._data:
                 self._data.move_to_end(key)
                 self._data[key] = value
                 return
             while len(self._data) >= self.capacity:
-                self._data.popitem(last=False)
+                old_key, _ = self._data.popitem(last=False)
                 self.evictions += 1
+                evicted.append(old_key)
             self._data[key] = value
+        for old_key in evicted:  # emit outside the lock
+            self._events.emit(
+                "cache", "evict", subsystem=self._subsystem,
+                args={"algo": str(old_key[1]), "root": int(old_key[3]),
+                      "epoch": str(old_key[0])})
 
     def drop_stale(self, current_epoch: int) -> int:
         """Free every entry computed under an epoch < ``current_epoch``.
@@ -100,7 +118,11 @@ class ResultCache:
             for k in stale:
                 del self._data[k]
             self.stale_dropped += len(stale)
-            return len(stale)
+        if stale:
+            self._events.emit(
+                "cache", "stale-drop", subsystem=self._subsystem,
+                args={"dropped": len(stale), "epoch": str(current_epoch)})
+        return len(stale)
 
     def clear(self) -> None:
         with self._lock:

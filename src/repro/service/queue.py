@@ -175,6 +175,12 @@ class SubmissionQueue:
             items, self._items = self._items, []
             return items
 
+    def pending(self) -> List[QueryRequest]:
+        """Point-in-time copy of the queued requests WITHOUT draining —
+        the §21 ops console's ``/debug/requests`` reads this."""
+        with self._cond:
+            return list(self._items)
+
     def wait(self, timeout: Optional[float]) -> bool:
         """Block until work arrives, the queue closes, or ``timeout``
         elapses; returns True iff items are queued."""

@@ -47,6 +47,7 @@ from collections import OrderedDict
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core import events as events_mod
 from repro.core import metrics as metrics_mod
 from repro.core.tracing import NULL_TRACER
 from repro.service import faults as faults_mod
@@ -152,17 +153,19 @@ class RouterTelemetry:
             "router_health_transitions_total",
             "replica health-state transitions observed by the router",
             ("router", "replica", "to"))
+        # exemplars on (§21): each latency bucket retains the trace_id
+        # of a recent sample, so a p99 spike names a concrete trace
         self._lat_hist = self.registry.histogram(
             "router_latency_ms", "end-to-end routed-request latency",
-            ("router",)).labels(router=self.name)
+            ("router",), exemplars=True).labels(router=self.name)
         exact = max(1, min(int(latency_window), 1024))
         self._latencies = PercentileReservoir(exact_limit=exact)
 
     def bump(self, name: str, by: int = 1) -> None:
         self._events[name].inc(by)
 
-    def record_latency(self, seconds: float) -> None:
-        self._lat_hist.observe(seconds * 1e3)
+    def record_latency(self, seconds: float, trace_id: str = "") -> None:
+        self._lat_hist.observe(seconds * 1e3, trace_id=trace_id)
         with self._lock:
             self._latencies.add(seconds)
 
@@ -233,6 +236,7 @@ class ReplicaRouter:
         auto_recover: bool = True,
         start: bool = True,
         tracer=None,
+        events=None,
     ):
         if not replicas:
             raise ValueError("router needs at least one replica")
@@ -251,6 +255,11 @@ class ReplicaRouter:
         # §18 request tracing (share ONE tracer with the replicas' services
         # so every layer's spans land on a single timeline)
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # §21 structured event log (default: the process-wide ring, like
+        # the default metrics registry) — every state transition, chaos
+        # injection, and degraded serve lands here with its trace_id
+        self.events = (events if events is not None
+                       else events_mod.default_event_log())
         self.telemetry = RouterTelemetry()
         # pull-based replication-lag gauges: evaluated at scrape time so
         # /metrics always reports the live ``head_seq - applied_seq``
@@ -275,6 +284,12 @@ class ReplicaRouter:
         }
         self._op_counter = itertools.count(1)
         self._rr = itertools.count()
+        # open tickets (for /debug/requests) + last chaos kill per
+        # replica (attributes retried requests to the kill that caused
+        # them — the §21 metrics→exemplar→trace→events chain)
+        self._open_lock = threading.Lock()
+        self._open: Dict[int, _Ticket] = {}
+        self._kills: Dict[int, int] = {}  # replica id -> chaos op index
         # degraded-mode stale-read cache: (algo, root) -> (value, seq)
         self._stale_lock = threading.Lock()
         self._stale_cache: "OrderedDict[Tuple, Tuple[Any, int]]" = (
@@ -387,6 +402,10 @@ class ReplicaRouter:
         with self._adm_lock:
             if self._inflight_total >= self.max_inflight:
                 self.telemetry.bump("shed")
+                self.events.emit(
+                    "admission", "reject", subsystem=self.telemetry.name,
+                    args={"reason": "overload", "tenant": tenant,
+                          "occupancy": self._inflight_total})
                 raise AdmissionError(
                     f"router overloaded ({self._inflight_total} in flight)",
                     occupancy=self._inflight_total,
@@ -399,6 +418,10 @@ class ReplicaRouter:
             used = self._inflight_tenant.get(tenant, 0)
             if quota is not None and used >= quota:
                 self.telemetry.bump("shed")
+                self.events.emit(
+                    "admission", "reject", subsystem=self.telemetry.name,
+                    args={"reason": "tenant_quota", "tenant": tenant,
+                          "occupancy": used})
                 raise AdmissionError(
                     f"tenant {tenant!r} over quota ({used}/{quota})",
                     occupancy=used,
@@ -467,6 +490,8 @@ class ReplicaRouter:
                     else "")
         ticket = _Ticket(algo, root, deadline_s, min_seq, tenant, now,
                          trace_id)
+        with self._open_lock:
+            self._open[id(ticket)] = ticket
         ticket.client.add_done_callback(self._finish(ticket))
         try:
             stall = None
@@ -479,6 +504,13 @@ class ReplicaRouter:
                             cat="chaos", trace_id=trace_id,
                             args={"victim": fault.victim, "op": op},
                         )
+                        self.events.emit(
+                            "chaos", "kill-replica",
+                            subsystem=self.telemetry.name,
+                            trace_id=trace_id,
+                            args={"victim": fault.victim, "op": op})
+                        with self._open_lock:
+                            self._kills[fault.victim] = op
                         self._kill(fault.victim)
                     elif fault.kind == "stall-wave":
                         self.tracer.instant(
@@ -487,6 +519,12 @@ class ReplicaRouter:
                             args={"victim": fault.victim, "op": op,
                                   "delay_s": fault.delay_s},
                         )
+                        self.events.emit(
+                            "chaos", "stall-wave",
+                            subsystem=self.telemetry.name,
+                            trace_id=trace_id,
+                            args={"victim": fault.victim, "op": op,
+                                  "delay_s": fault.delay_s})
                         stall = fault
             victim = (self.replicas[stall.victim]
                       if stall is not None else None)
@@ -528,6 +566,8 @@ class ReplicaRouter:
     def _finish(self, ticket: _Ticket):
         def cb(fut: Future) -> None:
             self._release(ticket.tenant)
+            with self._open_lock:
+                self._open.pop(id(ticket), None)
             if fut.cancelled():
                 return
             now = time.monotonic()
@@ -537,7 +577,8 @@ class ReplicaRouter:
             if exc is None:
                 res = fut.result()
                 self.telemetry.bump("completed")
-                self.telemetry.record_latency(now - ticket.submit_t)
+                self.telemetry.record_latency(now - ticket.submit_t,
+                                              trace_id=ticket.trace_id)
                 if not res.stale:
                     self._stale_put(ticket.algo, ticket.root,
                                     res.value, res.seq)
@@ -546,6 +587,11 @@ class ReplicaRouter:
             else:
                 self.telemetry.bump("failed")
                 args["error"] = type(exc).__name__
+            self.events.emit(
+                "request", "completed" if exc is None else "failed",
+                subsystem=self.telemetry.name, trace_id=ticket.trace_id,
+                args={**args,
+                      "latency_ms": round((now - ticket.submit_t) * 1e3, 3)})
             if self.tracer.enabled:
                 self.tracer.add_span(
                     f"route:{ticket.algo}", ticket.submit_t, now,
@@ -674,6 +720,26 @@ class ReplicaRouter:
                       "retry_to": other.id,
                       "error": type(exc).__name__},
             )
+            # attribute the retry to the chaos kill that caused it (if
+            # one did): the kill event lands in THIS request's event
+            # slice, which is what makes the SLO alert's exemplar trace
+            # navigate back to the fault
+            with self._open_lock:
+                kill_op = self._kills.get(replica.id)
+            if kill_op is not None and isinstance(
+                    exc, (ServiceStopped, ReplicaUnavailable)):
+                self.events.emit(
+                    "chaos", "kill-impact",
+                    subsystem=self.telemetry.name,
+                    trace_id=ticket.trace_id,
+                    args={"victim": replica.id, "op": kill_op,
+                          "error": type(exc).__name__})
+            self.events.emit(
+                "retry", "retry", subsystem=self.telemetry.name,
+                trace_id=ticket.trace_id,
+                args={"algo": ticket.algo, "root": ticket.root,
+                      "failed": replica.id, "retry_to": other.id,
+                      "error": type(exc).__name__})
             self._dispatch(ticket, other)
         else:
             self._serve_degraded(ticket, exc)
@@ -694,6 +760,12 @@ class ReplicaRouter:
                     trace_id=ticket.trace_id,
                     args={"root": ticket.root, "seq": seq},
                 )
+                self.events.emit(
+                    "retry", "stale-serve",
+                    subsystem=self.telemetry.name,
+                    trace_id=ticket.trace_id,
+                    args={"algo": ticket.algo, "root": ticket.root,
+                          "seq": seq})
             return
         resolve_future(ticket.client, exception=fallback)
 
@@ -704,6 +776,10 @@ class ReplicaRouter:
         fn(*args)
         if replica.state != before:
             self.telemetry.record_transition(replica.id, replica.state)
+            self.events.emit(
+                "replica", "state", subsystem=self.telemetry.name,
+                args={"replica": replica.id, "from": before,
+                      "to": replica.state})
 
     def _suspect(self, replica) -> None:
         self.telemetry.bump("suspect_marks")
@@ -776,6 +852,11 @@ class ReplicaRouter:
             args={"root": ticket.root, "slow": sorted(slow),
                   "hedge_to": other.id},
         )
+        self.events.emit(
+            "retry", "hedge", subsystem=self.telemetry.name,
+            trace_id=ticket.trace_id,
+            args={"algo": ticket.algo, "root": ticket.root,
+                  "slow": sorted(slow), "hedge_to": other.id})
         self._dispatch(ticket, other)
 
     # --- health + catch-up ------------------------------------------------
@@ -839,6 +920,9 @@ class ReplicaRouter:
                     applied += 1
         if applied:
             self.telemetry.bump("catch_up_batches", applied)
+            self.events.emit(
+                "repair", "catch-up", subsystem=self.telemetry.name,
+                args={"batches": applied, "head_seq": head})
             if self.tracer.enabled:
                 # recorded only when batches actually moved, so the
                 # heartbeat's idle sweeps never flood the trace
@@ -866,6 +950,23 @@ class ReplicaRouter:
             return self._stale_cache.get((algo, int(root)))
 
     # --- reporting --------------------------------------------------------
+
+    def debug_requests(self, recent: int = 50) -> Dict[str, Any]:
+        """In-flight tickets + the newest completed requests (from the
+        event log), each with its trace_id — ``/debug/requests``."""
+        now = time.monotonic()
+        with self._open_lock:
+            open_tickets = list(self._open.values())
+        inflight = [
+            {"algo": t.algo, "root": t.root, "tenant": t.tenant,
+             "trace_id": t.trace_id, "attempts": t.attempts,
+             "hedged": t.hedged, "age_ms": round((now - t.submit_t) * 1e3, 3)}
+            for t in open_tickets
+        ]
+        return {
+            "inflight": sorted(inflight, key=lambda d: -d["age_ms"]),
+            "recent": self.events.query(kind="request", limit=recent),
+        }
 
     def snapshot(self) -> Dict[str, Any]:
         """JSON-serializable router + per-replica + faults state."""

@@ -188,6 +188,12 @@ class WaveScheduler:
                 reqs = pending[cls]
                 if reqs and self._ready(cls, reqs, now):
                     pending[cls] = []
+                    svc.events.emit(
+                        "sched", "dispatch",
+                        subsystem=svc.telemetry.name,
+                        args={"cls": cls, "pending": len(reqs),
+                              "trigger": self._trigger_reason(
+                                  cls, reqs, now)})
                     try:
                         self._dispatch(cls, reqs)
                     except Exception as exc:  # engine failure: fail the
@@ -203,7 +209,19 @@ class WaveScheduler:
         now = time.monotonic()
         met = req.deadline_t is None or now <= req.deadline_t
         if resolve_future(req.future, result=payload):
-            self.service.telemetry.record_completed(now - req.submit_t, met)
+            self.service.telemetry.record_completed(
+                now - req.submit_t, met, trace_id=req.trace_id)
+
+    def _trigger_reason(self, cls: str, reqs: List[QueryRequest],
+                        now: float) -> str:
+        """Which §15 dispatch trigger released this wave (for the §21
+        scheduler-decision event): full width, linger expiry, or
+        deadline pressure."""
+        if len({r.root for r in reqs}) >= self.wave_width(cls):
+            return "full"
+        if now >= reqs[0].submit_t + self.max_linger_s:
+            return "linger"
+        return "deadline"
 
     def _dispatch(self, cls: str, reqs: List[QueryRequest]) -> None:
         svc = self.service
@@ -289,6 +307,15 @@ class WaveScheduler:
                                       for r in g][:8],
                     },
                 )
+            svc.events.emit(
+                "wave", cls, subsystem=svc.telemetry.name,
+                # one representative trace_id keeps the event slim; the
+                # wave span above carries the fuller list
+                trace_id=next((r.trace_id for g in by_root.values()
+                               for r in g if r.trace_id), ""),
+                args={"roots": len(roots), "engine_waves": engine_waves,
+                      "riders": n_riders,
+                      "duration_ms": round(dt_engine * 1e3, 3)})
             n_calls = max(1, (engine_waves if cls != "bfs"
                               else -(-len(roots) // self.wave_width(cls))))
             self._est[cls] = (

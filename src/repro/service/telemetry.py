@@ -185,9 +185,11 @@ def _service_families(reg: metrics_mod.MetricsRegistry):
         reg.counter("service_admission_rejects_total",
                     "admission-control rejections by structured reason",
                     ("service", "reason")),
+        # exemplars on (§21): the "total" stage's buckets retain recent
+        # trace_ids, so a p99 spike names a concrete request trace
         reg.histogram("service_latency_ms",
                       "end-to-end and per-stage request latency",
-                      ("service", "stage")),
+                      ("service", "stage"), exemplars=True),
         reg.histogram("service_wave_width",
                       "unique roots per dispatched engine wave",
                       ("service",), buckets=metrics_mod.WIDTH_BUCKETS),
@@ -244,9 +246,10 @@ class Telemetry:
     def record_failed(self) -> None:
         self._events["failed"].inc()
 
-    def record_completed(self, latency_s: float, deadline_met: bool) -> None:
+    def record_completed(self, latency_s: float, deadline_met: bool,
+                         trace_id: str = "") -> None:
         self._events["completed"].inc()
-        self._lat_hist["total"].observe(latency_s * 1e3)
+        self._lat_hist["total"].observe(latency_s * 1e3, trace_id=trace_id)
         with self._lock:
             self._latencies.add(latency_s)
         if not deadline_met:

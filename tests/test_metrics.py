@@ -20,6 +20,7 @@ Covers the observability tentpole's contracts:
 
 import json
 import threading
+import urllib.error
 import urllib.request
 
 import numpy as np
@@ -350,3 +351,174 @@ def test_registry_activity_leaves_staged_hlo_byte_identical(mesh8):
     after = bfs.build_bfs_fn(pg, mesh8, cfg, trace=False).lower(
         arrays, _np.int32(3)).as_text()
     assert before == after
+
+
+# ---------------------------------------------------------------------------
+# histogram exemplars (§21: the metrics -> trace pivot)
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_exemplars_per_bucket_including_overflow():
+    reg = MetricsRegistry()
+    h = reg.histogram("ex_ms", "x", buckets=(1.0, 10.0, 100.0),
+                      exemplars=True)
+    h.observe(0.5, trace_id="t-fast")
+    h.observe(5.0, trace_id="t-mid")
+    h.observe(5000.0, trace_id="t-slow")   # +Inf overflow slot
+    h.observe(7.0)                         # untraced: slot keeps t-mid
+    slots = h.labels().exemplars()
+    assert len(slots) == 4  # 3 bounds + overflow
+    assert slots[0]["trace_id"] == "t-fast"
+    assert slots[1]["trace_id"] == "t-mid" and slots[1]["value"] == 5.0
+    assert slots[2] is None
+    assert slots[3]["trace_id"] == "t-slow"
+    # raw distribution is untouched by exemplar retention
+    v = h.labels().value
+    assert v["count"] == 4 and v["buckets"] == [1, 2, 0]
+
+
+def test_exemplar_near_quantile_walks_down_to_populated_bucket():
+    reg = MetricsRegistry()
+    h = reg.histogram("ex_ms", "x", buckets=(1.0, 10.0, 100.0),
+                      exemplars=True)
+    h.observe(0.5, trace_id="t-fast")
+    for _ in range(99):
+        h.observe(50.0)  # p99 bucket, but never traced
+    ex = h.labels().exemplar_near_quantile(0.99)
+    assert ex["trace_id"] == "t-fast"  # walked down from the p99 bucket
+    assert ex["bucket_le"] == 1.0
+    h.observe(50.0, trace_id="t-slow")
+    ex = h.labels().exemplar_near_quantile(0.99)
+    assert ex["trace_id"] == "t-slow" and ex["bucket_le"] == 100.0
+
+
+def test_exemplars_off_by_default_and_fixed_at_registration():
+    reg = MetricsRegistry()
+    h = reg.histogram("plain_ms", "x", buckets=(1.0, 10.0))
+    h.observe(0.5, trace_id="ignored")
+    assert h.labels().exemplars() is None
+    assert h.labels().exemplar_near_quantile(0.5) is None
+    # register-or-get: the first registration fixes the exemplar setting
+    ex = reg.histogram("ex_ms", "x", buckets=(1.0, 10.0), exemplars=True)
+    again = reg.histogram("ex_ms", "x", buckets=(1.0, 10.0))
+    assert again is ex and again.exemplars_enabled
+
+
+def test_exemplars_in_snapshot_not_in_exposition():
+    reg = MetricsRegistry()
+    h = reg.histogram("ex_ms", "x", buckets=(1.0,), exemplars=True)
+    h.observe(0.5, trace_id="t-1")
+    text = reg.expose_text()
+    assert "t-1" not in text  # exposition format stays standard
+    parse_exposition(text)
+    (row,) = [r for r in reg.snapshot() if r["name"] == "ex_ms"]
+    slots = row["value"]["exemplars"]
+    assert slots[0]["trace_id"] == "t-1"
+
+
+def test_hammer_exact_totals_with_exemplars_enabled():
+    """The §20 contention contract survives exemplar retention: totals
+    stay exact and every retained slot is a really-observed sample."""
+    reg = MetricsRegistry()
+    h = reg.histogram("ex_ms", "x", ("lane",), buckets=(10.0, 100.0),
+                      exemplars=True)
+    n_threads, n_iter = 8, 2000
+    start = threading.Barrier(n_threads)
+
+    def worker(tid):
+        start.wait()
+        for i in range(n_iter):
+            h.observe(float(i % 150), trace_id=f"t{tid}-{i}", lane="l0")
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    v = h.labels(lane="l0").value
+    assert v["count"] == n_threads * n_iter
+    assert v["sum"] == pytest.approx(
+        n_threads * sum(i % 150 for i in range(n_iter)))
+    for slot in h.labels(lane="l0").exemplars():
+        assert slot is not None and slot["trace_id"].startswith("t")
+
+
+def test_exemplar_enabled_family_leaves_staged_hlo_byte_identical(mesh8):
+    """Same §20 invariant as the registry test above, with the §21
+    exemplar write path active during engine traffic."""
+    import numpy as _np
+
+    from repro.analytics.engine import BFSQueryEngine
+    from repro.core import bfs
+    from repro.graph import generators, partition
+
+    g = generators.kronecker(9, 8, seed=3)
+    pg = partition.partition_1d(g, 8)
+    cfg = bfs.BFSConfig(axes=("data",), sync="adaptive", fanout=4)
+    arrays = bfs.place_arrays(pg, mesh8, cfg.axes)
+    before = bfs.build_bfs_fn(pg, mesh8, cfg, trace=False).lower(
+        arrays, _np.int32(3)).as_text()
+
+    h = metrics.default_registry().histogram(
+        "exemplar_probe_ms", "probe", buckets=(1.0, 10.0), exemplars=True)
+    eng = BFSQueryEngine(pg, mesh8, cfg, lanes=8)
+    eng.query([1, 2, 3])
+    h.observe(2.5, trace_id="probe-trace")
+    try:
+        after = bfs.build_bfs_fn(pg, mesh8, cfg, trace=False).lower(
+            arrays, _np.int32(3)).as_text()
+    finally:
+        metrics.default_registry().unregister("exemplar_probe_ms")
+    assert before == after
+
+
+# ---------------------------------------------------------------------------
+# MetricsServer hardening (§21 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_server_ephemeral_port_and_lifecycle_idempotence():
+    server = MetricsServer(MetricsRegistry(), port=0)
+    try:
+        server.start()
+        port = server.port
+        assert port != 0
+        assert server.start() is server  # second start: no rebind
+        assert server.port == port
+    finally:
+        server.stop()
+    server.stop()  # double-stop is a no-op, not an error
+    assert server._httpd is None and server._thread is None
+
+
+def test_server_unknown_path_404_and_route_error_is_json_500():
+    server = MetricsServer(MetricsRegistry(), port=0).start()
+    try:
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(f"{server.url}/nope", timeout=5)
+        assert exc.value.code == 404
+
+        server.add_route("/explode", lambda q: [][1])
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(f"{server.url}/explode", timeout=5)
+        assert exc.value.code == 500
+        body = json.loads(exc.value.read())
+        assert "IndexError" in body["error"]
+        assert b"Traceback" not in exc.value.headers.as_bytes()
+
+        with pytest.raises(ValueError):
+            server.add_route("no-leading-slash", lambda q: {})
+    finally:
+        server.stop()
+
+
+def test_server_routes_added_after_start_are_live():
+    server = MetricsServer(MetricsRegistry(), port=0).start()
+    try:
+        server.add_route("/late", lambda q: {"hello": q.get("n", ["0"])[0]})
+        with urllib.request.urlopen(f"{server.url}/late?n=42",
+                                    timeout=5) as r:
+            assert json.loads(r.read()) == {"hello": "42"}
+    finally:
+        server.stop()

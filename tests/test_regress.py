@@ -193,3 +193,114 @@ def test_committed_baseline_matches_committed_bench():
     verdict = regress.compare(bench, base)
     assert verdict["ok"], verdict["failures"]
     assert verdict["compared"] > 50  # the committed tree is well-covered
+
+
+# ---------------------------------------------------------------------------
+# --update-baseline: the provenance-gated refresh (§21 satellite)
+# ---------------------------------------------------------------------------
+
+
+def _stamped_bench(host_cpus=8, git_dirty=False, ms=8.0):
+    return {
+        "teps_per_sync": {
+            "kron12/butterfly": {
+                "mteps": 120.0, "ms": ms,
+                "meta": {"host_cpus": host_cpus, "git_dirty": git_dirty,
+                         "git_sha": "abc1234",
+                         "timestamp": "2026-08-08T00:00:00"}},
+        },
+    }
+
+
+def _write(tmp_path, name, doc):
+    path = str(tmp_path / name)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return path
+
+
+def test_update_baseline_appends_history_and_keeps_min_of_k(tmp_path):
+    baseline = str(tmp_path / "baseline.json")
+    bench = _write(tmp_path, "bench.json", _stamped_bench(ms=8.0))
+    assert regress.main(["--bench", bench, "--baseline", baseline,
+                         "--update-baseline"]) == 0
+    bench2 = _write(tmp_path, "bench2.json", _stamped_bench(ms=9.0))
+    assert regress.main(["--bench", bench2, "--baseline", baseline,
+                         "--update-baseline"]) == 0
+    with open(baseline) as f:
+        doc = json.load(f)
+    assert doc["schema"] == regress.BASELINE_SCHEMA
+    assert doc["rows"]["teps_per_sync/kron12/butterfly/ms"] == [8.0, 9.0]
+    # the min-of-k reference still compares against the historic BEST
+    # (8ms), so 9ms stays clean while 17ms blows the 2x hard gate
+    assert regress.compare(_stamped_bench(ms=9.0), doc)["ok"]
+    v2 = regress.compare(_stamped_bench(ms=17.0), doc,
+                         hard_threshold=2.0)
+    assert any(f["key"].endswith("/ms") for f in v2["failures"])
+
+
+def test_update_baseline_refuses_missing_provenance(tmp_path, capsys):
+    baseline = str(tmp_path / "baseline.json")
+    naked = {"teps_per_sync": {"row": {"ms": 8.0, "meta": {
+        "timestamp": "2026-08-08T00:00:00"}}}}
+    bench = _write(tmp_path, "bench.json", naked)
+    assert regress.main(["--bench", bench, "--baseline", baseline,
+                         "--update-baseline"]) == 2
+    err = capsys.readouterr().err
+    assert "host_cpus" in err and "git_dirty" in err
+    assert not os.path.exists(baseline)  # refusal leaves nothing behind
+
+    # git_dirty=None (git unavailable when the rows were emitted) also
+    # fails the gate: None means "unknown", not "clean"
+    half = _stamped_bench()
+    half["teps_per_sync"]["kron12/butterfly"]["meta"]["git_dirty"] = None
+    bench = _write(tmp_path, "bench2.json", half)
+    assert regress.main(["--bench", bench, "--baseline", baseline,
+                         "--update-baseline"]) == 2
+    assert not os.path.exists(baseline)
+
+
+def test_update_baseline_refuses_host_shape_change(tmp_path, capsys):
+    baseline = str(tmp_path / "baseline.json")
+    bench8 = _write(tmp_path, "b8.json", _stamped_bench(host_cpus=8))
+    assert regress.main(["--bench", bench8, "--baseline", baseline,
+                         "--update-baseline"]) == 0
+    before = open(baseline).read()
+
+    bench16 = _write(tmp_path, "b16.json",
+                     _stamped_bench(host_cpus=16, ms=4.0))
+    assert regress.main(["--bench", bench16, "--baseline", baseline,
+                         "--update-baseline"]) == 2
+    assert "host_cpus" in capsys.readouterr().err
+    assert open(baseline).read() == before  # baseline untouched
+
+    # --ignore-env forces the cross-host append
+    assert regress.main(["--bench", bench16, "--baseline", baseline,
+                         "--update-baseline", "--ignore-env"]) == 0
+    with open(baseline) as f:
+        doc = json.load(f)
+    assert doc["rows"]["teps_per_sync/kron12/butterfly/ms"] == [8.0, 4.0]
+
+
+def test_update_baseline_notes_dirty_tree_but_proceeds(tmp_path, capsys):
+    baseline = str(tmp_path / "baseline.json")
+    bench = _write(tmp_path, "bench.json",
+                   _stamped_bench(git_dirty=True))
+    assert regress.main(["--bench", bench, "--baseline", baseline,
+                         "--update-baseline"]) == 0
+    captured = capsys.readouterr()
+    assert "dirty tree" in captured.err
+    assert "baseline updated" in captured.out
+    assert os.path.exists(baseline)
+
+
+def test_run_meta_stamps_git_dirty_flag():
+    """benchmarks.common.run_meta must stamp the dirty-tree flag the
+    update gate keys on (bool in a git checkout, None only when git
+    itself is unavailable)."""
+    from benchmarks.common import run_meta
+
+    meta = run_meta()
+    assert "git_dirty" in meta
+    assert meta["git_dirty"] is None or isinstance(meta["git_dirty"], bool)
+    assert "host_cpus" in meta and meta["host_cpus"] == os.cpu_count()

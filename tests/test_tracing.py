@@ -271,3 +271,181 @@ def test_stage_block_is_json_serializable():
     tm = Telemetry()
     tm.record_stage("engine", 0.005)
     json.dumps(tm.snapshot())
+
+
+# ---------------------------------------------------------------------------
+# span ids (§21: the span <-> event join key)
+# ---------------------------------------------------------------------------
+
+
+def test_every_event_gets_a_unique_8hex_span_id():
+    tr = Tracer(clock=lambda: 0.0)
+    tr.add_span("a", 0.0, 0.1)
+    tr.instant("b")
+    with tr.span("c"):
+        pass
+    ids = [ev["span_id"] for ev in tr.events()]
+    assert len(set(ids)) == 3
+    for sid in ids:
+        assert len(sid) == 8
+        int(sid, 16)  # hex or raises
+
+
+def test_span_ids_fold_into_chrome_args():
+    tr = Tracer(clock=lambda: 0.0)
+    tr.instant("hedge", trace_id="abc")
+    tr.add_span("untraced", 0.0, 0.1)  # span_id even without a trace_id
+    recs = [r for r in tr.to_chrome()["traceEvents"] if r["ph"] != "M"]
+    assert recs[0]["args"]["trace_id"] == "abc"
+    assert recs[0]["args"]["span_id"] == "00000001"
+    assert "trace_id" not in recs[1]["args"]
+    assert recs[1]["args"]["span_id"] == "00000002"
+
+
+def test_span_id_allocation_is_thread_safe():
+    tr = Tracer(clock=lambda: 0.0)
+    n_threads, n_iter = 8, 250
+    barrier = threading.Barrier(n_threads)
+
+    def worker():
+        barrier.wait()
+        for _ in range(n_iter):
+            tr.instant("x")
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ids = [ev["span_id"] for ev in tr.events()]
+    assert len(ids) == len(set(ids)) == n_threads * n_iter
+
+
+# ---------------------------------------------------------------------------
+# trace-id propagation across the router's hedged-retry path (§21 satellite)
+# ---------------------------------------------------------------------------
+
+
+class _HedgeStub:
+    """Replica stand-in that accepts the traced ``submit`` call shape and
+    resolves after ``delay_s`` — slow enough to trip the hedge monitor."""
+
+    class _G:
+        n = 64
+
+    def __init__(self, replica_id, delay_s=0.0):
+        from repro.service.replica import HEALTHY
+
+        self.id = replica_id
+        self.base_graph = self._G()
+        self.state = HEALTHY
+        self.strikes = 0
+        self.suspect_until = 0.0
+        self.applied_seq = 0
+        self.kills = 0
+        self.recoveries = 0
+        self.delay_s = delay_s
+        self.seen_trace_ids = []
+
+    @property
+    def serving(self):
+        from repro.service.replica import DEAD
+
+        return self.state != DEAD
+
+    @property
+    def version(self):
+        return "0.0"
+
+    def submit(self, algo, root, deadline_s=None, *, trace_id=""):
+        from concurrent.futures import Future
+
+        self.seen_trace_ids.append(trace_id)
+        f = Future()
+        if self.delay_s:
+            t = threading.Timer(self.delay_s, f.set_result,
+                                args=((self.id, int(root)),))
+            t.daemon = True
+            t.start()
+        else:
+            f.set_result((self.id, int(root)))
+        return f
+
+    def heartbeat(self):
+        return self.serving
+
+    def mark_suspect(self, backoff_s, now):
+        from repro.service.replica import HEALTHY, SUSPECT
+
+        if self.state == HEALTHY:
+            self.state = SUSPECT
+        self.strikes += 1
+        self.suspect_until = now + backoff_s
+
+    def mark_healthy(self):
+        from repro.service.replica import HEALTHY
+
+        self.state = HEALTHY
+        self.strikes = 0
+
+    def mark_dead(self):
+        from repro.service.replica import DEAD
+
+        self.state = DEAD
+
+    def stop(self, join=True):
+        pass
+
+
+def test_hedged_retry_shares_trace_id_with_distinct_span_ids():
+    """The §18/§21 contract the ops console navigates by: a hedged
+    request is ONE trace — the slow original attempt, the hedge
+    decision, and the winning attempt all carry the ticket's trace_id —
+    while per-event span_ids keep the two attempts distinguishable."""
+    import time
+
+    from repro.core.events import EventLog
+    from repro.service.router import ReplicaRouter
+
+    slow = _HedgeStub(0, delay_s=0.6)   # primary: answers after the hedge
+    fast = _HedgeStub(1)
+    tracer = Tracer()
+    log = EventLog()
+    router = ReplicaRouter(
+        [slow, fast], timeout_s=0.1, hard_timeout_factor=100.0,
+        heartbeat_interval_s=None, suspect_backoff_s=0.05,
+        tracer=tracer, events=log,
+    )
+    try:
+        res = router.query("bfs", 5, timeout=10.0)
+        assert res.hedged and res.replica == 1
+        # the slow primary resolves too; wait for its attempt span
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            if sum(1 for ev in tracer.events()
+                   if ev["name"] == "attempt:bfs") == 2:
+                break
+            time.sleep(0.01)
+    finally:
+        router.stop()
+
+    # both replicas saw the SAME trace_id on the wire
+    assert slow.seen_trace_ids == fast.seen_trace_ids
+    tid = fast.seen_trace_ids[0]
+    assert len(tid) == 16
+
+    evs = tracer.events()
+    attempts = [ev for ev in evs if ev["name"] == "attempt:bfs"]
+    (hedge,) = [ev for ev in evs if ev["name"] == "hedge:bfs"]
+    (route,) = [ev for ev in evs if ev["name"] == "route:bfs"]
+    assert len(attempts) == 2
+    assert {ev["trace_id"] for ev in attempts} == {tid}
+    assert hedge["trace_id"] == tid and route["trace_id"] == tid
+    assert attempts[0]["track"] != attempts[1]["track"]  # per-replica rows
+    span_ids = {ev["span_id"] for ev in attempts} | {hedge["span_id"]}
+    assert len(span_ids) == 3  # same trace, distinguishable events
+
+    # the event-log side of the same story carries the same key
+    (hedge_ev,) = log.query(kind="retry", trace_id=tid)
+    assert hedge_ev["name"] == "hedge"
+    assert hedge_ev["args"]["hedge_to"] == 1
